@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and
+prints the per-cell three-term roofline, dominant bottleneck, and
+useful-FLOPs ratio. No devices are touched — safe inside benchmarks.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag and "roofline" in r:
+            out.append(r)
+    return out
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        print("roofline/no_artifacts,0,run repro.launch.dryrun first")
+        return
+    for r in sorted(cells, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rf = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(name, rf["bound_s"] * 1e6,
+             f"dom={rf['dominant'].replace('_s','')} "
+             f"comp={rf['compute_s']*1e3:.1f}ms "
+             f"mem={rf['memory_s']*1e3:.1f}ms "
+             f"coll={rf['collective_s']*1e3:.1f}ms "
+             f"compute_frac={rf['compute_fraction']:.2f} "
+             f"useful_flops={r['useful_flops_ratio']:.2f} "
+             f"peak_GiB={r['memory']['peak_bytes']/2**30:.1f} "
+             f"fits={r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

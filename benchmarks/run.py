@@ -1,0 +1,39 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig4 fig7  # subset
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:])
+
+    def want(name: str) -> bool:
+        return not which or name in which
+
+    print("name,us_per_call,derived")
+    if want("fig4"):
+        from benchmarks import fig4_simd
+
+        fig4_simd.main()
+    if want("fig7"):
+        from benchmarks import fig7_scalability
+
+        fig7_scalability.main()
+    if want("fig1"):
+        from benchmarks import fig1_trajectories
+
+        fig1_trajectories.main()
+    if want("roofline"):
+        from benchmarks import roofline
+
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 1: gene regulation in E. coli — 100 instances, mean +
+90% CI at fixed simulation time steps, computed with the on-line
+pipelined reduction (schema iii).
+
+  PYTHONPATH=src python examples/ecoli_gene_regulation.py
+Writes artifacts/ecoli_fig1.csv (t, mean, var, ci90 per observable).
+"""
+import os
+
+from repro.core.cwc.models import ecoli_gene_regulation
+from repro.core.engine import SimConfig, SimulationEngine
+from repro.core.stream import csv_sink
+
+OUT = "artifacts/ecoli_fig1.csv"
+os.makedirs("artifacts", exist_ok=True)
+
+engine = SimulationEngine(
+    ecoli_gene_regulation(),
+    SimConfig(n_instances=100, t_end=100.0, n_windows=100, n_lanes=100,
+              schema="iii", seed=0),
+)
+engine.stream.attach(csv_sink(OUT, engine.obs_names))
+records = engine.run()
+
+# a terminal sparkline of the protein trajectory with its CI band
+prot = engine.obs_names.index("ecoli/protein")
+peak = max(r.mean[prot] for r in records) or 1.0
+print("t      protein (mean ± ci90)")
+for r in records[::5]:
+    bar = "#" * int(40 * r.mean[prot] / peak)
+    print(f"{r.t:6.1f} {r.mean[prot]:8.1f} ±{r.ci90[prot]:6.2f}  {bar}")
+print(f"\nfull statistics streamed to {OUT}")

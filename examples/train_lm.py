@@ -1,0 +1,35 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+Trains a ~20M-param llama-family model for a few hundred steps on CPU
+(the same `train_loop` drives pods — only the mesh differs), crash-safe:
+re-running the script resumes from the last checkpoint.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.llama3_8b import smoke
+from repro.launch.train import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+# a ~20M "llama3 family" model: same block structure, scaled dims
+cfg = dataclasses.replace(
+    smoke(), name="llama3-20m", n_layers=4, d_model=256, n_heads=8,
+    n_kv_heads=4, d_ff=1024, vocab_size=4096)
+
+import repro.configs.registry as registry
+
+registry._MODULES["llama3-20m"] = type(
+    "M", (), {"CONFIG": cfg, "smoke": staticmethod(lambda: cfg)})
+
+state, losses = train_loop(
+    "llama3-20m", smoke=True, steps=args.steps, batch=8, seq=128,
+    ckpt_dir=args.ckpt_dir, ckpt_every=50, resume=True, lr=3e-4)
+
+print(f"\nfinal loss {losses[-1]:.4f} (started {losses[0]:.4f}); "
+      f"checkpoints in {args.ckpt_dir}")

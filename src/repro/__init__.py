@@ -1,0 +1,11 @@
+"""repro — multicore-aware stochastic simulation of biological systems,
+TPU-pod native.
+
+Reproduction + extension of Aldinucci et al. 2010 (CWC + FastFlow
+parallelisation schemas) as a production JAX framework. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"
+__paper__ = ("On Designing Multicore-aware Simulators for Biological "
+             "Systems (Aldinucci, Coppo, Damiani, Drocco, Torquati, "
+             "Troina; 2010 / Euromicro PDP 2011)")

@@ -1,0 +1,1 @@
+"""Checkpointing: atomic sharded store, async writer, elastic restore."""

@@ -1,0 +1,1 @@
+"""Config package: architecture, shape, mesh, hardware and run configs."""

@@ -1,0 +1,59 @@
+"""Jamba-v0.1 (52B total / 12B active) — Mamba + attention 1:7 interleave
+with 16-expert top-2 MoE every other layer [arXiv:2403.19887].
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab 65536.
+Layer pattern (period 8): attention at offset 4, Mamba elsewhere;
+MoE FFN on odd layers, dense FFN on even layers. No RoPE (Mamba carries
+position). Hybrid -> runs long_500k (small KV: 4 attention layers).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    moe_d_ff=14336,
+    vocab_size=65536,
+    n_experts=16,
+    n_experts_per_token=2,
+    moe_layer_period=2,
+    moe_layer_offset=1,
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    mamba_d_state=16,
+    mamba_d_conv=4,
+    mamba_expand=2,
+    use_rope=False,
+    mlp_variant="swiglu",
+    norm="rmsnorm",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b-smoke",
+        family="hybrid",
+        n_layers=8,  # one full period: 7 mamba + 1 attn, alternating MoE
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        moe_d_ff=128,
+        vocab_size=512,
+        n_experts=4,
+        n_experts_per_token=2,
+        moe_layer_period=2,
+        moe_layer_offset=1,
+        attn_layer_period=8,
+        attn_layer_offset=4,
+        mamba_d_state=8,
+        mamba_d_conv=4,
+        mamba_expand=2,
+        use_rope=False,
+        chunk_size=16,
+        dtype="float32",
+    )

@@ -1,0 +1,50 @@
+"""SeamlessM4T-large-v2 — encoder-decoder multimodal backbone
+[arXiv:2308.11596].
+
+Backbone only (per instructions): 24L encoder + 24L decoder, d_model=1024,
+16H (kv=16), d_ff=8192, vocab 256206. The speech frontend is a STUB —
+`input_specs()` provides precomputed frame embeddings for the encoder.
+
+Deviation note: the release's speech encoder is a conformer with relative
+position; the backbone here uses RoPE in self-attention as the positional
+mechanism (recorded in DESIGN.md hardware/fidelity notes).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,  # decoder layers
+    n_encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    mlp_variant="gelu",
+    mlp_bias=True,
+    norm="layernorm",
+    frontend="audio",
+    frontend_tokens=0,  # encoder input is entirely frame embeddings
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2-smoke",
+        family="audio",
+        n_layers=2,
+        n_encoder_layers=2,
+        is_encoder_decoder=True,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=512,
+        mlp_variant="gelu",
+        mlp_bias=True,
+        norm="layernorm",
+        frontend="audio",
+        dtype="float32",
+    )

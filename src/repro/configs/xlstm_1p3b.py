@@ -1,0 +1,43 @@
+"""xLSTM-1.3B — sLSTM + mLSTM blocks (xLSTM[7:1]) [arXiv:2405.04517].
+
+48 blocks, d_model=2048, 4 heads, no separate FFN (d_ff=0; the up/down
+projection lives inside the block), vocab 50304. One sLSTM block per 8
+(positions 7, 15, ...); the rest are chunkwise-parallel mLSTM blocks.
+Recurrent state replaces the KV cache -> runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    use_rope=False,  # xLSTM has no positional embedding (recurrence carries order)
+    slstm_every=8,
+    slstm_offset=7,
+    xlstm_expand=2,
+    chunk_size=256,
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b-smoke",
+        family="ssm",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab_size=512,
+        use_rope=False,
+        slstm_every=4,
+        slstm_offset=3,
+        xlstm_expand=2,
+        chunk_size=16,
+        dtype="float32",
+    )

@@ -1,0 +1,3 @@
+# The paper's primary contribution: multicore-aware stochastic
+# simulation of biological systems (CWC + Gillespie), adapted to TPU
+# pods. See DESIGN.md §2 for the hardware-adaptation mapping.

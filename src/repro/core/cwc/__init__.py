@@ -1,0 +1,1 @@
+"""Calculus of Wrapped Compartments: terms, rules, compiler, reference."""

@@ -1,0 +1,126 @@
+"""CWC → ReactionSystem compiler (the compile-time tree matching).
+
+The paper's Match phase walks the subject tree per step (§2.3, the
+non-SIMD part, Fig. 3). For static compartment topologies we hoist that
+walk to compile time: every compartment instance in the initial term is
+enumerated once; each (rule, matching compartment instance) pair
+becomes one dense reaction. The run-time Match is then the propensity
+matrix — fully vectorised (DESIGN.md §2/§6).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from repro.core.cwc.rules import CWCModel, Rule, TransportRule
+from repro.core.cwc.terms import TOP, Term
+from repro.core.reactions import MAX_REACTANTS, ReactionSystem, make_system
+
+
+def compile_model(model: CWCModel) -> tuple[ReactionSystem, dict]:
+    """Returns (system, meta). meta maps species index -> (path, atom)
+    and lists per-observable species indices."""
+    t0 = model.initial_term()
+
+    # 1. enumerate compartment contexts (path () = top level)
+    contexts: list[tuple, str] = []  # (path, label)
+    content_by_path: dict = {}
+    for path, label, content in t0.walk():
+        if label is None:
+            # nested compartment label — recover from the object
+            node = t0
+            for i in path[:-1]:
+                node = node.compartments[i].content
+            label = node.compartments[path[-1]].label
+        contexts.append((path, label))
+        content_by_path[path] = content
+
+    # 2. alphabet per context: atoms in the initial content + any atom
+    #    mentioned by a rule applicable to the context's label
+    alphabet: dict = {}
+    for path, label in contexts:
+        names = set(content_by_path[path].atoms)
+        for r in model.rules:
+            if isinstance(r, Rule) and r.label == label:
+                names |= {a for a, _ in r.lhs} | {a for a, _ in r.rhs}
+            if isinstance(r, TransportRule):
+                if r.label == label:
+                    names.add(r.atom)
+                if r.child_label == label:
+                    names.add(r.atom)
+        alphabet[path] = sorted(names)
+
+    species = []
+    sidx = {}
+    for path, label in contexts:
+        for a in alphabet[path]:
+            sidx[(path, a)] = len(species)
+            species.append(f"{_path_str(path, label)}/{a}")
+
+    # 3. instantiate reactions
+    reactions = []
+    names = []
+    for path, label in contexts:
+        for r in model.rules:
+            if isinstance(r, Rule) and r.label == label:
+                lhs = {_species_name(path, label, a): c for a, c in r.lhs}
+                rhs = {_species_name(path, label, a): c for a, c in r.rhs}
+                reactions.append((lhs, rhs, r.k))
+                names.append(f"{r.name}@{_path_str(path, label)}")
+            elif isinstance(r, TransportRule) and r.label == label:
+                # one reaction per child instance with the right label
+                for i, compi in enumerate(content_by_path[path].compartments):
+                    if compi.label != r.child_label:
+                        continue
+                    child_path = path + (i,)
+                    parent_sp = _species_name(path, label, r.atom)
+                    child_sp = _species_name(child_path, compi.label, r.atom)
+                    if r.direction == "in":
+                        lhs, rhs = {parent_sp: 1}, {child_sp: 1}
+                    else:
+                        lhs, rhs = {child_sp: 1}, {parent_sp: 1}
+                    reactions.append((lhs, rhs, r.k))
+                    names.append(
+                        f"{r.name or 'transport'}@{_path_str(path, label)}"
+                        f"->{i}")
+
+    # 4. initial state
+    x0 = {}
+    for path, label in contexts:
+        for a, c in content_by_path[path].atoms.items():
+            x0[_species_name(path, label, a)] = c
+
+    # remap reactions/x0 keys to canonical species list order
+    sys = make_system(species, _remap(reactions, species, contexts, alphabet),
+                      x0, names)
+
+    obs_idx = {}
+    for obs in model.observables:
+        path_label, atom = obs
+        for (path, label) in contexts:
+            if _path_str(path, label) == path_label or label == path_label:
+                key = f"{_path_str(path, label)}/{atom}"
+                if key in species:
+                    obs_idx.setdefault(f"{path_label}/{atom}", []).append(
+                        species.index(key))
+    meta = {"species": species, "observables": obs_idx}
+    return sys, meta
+
+
+def _key(path, a):
+    return (path, a)
+
+
+def _path_str(path, label) -> str:
+    return (label if not path else
+            f"{label}[{'.'.join(map(str, path))}]")
+
+
+def _species_name(path, label, atom) -> str:
+    return f"{_path_str(path, label)}/{atom}"
+
+
+def _remap(reactions, species, contexts, alphabet):
+    # reactions already use species-name keys
+    return reactions

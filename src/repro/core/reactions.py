@@ -1,0 +1,152 @@
+"""Tensorised reaction systems.
+
+A `ReactionSystem` is the compile-time residue of a CWC model (see
+`core/cwc/compile.py`): every (rewrite rule × compartment instance) pair
+becomes one reaction over a flat species vector. The run-time engine
+only ever sees dense tensors — this is the structure-of-arrays layout
+that makes the whole Gillespie step SIMD across instances (DESIGN.md §2).
+
+Propensities follow the paper's combination counting: for a reactant
+with multiplicity c and population n the factor is C(n, c) (number of
+distinct combinations), times the kinetic constant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from math import comb
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_REACTANTS = 4  # max distinct species on a rule LHS (CWC rules are small)
+
+
+@dataclass(frozen=True)
+class ReactionSystem:
+    """S species, R reactions.
+
+    reactant_idx:  (R, MAX_REACTANTS) int32 — species index, S = padding
+    reactant_coef: (R, MAX_REACTANTS) int32 — multiplicity, 0 = padding
+    delta:         (R, S) int32 — product-minus-reactant stoichiometry
+    rates:         (R,) float32 — kinetic constants
+    species_names / reaction_names: labels for reporting
+    x0:            (S,) initial state
+    """
+
+    reactant_idx: np.ndarray
+    reactant_coef: np.ndarray
+    delta: np.ndarray
+    rates: np.ndarray
+    x0: np.ndarray
+    species_names: tuple[str, ...]
+    reaction_names: tuple[str, ...]
+
+    @property
+    def n_species(self) -> int:
+        return self.delta.shape[1]
+
+    @property
+    def n_reactions(self) -> int:
+        return self.delta.shape[0]
+
+    def with_rates(self, rates) -> "ReactionSystem":
+        import dataclasses
+
+        return dataclasses.replace(
+            self, rates=np.asarray(rates, np.float32))
+
+    def validate(self) -> None:
+        r, s = self.n_reactions, self.n_species
+        assert self.reactant_idx.shape == (r, MAX_REACTANTS)
+        assert self.reactant_coef.shape == (r, MAX_REACTANTS)
+        assert self.rates.shape == (r,)
+        assert self.x0.shape == (s,)
+        assert (self.reactant_idx <= s).all()
+        # delta must be consistent with reactants (no negative-below-LHS)
+        lhs = np.zeros((r, s), np.int64)
+        for j in range(r):
+            for i, c in zip(self.reactant_idx[j], self.reactant_coef[j]):
+                if c > 0:
+                    lhs[j, i] += c
+        assert ((lhs + self.delta) >= 0).all(), "products went negative"
+
+
+def make_system(species: Sequence[str],
+                reactions: Sequence[tuple[dict, dict, float]],
+                x0: dict,
+                names: Optional[Sequence[str]] = None) -> ReactionSystem:
+    """reactions: list of (reactants {name: coef}, products {name: coef}, k)."""
+    sidx = {s: i for i, s in enumerate(species)}
+    r = len(reactions)
+    s = len(species)
+    idx = np.full((r, MAX_REACTANTS), s, np.int32)
+    coef = np.zeros((r, MAX_REACTANTS), np.int32)
+    delta = np.zeros((r, s), np.int32)
+    rates = np.zeros((r,), np.float32)
+    for j, (lhs, rhs, k) in enumerate(reactions):
+        assert len(lhs) <= MAX_REACTANTS, f"rule {j} has too many reactants"
+        for m, (name, c) in enumerate(sorted(lhs.items())):
+            idx[j, m] = sidx[name]
+            coef[j, m] = c
+            delta[j, sidx[name]] -= c
+        for name, c in rhs.items():
+            delta[j, sidx[name]] += c
+        rates[j] = k
+    x0_arr = np.zeros((s,), np.float32)
+    for name, v in x0.items():
+        x0_arr[sidx[name]] = v
+    sys = ReactionSystem(
+        reactant_idx=idx, reactant_coef=coef, delta=delta, rates=rates,
+        x0=x0_arr, species_names=tuple(species),
+        reaction_names=tuple(names) if names else tuple(
+            f"r{j}" for j in range(r)))
+    sys.validate()
+    return sys
+
+
+def _comb_table(max_coef: int = 8):
+    """C(n, c) via falling factorial / c! — differentiable-free, exact for
+    counts < 2^24 in fp32."""
+    return None  # computed inline; kept for documentation
+
+
+def propensities(x, sys_idx, sys_coef, rates):
+    """Batched mass-action propensities.
+
+    x: (B, S) float32 counts; sys_idx (R, M); sys_coef (R, M);
+    rates (R,) or (B, R) for per-instance parameter sweeps.
+    Returns (B, R) float32.
+    """
+    b, s = x.shape
+    xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)  # pad slot
+    pops = xp[:, sys_idx]  # (B, R, M)
+    coef = sys_coef[None, :, :]  # (1, R, M)
+    # C(n, c) = prod_{i=0..c-1} (n - i) / c!   (c <= MAX_COEF, unrolled)
+    max_c = 4
+    ff = jnp.ones_like(pops)
+    fact = jnp.ones_like(pops)
+    for i in range(max_c):
+        active = coef > i
+        ff = jnp.where(active, ff * jnp.maximum(pops - i, 0.0), ff)
+        fact = jnp.where(active, fact * (i + 1), fact)
+    terms = ff / fact
+    a = jnp.prod(terms, axis=2) * rates  # rates broadcasts (R,) or (B,R)
+    return a
+
+
+def propensities_ref(x, system: ReactionSystem, rates=None) -> np.ndarray:
+    """Numpy oracle (exact combinatorics)."""
+    x = np.asarray(x)
+    rates = np.asarray(rates if rates is not None else system.rates)
+    b = x.shape[0]
+    out = np.zeros((b, system.n_reactions), np.float64)
+    for bi in range(b):
+        for j in range(system.n_reactions):
+            a = 1.0
+            for i, c in zip(system.reactant_idx[j], system.reactant_coef[j]):
+                if c > 0:
+                    a *= comb(int(x[bi, i]), int(c))
+            out[bi, j] = a * (rates[bi, j] if rates.ndim == 2 else rates[j])
+    return out

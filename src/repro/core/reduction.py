@@ -1,0 +1,84 @@
+"""On-line trajectory reduction (paper §5.2 schema iii).
+
+Trajectories sampled at fixed sim-time grid points are reduced to
+running (count, mean, M2) Welford accumulators per (grid point,
+species) — mean / variance / 90% confidence exactly as the paper's
+Fig. 1 — while the raw window is discarded (memory-bounded streaming).
+
+`merge` is Chan's parallel merge: associative, so the reduction forms a
+tree across lanes, shards and pods (the paper's single collector thread,
+made hierarchical — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Z90 = 1.6448536269514722  # two-sided 90% normal quantile
+
+
+class Welford(NamedTuple):
+    n: jax.Array  # (...,) float32 count
+    mean: jax.Array
+    m2: jax.Array
+
+
+def init_welford(shape) -> Welford:
+    z = jnp.zeros(shape, jnp.float32)
+    return Welford(n=z, mean=jnp.zeros_like(z), m2=jnp.zeros_like(z))
+
+
+def update_batch(acc: Welford, x, mask=None) -> Welford:
+    """Fold a batch of samples. x: (B, ...) folding over axis 0;
+    mask: (B,) optional validity."""
+    if mask is None:
+        mask = jnp.ones(x.shape[0], bool)
+    m = mask.astype(jnp.float32)
+    while m.ndim < x.ndim:
+        m = m[..., None]
+    xb = x.astype(jnp.float32) * m
+    nb = jnp.broadcast_to(m, x.shape).sum(axis=0)
+    mean_b = jnp.where(nb > 0, xb.sum(axis=0) / jnp.maximum(nb, 1), 0.0)
+    m2_b = (((x.astype(jnp.float32) - mean_b) * m) ** 2).sum(axis=0)
+    return merge(acc, Welford(n=nb, mean=mean_b, m2=m2_b))
+
+
+def merge(a: Welford, b: Welford) -> Welford:
+    n = a.n + b.n
+    safe = jnp.maximum(n, 1.0)
+    d = b.mean - a.mean
+    mean = a.mean + d * (b.n / safe)
+    m2 = a.m2 + b.m2 + d * d * (a.n * b.n / safe)
+    return Welford(n=n, mean=jnp.where(n > 0, mean, 0.0), m2=m2)
+
+
+def merge_over_axis(acc: Welford, axis: str) -> Welford:
+    """Tree-merge accumulators across a mesh axis inside shard_map.
+
+    Exact merge of (n, mean, m2) via psum identities:
+      N = Σn;  MEAN = Σ(n·mean)/N;  M2 = Σ m2 + Σ n·mean² − N·MEAN²
+    (algebraically identical to pairwise Chan merges, but one psum.)
+    """
+    n = jax.lax.psum(acc.n, axis)
+    s1 = jax.lax.psum(acc.n * acc.mean, axis)
+    s2 = jax.lax.psum(acc.m2 + acc.n * acc.mean * acc.mean, axis)
+    safe = jnp.maximum(n, 1.0)
+    mean = s1 / safe
+    m2 = s2 - n * mean * mean
+    return Welford(n=n, mean=jnp.where(n > 0, mean, 0.0),
+                   m2=jnp.maximum(m2, 0.0))
+
+
+class Stats(NamedTuple):
+    n: jax.Array
+    mean: jax.Array
+    var: jax.Array
+    ci90: jax.Array  # half-width of the 90% confidence interval
+
+
+def finalize(acc: Welford) -> Stats:
+    var = acc.m2 / jnp.maximum(acc.n - 1.0, 1.0)
+    sem = jnp.sqrt(var / jnp.maximum(acc.n, 1.0))
+    return Stats(n=acc.n, mean=acc.mean, var=var, ci90=Z90 * sem)

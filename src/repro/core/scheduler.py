@@ -1,0 +1,62 @@
+"""Instance scheduling — the paper's Fig. 5 schemas, vectorised.
+
+An *instance* is one stochastic simulation (replica or sweep point);
+a *lane* is a row of the SIMD engine. The scheduler decides which
+instances occupy the lanes for each (window × slot):
+
+* `static_rr` (schema i): instances are partitioned into fixed groups;
+  each group runs its whole trajectory before the next group starts
+  (no sim-time alignment between groups — the paper's load-imbalance
+  case).
+* `on_demand` (schema ii/iii): all instances advance window-by-window,
+  sliced into lane-width groups per window (fixed sim-time slices, the
+  stop/restart instance objects of §5.2(ii) realised as gather/scatter
+  on the pool).
+* `predictive` (schema ii/iii + history heuristics): like on_demand but
+  groups are formed by sorting instances on an EMA of their per-window
+  event cost, so lock-step groups are cost-homogeneous and masked idle
+  work shrinks (the paper's "predictive heuristics based on instance
+  history").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Scheduler:
+    n_instances: int
+    n_lanes: int
+    policy: str = "on_demand"  # static_rr | on_demand | predictive
+    ema_alpha: float = 0.5
+    _cost: np.ndarray = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self._cost = np.zeros(self.n_instances, np.float64)
+
+    def groups(self) -> list[np.ndarray]:
+        """Lane-width instance-index groups for the next window."""
+        order = np.arange(self.n_instances)
+        if self.policy == "predictive":
+            order = np.argsort(self._cost, kind="stable")
+        ngroups = (self.n_instances + self.n_lanes - 1) // self.n_lanes
+        out = []
+        for g in range(ngroups):
+            idx = order[g * self.n_lanes:(g + 1) * self.n_lanes]
+            if len(idx) < self.n_lanes:  # pad by repeating (masked anyway)
+                idx = np.concatenate(
+                    [idx, np.full(self.n_lanes - len(idx), idx[-1])])
+            out.append(idx.astype(np.int32))
+        return out
+
+    def record_costs(self, idx: np.ndarray, steps: np.ndarray) -> None:
+        """Update per-instance EMA cost with events used this window."""
+        a = self.ema_alpha
+        self._cost[idx] = (1 - a) * self._cost[idx] + a * steps
+
+    def imbalance(self) -> float:
+        """Coefficient of variation of instance costs (diagnostics)."""
+        c = self._cost
+        return float(c.std() / max(c.mean(), 1e-9))

@@ -1,0 +1,68 @@
+"""First-class data streams (paper guideline G1).
+
+Trajectory statistics flow out of the engine as a stream of
+(sim-time, Stats) records. Sinks attach as callbacks; the CSV sink
+writes incrementally (no trajectory is ever fully buffered — schema
+iii's memory bound). A bounded in-memory buffer with drop-oldest
+backpressure mirrors the FastFlow buffered collector.
+"""
+from __future__ import annotations
+
+import collections
+import csv
+import io
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class StatsRecord:
+    t: float
+    window: int
+    mean: np.ndarray  # (n_obs,)
+    var: np.ndarray
+    ci90: np.ndarray
+    n: float
+
+
+class StatsStream:
+    """Push-based stream with bounded buffering."""
+
+    def __init__(self, maxlen: int = 100_000):
+        self.buffer: collections.deque = collections.deque(maxlen=maxlen)
+        self.sinks: list[Callable[[StatsRecord], None]] = []
+        self.dropped = 0
+
+    def attach(self, sink: Callable[[StatsRecord], None]) -> None:
+        self.sinks.append(sink)
+
+    def emit(self, rec: StatsRecord) -> None:
+        if len(self.buffer) == self.buffer.maxlen:
+            self.dropped += 1
+        self.buffer.append(rec)
+        for s in self.sinks:
+            s(rec)
+
+    def records(self) -> list[StatsRecord]:
+        return list(self.buffer)
+
+
+def csv_sink(path: str, obs_names: list[str]) -> Callable[[StatsRecord], None]:
+    f = open(path, "w", newline="")
+    w = csv.writer(f)
+    header = ["t", "n"]
+    for n in obs_names:
+        header += [f"{n}_mean", f"{n}_var", f"{n}_ci90"]
+    w.writerow(header)
+
+    def sink(rec: StatsRecord) -> None:
+        row = [f"{rec.t:.6g}", f"{rec.n:.0f}"]
+        for i in range(len(obs_names)):
+            row += [f"{rec.mean[i]:.6g}", f"{rec.var[i]:.6g}",
+                    f"{rec.ci90[i]:.6g}"]
+        w.writerow(row)
+        f.flush()
+
+    return sink

@@ -1,0 +1,1 @@
+"""Data pipeline: deterministic synthetic streams with prefetch."""

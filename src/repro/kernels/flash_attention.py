@@ -1,0 +1,262 @@
+"""Pallas TPU flash attention (beyond-paper optimization, §Perf).
+
+Not a paper hot-spot — the paper's contribution is the simulator — but
+the roofline iteration (EXPERIMENTS.md §Perf) identified materialised
+attention-score HBM traffic as the dominant memory term of the LM
+train/prefill cells. This kernel keeps score tiles in VMEM: HBM traffic
+becomes O(Q + K + V + O) per layer, the standard flash behaviour.
+
+Three kernels with shared tiling (grid over (batch, q-head, q-block)):
+  * forward — online softmax, saves logsumexp L per row;
+  * dq — recomputes P from (q, k, L), accumulates dq over kv blocks;
+  * dkv — recomputes P per q block, accumulates (dk, dv) over q blocks
+    (grid over kv blocks).
+
+GQA is handled in the index maps (kv block index = head // group) — no
+materialised head expansion. Causal masking is applied per tile.
+`jax.custom_vjp` wires fwd/bwd; oracle = models.attention.full_attention
+under `jax.grad` (tests sweep shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _causal_mask(qi, ki, bq, bk):
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    return qpos >= kpos
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, nk, causal,
+                scale):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, hd)
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, q_ref.shape[-1]), jnp.float32)
+
+    kv_hi = ((qi + 1) * bq + bk - 1) // bk if causal else nk
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(ki * bk, bk), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * bk, bk), 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            s = jnp.where(_causal_mask(qi, ki, bq, bk), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, kv_hi, body, (m, l, acc))
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0, :, 0, :] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0, :] = m + jnp.log(l_safe)
+
+
+# ---------------------------------------------------------------------------
+# backward: dq (grid over q blocks), dkv (grid over kv blocks)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               *, bq, bk, nk, causal, scale):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, 0, pl.dslice(qi * bq, bq)]
+    delta = delta_ref[0, 0, pl.dslice(qi * bq, bq)]
+    dq = jnp.zeros_like(q)
+
+    kv_hi = ((qi + 1) * bq + bk - 1) // bk if causal else nk
+
+    def body(ki, dq):
+        k = k_ref[0, pl.dslice(ki * bk, bk), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * bk, bk), 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            s = jnp.where(_causal_mask(qi, ki, bq, bk), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jax.lax.dot(ds.astype(k.dtype), k,
+                                preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, kv_hi, body, dq)
+    dq_ref[0, :, 0, :] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *, bq, bk, nq, causal, scale, group):
+    ki = pl.program_id(2)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    dk = jnp.zeros_like(k)
+    dv = jnp.zeros_like(v)
+
+    q_lo = 0 if not causal else (ki * bk) // bq
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.dslice(qi * bq, bq), 0, :].astype(jnp.float32)
+        do = do_ref[0, pl.dslice(qi * bq, bq), 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, pl.dslice(qi * bq, bq)]
+        delta = delta_ref[0, 0, pl.dslice(qi * bq, bq)]
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            s = jnp.where(_causal_mask(qi, ki, bq, bk), s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # (bq, bk)
+        dv = dv + jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale  # (bq, bk)
+        dk = dk + jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        return dk, dv
+
+    dk, dv = jax.lax.fori_loop(q_lo, nq, body, (dk, dv))
+    dk_ref[0, :, 0, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, 0, :] = dv.astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers + custom_vjp
+# ---------------------------------------------------------------------------
+
+
+def _specs(b, s, h, hd, bq, group):
+    """Forward/backward shared BlockSpecs. Grid: (B, H, q-blocks)."""
+    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi: (bi, qi, hi, 0))
+    kv_spec = pl.BlockSpec((1, s, 1, hd),
+                           lambda bi, hi, qi: (bi, 0, hi // group, 0))
+    lse_spec = pl.BlockSpec((1, 1, bq), lambda bi, hi, qi: (bi, hi, qi))
+    return q_spec, kv_spec, lse_spec
+
+
+def _flash_fwd(q, k, v, causal, bq, bk, interpret):
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    kv_heads = k.shape[2]
+    group = h // kv_heads
+    bq = min(bq, s)
+    bk = min(bk, skv)
+    nq, nk = pl.cdiv(s, bq), pl.cdiv(skv, bk)
+    scale = hd ** -0.5
+    q_spec, kv_spec, lse_spec = _specs(b, s, h, hd, bq, group)
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, scale=scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=[q_spec, lse_spec],
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct((b, h, s), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def _flash_bwd(q, k, v, o, lse, do, causal, bq, bk, interpret):
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    kv_heads = k.shape[2]
+    group = h // kv_heads
+    bq = min(bq, s)
+    bk = min(bk, skv)
+    nq, nk = pl.cdiv(s, bq), pl.cdiv(skv, bk)
+    scale = hd ** -0.5
+    delta = jnp.einsum("bshd,bshd->bhs", o.astype(jnp.float32),
+                       do.astype(jnp.float32))
+    q_spec, kv_spec, lse_spec = _specs(b, s, h, hd, bq, group)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          scale=scale),
+        grid=(b, h, nq),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec,
+                  pl.BlockSpec((1, 1, s), lambda bi, hi, qi: (bi, hi, 0)),
+                  pl.BlockSpec((1, 1, s), lambda bi, hi, qi: (bi, hi, 0))],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dkv: grid over kv blocks; one q-head per program accumulates into
+    # its kv head's gradient — sum over the group outside.
+    kv_blk = pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi // group, 0))
+    full_q = pl.BlockSpec((1, s, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0))
+    full_lse = pl.BlockSpec((1, 1, s), lambda bi, hi, ki: (bi, hi, 0))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=bq, bk=bk, nq=nq, causal=causal,
+                          scale=scale, group=group),
+        grid=(b, h, nk),
+        in_specs=[full_q, kv_blk, kv_blk, full_q, full_lse, full_lse],
+        out_specs=[
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, skv, h, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((b, skv, h, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk = dk_h.reshape(b, skv, kv_heads, group, hd).sum(3).astype(k.dtype)
+    dv = dv_h.reshape(b, skv, kv_heads, group, hd).sum(3).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q: (B,S,H,hd); k/v: (B,Skv,KV,hd) with H % KV == 0. Returns (B,S,H,hd)."""
+    o, _ = _flash_fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _flash_fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, o, lse, do, causal, block_q, block_k,
+                            interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def attention_flops(b, s, h, hd, causal: bool, train: bool) -> float:
+    """Analytic FLOPs for the roofline compute term (pallas custom calls
+    report zero flops in cost_analysis). fwd = 4·B·H·S²·hd (QKᵀ + PV),
+    halved when causal; bwd ≈ 2.5x fwd (recompute + 3 grad matmuls)."""
+    fwd = 4.0 * b * h * s * s * hd * (0.5 if causal else 1.0)
+    return fwd * (3.5 if train else 1.0)

@@ -1,0 +1,98 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+`interpret=True` on CPU (this container) executes the kernel bodies in
+Python for correctness validation; on TPU the same `pallas_call`s
+compile to Mosaic. `fused_window` integrates the fused SSA kernel with
+the engine's LaneState, generating the SAME per-lane threefry uniform
+stream the unfused path would consume, so both paths are bit-identical.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gillespie import LaneState
+from repro.core.reactions import ReactionSystem
+from repro.kernels.propensity import propensity_call, reactant_onehots
+from repro.kernels.ssa_step import ssa_window_call
+
+ON_TPU = jax.default_backend() == "tpu"
+DEFAULT_CHUNK_STEPS = 256
+
+
+def system_kernel_tensors(system: ReactionSystem):
+    """(E, coef_f32, delta_f32) device tensors for the kernels."""
+    e = jnp.asarray(reactant_onehots(system))
+    coef = jnp.asarray(system.reactant_coef.T, jnp.float32)  # (M, R)
+    delta = jnp.asarray(system.delta, jnp.float32)
+    return e, coef, delta
+
+
+def propensity(x, system_tensors_k, rates, interpret: bool | None = None):
+    e, coef, _ = system_tensors_k
+    interp = (not ON_TPU) if interpret is None else interpret
+    return propensity_call(x, e, coef, rates, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _draw_uniform_stream(key, n: int):
+    """(B,2) uint32 keys -> (new_keys, uniforms (B, n, 2)) matching the
+    unfused gillespie._uniforms consumption order."""
+
+    def one_lane(k):
+        def body(k, _):
+            kk = jax.random.wrap_key_data(k, impl="threefry2x32")
+            k1, k2 = jax.random.split(kk)
+            u = jax.random.uniform(k2, (2,), jnp.float32, 1e-12, 1.0)
+            return jax.random.key_data(k1), u
+
+        return jax.lax.scan(body, k, None, length=n)
+
+    new_key, us = jax.vmap(one_lane)(key)
+    return new_key, us
+
+
+def fused_window(pool: LaneState, tensors, horizon,
+                 chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                 interpret: bool | None = None,
+                 max_chunks: int = 64) -> LaneState:
+    """Advance every lane to `horizon` using the fused kernel.
+
+    tensors: (idx, coef, delta, rates) as in gillespie.system_tensors —
+    converted to kernel form here. Chunks of `chunk_steps` fused events
+    run back-to-back until all lanes cross the horizon.
+    """
+    idx, coef_rm, delta_f, rates = tensors
+    s = pool.x.shape[1]
+    r = delta_f.shape[0]
+    # build one-hots from (idx, coef) — same info, MXU layout
+    m = idx.shape[1]
+    e = jnp.zeros((m, s + 1, r), jnp.float32).at[
+        jnp.arange(m)[:, None], idx.T, jnp.arange(r)[None, :]].set(
+        (coef_rm.T > 0).astype(jnp.float32))[:, :s, :]
+    coef_k = jnp.asarray(coef_rm.T, jnp.float32)
+    interp = (not ON_TPU) if interpret is None else interpret
+
+    x, t, dead = pool.x, pool.t, pool.dead.astype(jnp.int32)
+    key = pool.key
+    steps_total = pool.steps
+    for _ in range(max_chunks):
+        if not bool(jnp.any((t < horizon) & (dead == 0))):
+            break
+        key, uniforms = _draw_uniform_stream(key, chunk_steps)
+        x, t, dead, steps = ssa_window_call(
+            x, t, dead, uniforms, e, coef_k, delta_f, rates, horizon,
+            n_steps=chunk_steps, interpret=interp)
+        steps_total = steps_total + steps
+        # NOTE on determinism: within a window the kernel consumes the
+        # identical uniform stream as the unfused path (bitwise-equal
+        # trajectories, tested). Across windows the key advances by
+        # chunk_steps splits regardless of how many draws were used, so
+        # kernel-vs-unfused parity across windows is distributional, not
+        # bitwise (both exact SSA; memorylessness makes redraws valid).
+    t = jnp.where(dead > 0, jnp.maximum(t, horizon), t)
+    return LaneState(x=x, t=t, key=key, steps=steps_total,
+                     dead=dead > 0)

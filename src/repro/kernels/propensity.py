@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: the Match phase as MXU matmuls.
+
+The paper's `Match_Populations` (product of binomials over reactant
+populations) was the SSE target in §5.1 — and gained ~nothing, because
+2010-era AoS code could only vectorise *within* one instance. The TPU
+adaptation flips the vector axis: lanes (instances) × reactions tiles,
+and the population gather becomes a **one-hot matmul** so the MXU does
+the Match:
+
+    pops[m] = X @ E[m]        E[m]: (S, R) one-hot of reactant slot m
+    A       = k · Π_m C(pops[m], coef[m])
+
+Tiling: X block (LANE_BLK, S) resident in VMEM; reactions tiled by
+R_BLK. All factors unrolled over MAX_REACTANTS (CWC rules are small).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.reactions import MAX_REACTANTS, ReactionSystem
+
+LANE_BLK = 256
+R_BLK = 256
+
+
+def reactant_onehots(system: ReactionSystem) -> np.ndarray:
+    """(M, S, R) one-hot matrices E[m][s, j] = 1 iff reactant slot m of
+    reaction j is species s. Padding slots are all-zero columns."""
+    m, s, r = MAX_REACTANTS, system.n_species, system.n_reactions
+    e = np.zeros((m, s, r), np.float32)
+    for j in range(r):
+        for mm in range(m):
+            idx = system.reactant_idx[j, mm]
+            if system.reactant_coef[j, mm] > 0 and idx < s:
+                e[mm, idx, j] = 1.0
+    return e
+
+
+def _comb_factors(pops, coef, max_c: int = 4):
+    """C(pops, coef) unrolled: pops (B, R) f32, coef (R,) or (B, R)."""
+    ff = jnp.ones_like(pops)
+    fact = jnp.ones_like(pops)
+    for i in range(max_c):
+        active = coef > i
+        ff = jnp.where(active, ff * jnp.maximum(pops - i, 0.0), ff)
+        fact = jnp.where(active, fact * (i + 1), fact)
+    return ff / fact
+
+
+def _propensity_kernel(x_ref, e_ref, coef_ref, rates_ref, out_ref):
+    """One (lane-block × reaction-block) tile."""
+    x = x_ref[...]  # (BL, S)
+    a = jnp.ones((x.shape[0], coef_ref.shape[1]), jnp.float32)
+    for m in range(MAX_REACTANTS):
+        pops = jax.lax.dot(x, e_ref[m],
+                           preferred_element_type=jnp.float32)  # (BL, Rb)
+        coef = coef_ref[m]  # (Rb,)
+        a = a * _comb_factors(pops, coef[None, :])
+    out_ref[...] = a * rates_ref[...]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def propensity_call(x, e, coef, rates, *, interpret: bool = True):
+    """x: (B, S) f32; e: (M, S, R); coef: (M, R) f32; rates (B, R) or (R,).
+
+    Returns (B, R) propensities.
+    """
+    b, s = x.shape
+    r = e.shape[-1]
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, r))
+    bl = min(LANE_BLK, b)
+    rb = min(R_BLK, r)
+    grid = (pl.cdiv(b, bl), pl.cdiv(r, rb))
+    return pl.pallas_call(
+        _propensity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((MAX_REACTANTS, s, rb), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((MAX_REACTANTS, rb), lambda i, j: (0, j)),
+            pl.BlockSpec((bl, rb), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bl, rb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=interpret,
+    )(x, e, coef, rates)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (bitwise comparable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reactions import MAX_REACTANTS, propensities
+
+
+def propensity_ref(x, idx, coef, rates):
+    """Gather-based propensities — oracle for kernels/propensity.py."""
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (x.shape[0], rates.shape[0]))
+    return propensities(x, idx, coef, rates)
+
+
+def ssa_window_ref(x, t, dead, uniforms, idx, coef, delta, rates, horizon,
+                   n_steps: int):
+    """Consume the same uniform stream as the fused kernel — oracle for
+    kernels/ssa_step.py. Returns (x, t, dead, steps)."""
+    b = x.shape[0]
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, rates.shape[0]))
+    dead = dead.astype(bool)
+    steps = jnp.zeros((b,), jnp.int32)
+
+    def step(i, carry):
+        x, t, dead, steps = carry
+        active = (t < horizon) & ~dead
+        a = propensities(x, idx, coef, rates)
+        a0 = a.sum(axis=1)
+        now_dead = a0 <= 0.0
+        u1 = uniforms[:, i, 0]
+        u2 = uniforms[:, i, 1]
+        tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
+        t_next = t + tau
+        fire = active & ~now_dead & (t_next <= horizon)
+        cum = jnp.cumsum(a, axis=1)
+        j = jnp.argmax(cum >= (u2 * a0)[:, None], axis=1)
+        x = jnp.where(fire[:, None], x + delta[j], x)
+        t = jnp.where(fire, t_next, jnp.where(active, horizon, t))
+        dead = dead | (active & now_dead)
+        steps = steps + fire.astype(jnp.int32)
+        return x, t, dead, steps
+
+    x, t, dead, steps = jax.lax.fori_loop(0, n_steps, step,
+                                          (x, t, dead, steps))
+    return x, t, dead.astype(jnp.int32), steps

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused multi-step SSA window.
+
+The flagship hardware adaptation (DESIGN.md §2/§4): the paper found the
+single SSA step too fine-grained for any inter-core parallelism and
+nearly SIMD-proof *within* one instance. Here the ENTIRE Monte Carlo
+inner loop runs inside one kernel with the lane state (X, t) resident
+in VMEM across `n_steps` iterations:
+
+  per step (all in VMEM / VREGs):
+    Match   — A = k · Π C(X@E_m, coef)        (MXU matmuls)
+    Resolve — tau = -ln(u1)/a0;  one-hot(j) from inverse-CDF on cumsum
+    Update  — X += onehot(j) @ delta          (MXU matmul)
+
+HBM traffic per window: X/t/flags once each way + the uniform stream,
+instead of O(state × steps) — the memory-wall guideline (§3.2.3/3.1.2)
+applied to the HBM↔VMEM boundary.
+
+Uniforms are precomputed from the SAME per-lane threefry sequence as
+the unfused `gillespie.ssa_step`, so kernel and jnp paths produce
+bit-identical trajectories (tested).
+
+Grid: lane blocks only (reactions stay whole in VMEM — CWC systems are
+small-R; an R-tiled variant would add a cross-tile argmin, not needed
+here).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.reactions import MAX_REACTANTS
+from repro.kernels.propensity import _comb_factors
+
+LANE_BLK = 256
+
+
+def _window_kernel(x_ref, t_ref, dead_ref, u_ref, e_ref, coef_ref,
+                   delta_ref, rates_ref, horizon_ref,
+                   x_out, t_out, dead_out, steps_out, n_steps: int):
+    x = x_ref[...].astype(jnp.float32)  # (BL, S)
+    t = t_ref[...]  # (BL,)
+    dead = dead_ref[...] > 0  # (BL,)
+    horizon = horizon_ref[0]
+    steps = jnp.zeros_like(t, jnp.float32)
+
+    def step(i, carry):
+        x, t, dead, steps = carry
+        active = (t < horizon) & ~dead
+        # --- Match (MXU) ---
+        a = rates_ref[...]
+        for m in range(MAX_REACTANTS):
+            pops = jax.lax.dot(x, e_ref[m],
+                               preferred_element_type=jnp.float32)
+            a = a * _comb_factors(pops, coef_ref[m][None, :])
+        a0 = a.sum(axis=1)
+        now_dead = a0 <= 0.0
+        # --- Resolve ---
+        u1 = u_ref[:, i, 0]
+        u2 = u_ref[:, i, 1]
+        tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
+        t_next = t + tau
+        fire = active & ~now_dead & (t_next <= horizon)
+        cum = jnp.cumsum(a, axis=1)
+        thresh = (u2 * a0)[:, None]
+        ge = cum >= thresh
+        first = ge & ~jnp.concatenate(
+            [jnp.zeros_like(ge[:, :1]), ge[:, :-1]], axis=1)
+        onehot = jnp.where(fire[:, None], first.astype(jnp.float32), 0.0)
+        # --- Update (MXU) ---
+        dx = jax.lax.dot(onehot, delta_ref[...],
+                         preferred_element_type=jnp.float32)
+        x = x + dx
+        t = jnp.where(fire, t_next,
+                      jnp.where(active, horizon, t))
+        dead = dead | (active & now_dead)
+        steps = steps + fire.astype(jnp.float32)
+        return x, t, dead, steps
+
+    x, t, dead, steps = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, steps))
+    x_out[...] = x
+    t_out[...] = t
+    dead_out[...] = dead.astype(jnp.int32)
+    steps_out[...] = steps.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "interpret"))
+def ssa_window_call(x, t, dead, uniforms, e, coef, delta, rates, horizon,
+                    *, n_steps: int, interpret: bool = True):
+    """Run up to n_steps fused SSA events per lane toward `horizon`.
+
+    x: (B,S) f32; t: (B,) f32; dead: (B,) int32; uniforms: (B, n_steps, 2);
+    e: (M,S,R); coef: (M,R) f32; delta: (R,S) f32; rates: (B,R) or (R,).
+    Returns (x, t, dead, steps_taken).
+    """
+    b, s = x.shape
+    r = delta.shape[0]
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, r))
+    bl = min(LANE_BLK, b)
+    grid = (pl.cdiv(b, bl),)
+    horizon_arr = jnp.asarray([horizon], jnp.float32)
+    kernel = partial(_window_kernel, n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl, n_steps, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((MAX_REACTANTS, s, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((MAX_REACTANTS, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, s), lambda i: (0, 0)),
+            pl.BlockSpec((bl, r), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, t, dead, uniforms, e, coef, delta, rates, horizon_arr)

@@ -1,0 +1,272 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh)
+cell on placeholder devices; record memory/cost/collective analysis.
+
+The two lines above MUST stay the first statements in this module —
+jax locks the device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single [--out artifacts/]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    SHAPES,
+    V5E,
+    OptimizerConfig,
+    ShardingConfig,
+    shape_applicable,
+)
+from repro.configs.registry import (
+    ARCH_NAMES,
+    default_sharding,
+    dryrun_cells,
+    get_config,
+)
+from repro.launch.hlo import collective_summary, parse_collectives
+from repro.launch.inputs import inputs_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.sharding.rules import Topology
+from repro.train.step import abstract_train_state, make_train_step
+
+
+def _flops_bytes(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis() or {}
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _memory(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+
+
+def flash_kernel_terms(cfg, shape, n_dev: int) -> tuple[float, float]:
+    """Analytic (flops, hbm_bytes) PER DEVICE of the Pallas flash
+    attention kernels for this cell (kernels/flash_attention.py): with
+    --attn flash the dry-run compiles the O(S) stub and adds these back.
+
+    fwd flops = 4·B·H·S²·hd (x0.5 causal); bwd ≈ 2.5x fwd.
+    HBM: fwd reads q,k,v, writes o+lse; bwd reads q,k,v,o,do,lse, writes
+    dq,dk,dv — ≈ (4·|q| + 2·|kv|) fwd and ~2.5x that for train.
+    """
+    from repro.kernels.flash_attention import attention_flops
+
+    hd = cfg.resolved_head_dim
+    b, s = shape.global_batch, shape.seq_len
+    train = shape.kind == "train"
+    specs = list(cfg.layer_specs())
+    n_self = sum(1 for sp in specs if sp.mixer == "attn")
+    flops = n_self * attention_flops(b, s, cfg.n_heads, hd, True, train)
+    q_bytes = b * s * cfg.n_heads * hd * 2
+    kv_bytes = b * s * cfg.n_kv_heads * hd * 2
+    io = n_self * (4 * q_bytes + 2 * kv_bytes) * (2.5 if train else 1.0)
+    if cfg.is_encoder_decoder:
+        n_enc = len(cfg.encoder_layer_specs())
+        # encoder self (bidir) + decoder cross (bidir)
+        flops += (n_enc + n_self) * attention_flops(
+            b, s, cfg.n_heads, hd, False, train)
+        io *= 3.0
+    return flops / n_dev, io / n_dev
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train; 2·N_active per generated/processed token
+    otherwise (forward only)."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             sharding: ShardingConfig | None = None,
+             out_dir: str | None = None, tag: str = "",
+             attn: str = "chunked") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    scfg = sharding or default_sharding(arch, shape)
+    if not multi_pod:
+        # Unroll the layer stack: cost_analysis counts loop bodies once,
+        # so faithful roofline terms need the repeats materialised. The
+        # multi-pod pass keeps lax.scan (it proves sharding coherence,
+        # not cost terms) for tractable compile times.
+        scfg = dataclasses.replace(scfg, scan_layers=False)
+
+    from repro.models.attention import set_attention_impl
+
+    use_flash = attn == "flash" and shape.kind in ("train", "prefill")
+    set_attention_impl("linear_stub" if use_flash else "auto")
+    try:
+        topo = Topology(mesh, cfg, scfg)
+        model = build_model(cfg, topo, remat=scfg.remat,
+                            scan_layers=scfg.scan_layers)
+        return _run_cell_inner(cfg, shape, arch, shape_name, multi_pod,
+                               mesh, scfg, topo, model, out_dir, tag,
+                               use_flash)
+    finally:
+        set_attention_impl("auto")
+
+
+def _run_cell_inner(cfg, shape, arch, shape_name, multi_pod, mesh, scfg,
+                    topo, model, out_dir, tag, use_flash):
+
+    t0 = time.time()
+    params = model.abstract_params()
+
+    if shape.kind == "train":
+        state = abstract_train_state(model, OptimizerConfig())
+        batch = inputs_for(cfg, shape, topo, model)
+        step = make_train_step(model, OptimizerConfig(), scfg)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+    elif shape.kind == "prefill":
+        batch = inputs_for(cfg, shape, topo, model)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(prefill_step).lower(params, batch)
+    else:  # decode
+        cache, token, pos = inputs_for(cfg, shape, topo, model)
+
+        def serve_step(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+                params, cache, token, pos)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    flops, bytes_acc = _flops_bytes(compiled)
+    mem = _memory(compiled)
+    colls = parse_collectives(compiled.as_text())
+    csum = collective_summary(colls)
+
+    n_dev = mesh.devices.size
+    flash = None
+    if use_flash:
+        # add the Pallas flash kernels' analytic terms (the compiled
+        # graph carries the O(S) stub instead of score materialisation)
+        f_flops, f_bytes = flash_kernel_terms(cfg, shape, n_dev)
+        flops += f_flops
+        bytes_acc += f_bytes
+        flash = {"kernel_flops_per_device": f_flops,
+                 "kernel_bytes_per_device": f_bytes}
+    t_comp = flops / V5E.peak_flops_bf16
+    t_mem = bytes_acc / V5E.hbm_bw
+    t_coll = csum["moved_bytes_per_device"] / V5E.ici_bw
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    result = {
+        "flash_adjustment": flash,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "n_devices": n_dev,
+        "sharding": dataclasses.asdict(scfg),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "memory": mem,
+        "collectives": csum,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+            "compute_fraction": (t_comp / max(terms.values())
+                                 if max(terms.values()) > 0 else 0.0),
+        },
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops * n_dev)) if flops else 0.0,
+        "fits_hbm": mem["peak_bytes"] <= V5E.hbm_bytes,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "tag": tag,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        mesh_tag = "mp" if multi_pod else "sp"
+        suffix = f"-{tag}" if tag else ""
+        path = os.path.join(out_dir,
+                            f"{arch}-{shape_name}-{mesh_tag}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="", help="variant tag for §Perf runs")
+    ap.add_argument("--attn", choices=["chunked", "flash"], default="chunked")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = (dryrun_cells() if args.all
+             else [(args.arch, SHAPES[args.shape])])
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            name = f"{arch} × {shape.name} × {'2x16x16' if mp else '16x16'}"
+            try:
+                r = run_cell(arch, shape.name, mp, out_dir=args.out,
+                             tag=args.tag, attn=args.attn)
+                if "skipped" in r:
+                    print(f"SKIP {name}: {r['skipped']}")
+                    continue
+                rf = r["roofline"]
+                print(f"OK   {name}: dominant={rf['dominant']} "
+                      f"bound={rf['bound_s']*1e3:.2f}ms "
+                      f"compute%={100*rf['compute_fraction']:.0f} "
+                      f"peak={r['memory']['peak_bytes']/2**30:.2f}GiB "
+                      f"fits={r['fits_hbm']} compile={r['compile_s']:.0f}s")
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {name}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Optimized-HLO analysis: collective inventory for the roofline.
+
+`cost_analysis()` does not report collective traffic, so we parse the
+compiled module text. Per-device moved bytes use ring-algorithm factors:
+
+  all-reduce        2(g-1)/g · result_bytes
+  all-gather        (g-1)/g  · result_bytes          (result = gathered)
+  reduce-scatter    (g-1)    · result_bytes          (input = g · result)
+  all-to-all        (g-1)/g  · buffer_bytes
+  collective-permute 1       · buffer_bytes
+
+g = replica-group size parsed from `replica_groups=[N,G]<=[...]` (iota
+form) or literal `{{...}}` lists. Async pairs (`-start`/`-done`) are
+counted once at the `-start`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+@dataclass
+class Collective:
+    op: str
+    bytes_buffer: int  # result-buffer bytes (per device program)
+    group_size: int
+    count: int = 1
+
+    @property
+    def moved_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.op == "all-reduce":
+            f = 2 * (g - 1) / g
+        elif self.op == "all-gather":
+            f = (g - 1) / g
+        elif self.op == "reduce-scatter":
+            f = float(g - 1)
+        elif self.op == "all-to-all":
+            f = (g - 1) / g
+        else:  # collective-permute
+            f = 1.0
+        return f * self.bytes_buffer * self.count
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    """Inventory of collectives in an optimized HLO module (per-device)."""
+    agg: dict[tuple, Collective] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=", 1)[-1][:60] and not m.group("start"):
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIT_RE.search(line)
+            group = len(gl.group(1).split(",")) if gl else 1
+        key = (op, nbytes, group)
+        if key in agg:
+            agg[key].count += 1
+        else:
+            agg[key] = Collective(op, nbytes, group)
+    return list(agg.values())
+
+
+def collective_summary(colls: list[Collective]) -> dict:
+    by_op: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for c in colls:
+        by_op[c.op] += c.moved_bytes
+        counts[c.op] += c.count
+    total = sum(by_op.values())
+    return {
+        "moved_bytes_per_device": total,
+        "by_op": dict(by_op),
+        "counts": dict(counts),
+    }

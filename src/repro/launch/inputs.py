@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+Weak-type-correct, sharding-annotated, no device allocation — the same
+pattern the dry-run and the roofline benchs consume.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    KIND_DECODE,
+    KIND_PREFILL,
+    KIND_TRAIN,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models.common import DTYPES
+from repro.sharding.rules import BATCH, Topology
+
+
+def _sds(topo: Topology, shape, dtype, *logical):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=topo.named(logical))
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, topo: Topology) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    dt = DTYPES[cfg.dtype]
+    ints = jnp.int32
+    batch: dict = {}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds(topo, (b, s, cfg.d_model), dt, BATCH, None, None)
+        batch["tokens"] = _sds(topo, (b, s), ints, BATCH, None)
+    elif cfg.frontend == "vision":
+        p = cfg.frontend_tokens
+        batch["embeds"] = _sds(topo, (b, p, cfg.d_model), dt, BATCH, None, None)
+        batch["tokens"] = _sds(topo, (b, s - p), ints, BATCH, None)
+    else:
+        batch["tokens"] = _sds(topo, (b, s), ints, BATCH, None)
+    batch["targets"] = _sds(topo, (b, s), ints, BATCH, None)
+    batch["loss_mask"] = _sds(topo, (b, s), jnp.float32, BATCH, None)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, topo: Topology) -> dict:
+    batch = train_inputs(cfg, shape, topo)
+    batch.pop("targets")
+    batch.pop("loss_mask")
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, topo: Topology,
+                  model) -> tuple:
+    """(cache, token, pos) stand-ins for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, s, cross_len=s))
+    else:
+        cache_shape = jax.eval_shape(lambda: model.init_cache(b, s))
+    shardings = model.cache_shardings()
+
+    def attach(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    cache = jax.tree.map(attach, cache_shape, _match_tree(shardings, cache_shape))
+    token = _sds(topo, (b, 1), jnp.int32, BATCH, None)
+    pos = _sds(topo, (b,), jnp.int32, BATCH)
+    return cache, token, pos
+
+
+def _match_tree(shardings, cache_shape):
+    """Broadcast the sharding tree to the cache tree (cache leaves under
+    a cache entry map 1:1; cross_k/v reuse the entry's sharding dict)."""
+    def walk(sh, ca):
+        if isinstance(ca, dict):
+            return {k: walk(sh.get(k) if isinstance(sh, dict) else sh, v)
+                    for k, v in ca.items()}
+        if isinstance(ca, (list, tuple)):
+            return type(ca)(walk(s, c) for s, c in zip(sh, ca))
+        return sh
+
+    return walk(shardings, cache_shape)
+
+
+def inputs_for(cfg: ModelConfig, shape: ShapeConfig, topo: Topology, model):
+    if shape.kind == KIND_TRAIN:
+        return train_inputs(cfg, shape, topo)
+    if shape.kind == KIND_PREFILL:
+        return prefill_inputs(cfg, shape, topo)
+    if shape.kind == KIND_DECODE:
+        return decode_inputs(cfg, shape, topo, model)
+    raise ValueError(shape.kind)

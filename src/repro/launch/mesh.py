@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+import; smoke tests and benchmarks see the real (1-device) platform.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshSpec
+from repro.sharding.rules import make_mesh_from_spec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """(16,16)=256 chips/pod ('data','model'); multi-pod: (2,16,16)."""
+    spec = MULTI_POD if multi_pod else SINGLE_POD
+    return make_mesh_from_spec(spec)
+
+
+def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    return MULTI_POD if multi_pod else SINGLE_POD

@@ -1,0 +1,99 @@
+"""End-to-end training driver (runs on CPU for smoke/examples; same code
+path drives pods — the mesh/topology comes from flags).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import store
+from repro.configs.base import OptimizerConfig, ShardingConfig
+from repro.configs.registry import ARCH_NAMES, get_config, get_smoke_config
+from repro.data.pipeline import PrefetchPipeline
+from repro.models import build_model
+from repro.sharding.rules import smoke_topology
+from repro.train.optim import init_opt_state
+from repro.train.step import make_train_step
+
+
+def train_loop(arch: str, *, smoke: bool = True, steps: int = 50,
+               batch: int = 8, seq: int = 128, grad_accum: int = 1,
+               ckpt_dir: str | None = None, ckpt_every: int = 20,
+               resume: bool = False, log_every: int = 10,
+               lr: float = 1e-3, seed: int = 0, quiet: bool = False):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    topo = smoke_topology(cfg)
+    model = build_model(cfg, topo, remat="none", scan_layers=True)
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=max(5, steps // 10),
+                           total_steps=steps)
+    scfg = ShardingConfig(strategy="dp_tp", grad_accum=grad_accum)
+    step_fn = jax.jit(make_train_step(model, ocfg, scfg), donate_argnums=(0,))
+
+    start_step = 0
+    if resume and ckpt_dir and store.latest_step(ckpt_dir) is not None:
+        start_step = store.latest_step(ckpt_dir)
+        params = model.init(jax.random.PRNGKey(seed))
+        template = {"params": params, "opt": init_opt_state(params, ocfg)}
+        state = store.restore(template, ckpt_dir)
+        if not quiet:
+            print(f"resumed from step {start_step}")
+    else:
+        params = model.init(jax.random.PRNGKey(seed))
+        state = {"params": params, "opt": init_opt_state(params, ocfg)}
+
+    pipe = PrefetchPipeline(cfg, batch, seq, start_step=start_step)
+    writer = store.AsyncWriter()
+    losses = []
+    t0 = time.time()
+    try:
+        for i in range(start_step, steps):
+            b = next(pipe)
+            b.pop("_step")
+            state, metrics = step_fn(state, b)
+            loss = float(np.asarray(metrics["loss"]))
+            losses.append(loss)
+            if not quiet and (i % log_every == 0 or i == steps - 1):
+                tok_s = batch * seq * max(1, i + 1 - start_step) / (
+                    time.time() - t0)
+                print(f"step {i:5d} loss {loss:.4f} "
+                      f"lr {float(np.asarray(metrics['lr'])):.2e} "
+                      f"gnorm {float(np.asarray(metrics['grad_norm'])):.2f} "
+                      f"tok/s {tok_s:,.0f}")
+            if ckpt_dir and (i + 1) % ckpt_every == 0:
+                writer.submit(state, ckpt_dir, i + 1)
+        writer.wait()
+        if ckpt_dir:
+            store.save(state, ckpt_dir, steps)
+    finally:
+        pipe.close()
+    return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    train_loop(args.arch, smoke=args.smoke, steps=args.steps,
+               batch=args.batch, seq=args.seq, grad_accum=args.grad_accum,
+               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+               resume=args.resume, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

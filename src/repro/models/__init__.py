@@ -1,0 +1,2 @@
+"""Model zoo: assigned-architecture families on a shared block substrate."""
+from repro.models.encdec import build_model  # noqa: F401

@@ -1,0 +1,304 @@
+"""GQA attention: full, chunked (online-softmax, memory-bounded for 32k+),
+decode with KV cache, and sequence-sharded distributed flash-decode.
+
+All softmax math in fp32; matmuls accumulate in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, einsum, einsum_out
+from repro.models.rope import apply_rope
+from repro.sharding.rules import (
+    EMBED,
+    HEAD_DIM,
+    KV_HEADS,
+    KV_SEQ,
+    Q_HEADS,
+    Topology,
+)
+
+NEG_INF = -1e30
+
+# When seq_len exceeds this, use the chunked online-softmax path.
+FULL_ATTN_MAX_SEQ = 2048
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), (EMBED, Q_HEADS, HEAD_DIM)),
+        "wk": ParamDef((d, kv, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wv": ParamDef((d, kv, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wo": ParamDef((h, hd, d), (Q_HEADS, HEAD_DIM, EMBED)),
+    }
+    if cfg.mlp_bias:  # archs with biases use them in attention too
+        defs["bq"] = ParamDef((h, hd), (Q_HEADS, HEAD_DIM), init="zeros")
+        defs["bk"] = ParamDef((kv, hd), (KV_HEADS, HEAD_DIM), init="zeros")
+        defs["bv"] = ParamDef((kv, hd), (KV_HEADS, HEAD_DIM), init="zeros")
+        defs["bo"] = ParamDef((d,), (EMBED,), init="zeros")
+    return defs
+
+
+def project_qkv(params, x, cfg: ModelConfig, positions=None, rope: bool = True):
+    """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,KV,hd)."""
+    q = einsum("bsd,dhk->bshk", x, params["wq"])
+    k = einsum("bsd,dhk->bshk", x, params["wk"])
+    v = einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope and cfg.use_rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(params, o):
+    y = einsum_out("bshk,hkd->bsd", o, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+def _expand_kv(k, n_heads: int):
+    """(B,S,KV,hd) -> (B,S,H,hd) by repeating each KV head."""
+    kv = k.shape[-2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=-2)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Quadratic attention; fine for seq <= ~8k. q:(B,Sq,H,hd), k/v:(B,Sk,KV,hd)."""
+    h = q.shape[-2]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqs,bshk->bqhk", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = Q_CHUNK,
+                      kv_chunk: int = KV_CHUNK):
+    """Online-softmax attention, O(S·chunk) memory. Shapes as full_attention."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+
+    qs = q.reshape(b, nq, q_chunk, h, hd)
+    ks = k.reshape(b, nk, kv_chunk, h, hd)
+    vs = v.reshape(b, nk, kv_chunk, h, hd)
+
+    def q_body(qi, q_blk):
+        # online softmax over kv chunks
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, q_chunk, h, hd), jnp.float32)
+
+        @jax.checkpoint  # flash-style: recompute scores in backward
+        def kv_body(carry, inputs):
+            m, l, o = carry
+            ki, k_blk, v_blk = inputs
+            logits = jnp.einsum("bqhk,bshk->bhqs", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                logits = jnp.where(qpos >= kpos, logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+                "bhqs,bshk->bqhk", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(
+            kv_body, (m0, l0, o0),
+            (jnp.arange(nk), ks.swapaxes(0, 1), vs.swapaxes(0, 1)))
+        o = o / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+        return o.astype(q.dtype)
+
+    outs = jax.lax.map(lambda args: q_body(*args),
+                       (jnp.arange(nq), qs.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+# Selectable implementation for full-sequence attention:
+#   "auto"        — full (<=2k) else chunked online-softmax (pure JAX)
+#   "flash"       — Pallas flash kernel (TPU; interpret-mode on CPU tests)
+#   "linear_stub" — O(S) placeholder used ONLY by the dry-run's
+#                   flash-adjusted accounting: the compiled graph carries
+#                   everything except attention-score traffic, and the
+#                   kernel's analytic FLOPs/bytes are added post-hoc
+#                   (see launch/dryrun.py --attn flash).
+_ATTN_IMPL = "auto"
+
+
+def set_attention_impl(name: str) -> None:
+    global _ATTN_IMPL
+    assert name in ("auto", "flash", "linear_stub"), name
+    _ATTN_IMPL = name
+
+
+def _linear_stub(q, k, v, causal: bool):
+    """Near-free stand-in (dry-run flash accounting only): one reduction
+    over k/v plus a broadcast — keeps q/k/v (and so their projections'
+    backward matmuls) alive in the graph at negligible extra traffic."""
+    h = q.shape[-2]
+    ctx = (v.mean(axis=1, keepdims=True) + 0.01 * k.mean(axis=1,
+                                                         keepdims=True))
+    ctx = _expand_kv(ctx, h)
+    return (q * 0.01 + ctx).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool):
+    if _ATTN_IMPL == "linear_stub":
+        return _linear_stub(q, k, v, causal)
+    if _ATTN_IMPL == "flash":
+        from repro.kernels.flash_attention import flash_attention
+
+        interpret = jax.default_backend() != "tpu"
+        return flash_attention(q, k, v, causal, 512, 512, interpret)
+    if max(q.shape[1], k.shape[1]) <= FULL_ATTN_MAX_SEQ:
+        return full_attention(q, k, v, causal=causal)
+    # outer checkpoint keeps cross-layer residuals at O(q,k,v,out);
+    # the inner kv_body checkpoint keeps in-attention residuals at
+    # O(carry) per chunk — together: flash-attention memory behaviour
+    return jax.checkpoint(
+        lambda q, k, v: chunked_attention(q, k, v, causal=causal))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode paths
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, slot, valid_len):
+    """Single-token decode over a pre-written cache (no concat copies —
+    the new token's K/V must already sit at `slot`).
+
+    q: (B,1,H,hd); caches (B,S,KV,hd); slot/valid_len: (B,) int32.
+    Attends over positions < valid_len plus `slot`.
+    """
+    h = q.shape[-2]
+    s = k_cache.shape[1]
+    scale = q.shape[-1] ** -0.5
+    k_all = _expand_kv(k_cache, h)
+    v_all = _expand_kv(v_cache, h)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k_all,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, :]
+    mask = (pos < valid_len[:, None]) | (pos == slot[:, None])
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqs,bshk->bqhk", w.astype(v_all.dtype), v_all,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def write_kv_slot(k_cache, v_cache, k_new, v_new, slot):
+    """In-place (donation-friendly) per-batch ring write at `slot`."""
+    bidx = jnp.arange(k_cache.shape[0])
+    return (k_cache.at[bidx, slot].set(k_new[:, 0].astype(k_cache.dtype)),
+            v_cache.at[bidx, slot].set(v_new[:, 0].astype(v_cache.dtype)))
+
+
+def decode_attention_seqsharded(q, k_cache, v_cache, k_new, v_new,
+                                slot, valid_len, topo: Topology):
+    """Distributed flash-decode with in-shard cache writes.
+
+    The KV cache is sharded on its sequence axis across one mesh axis
+    (`data` for long-context small-batch, `model` for big-cache batched
+    decode). Each shard writes the new token's K/V iff it owns `slot`,
+    computes partial (max, sum-exp, weighted-V), and partials combine
+    exactly via psum — a two-pass-free distributed softmax. No cache
+    copy or cross-shard scatter ever materialises.
+
+    Returns (o, new_k_cache, new_v_cache).
+    """
+    from repro.sharding.rules import KV_SEQ
+
+    mesh = topo.mesh
+    axis = topo.rules[KV_SEQ]
+    assert axis in topo.axis_sizes, "seq-sharded decode needs a KV_SEQ axis"
+    h = q.shape[-2]
+    scale = q.shape[-1] ** -0.5
+    s_global = k_cache.shape[1]
+    n_shards = topo.axis_sizes[axis]
+    s_local = s_global // n_shards
+
+    def local(q, k_loc, v_loc, k_new, v_new, slot, valid_len):
+        idx = jax.lax.axis_index(axis)
+        # write the new token's K/V into the owning shard's slice
+        owns = (slot // s_local) == idx  # (B,)
+        lslot = slot % s_local
+        bidx = jnp.arange(q.shape[0])
+        k_upd = jnp.where(owns[:, None, None],
+                          k_new[:, 0].astype(k_loc.dtype),
+                          k_loc[bidx, lslot])
+        v_upd = jnp.where(owns[:, None, None],
+                          v_new[:, 0].astype(v_loc.dtype),
+                          v_loc[bidx, lslot])
+        k_loc = k_loc.at[bidx, lslot].set(k_upd)
+        v_loc = v_loc.at[bidx, lslot].set(v_upd)
+
+        k_l = _expand_kv(k_loc, h)
+        v_l = _expand_kv(v_loc, h)
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, k_l,
+                            preferred_element_type=jnp.float32) * scale
+        gpos = idx * s_local + jnp.arange(s_local)
+        valid = (gpos[None, :] < valid_len[:, None]) | (
+            gpos[None, :] == slot[:, None])
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+        m = logits.max(axis=-1, keepdims=True)  # (b,h,q,1) local max
+        p = jnp.exp(logits - m)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhqs,bshk->bhqk", p.astype(v_l.dtype), v_l,
+                       preferred_element_type=jnp.float32)
+        # exact combine across shards (guard all-masked shards)
+        m = jnp.where(jnp.isfinite(m), m, NEG_INF)
+        g_m = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - g_m)
+        l_g = jax.lax.psum(l * corr, axis)
+        o_g = jax.lax.psum(o * corr, axis)
+        out = (o_g / jnp.maximum(l_g, 1e-30)).transpose(0, 2, 1, 3)
+        return out.astype(q.dtype), k_loc, v_loc
+
+    batch_rule = topo.rules["batch"] if axis != "data" else None
+    pspec_cache = P(batch_rule, axis, None, None)
+    rep = P(batch_rule, None, None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, pspec_cache, pspec_cache, rep, rep, P(batch_rule),
+                  P(batch_rule)),
+        out_specs=(rep, pspec_cache, pspec_cache), check_vma=False,
+    )(q, k_cache, v_cache, k_new, v_new, slot, valid_len)

@@ -1,0 +1,405 @@
+"""Block assembly and layer stacking.
+
+A block = pre-norm mixer (attn / mamba / mlstm / slstm) + pre-norm FFN
+(dense / moe / none), with optional parallel-residual (command-r) and
+cross-attention (enc-dec decoders).
+
+Layer stacks are decomposed into `prefix + pattern × n_repeat` (e.g.
+deepseek: 1 dense layer + 27 MoE; jamba: 4 × an 8-layer period). The
+repeated pattern is executed with `lax.scan` over stacked params —
+compile time and HLO size stay O(pattern), not O(n_layers) — with
+optional per-step remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    FFN_DENSE,
+    FFN_MOE,
+    FFN_NONE,
+    MIXER_ATTN,
+    MIXER_MAMBA,
+    MIXER_MLSTM,
+    MIXER_SLSTM,
+    LayerSpec,
+    ModelConfig,
+)
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import ParamDef
+from repro.models.mlp import apply_mlp, mlp_defs
+from repro.models.moe import apply_moe, moe_defs
+from repro.models.norms import apply_norm, norm_defs
+from repro.sharding.rules import BATCH, EMBED, KV_HEADS, KV_SEQ, SEQ, Topology
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+
+class LayerGroups(NamedTuple):
+    prefix: tuple[LayerSpec, ...]
+    pattern: tuple[LayerSpec, ...]
+    n_repeat: int
+
+
+def layer_groups(specs: tuple[LayerSpec, ...], max_period: int = 12) -> LayerGroups:
+    n = len(specs)
+    for prefix_len in range(0, n):
+        rest = specs[prefix_len:]
+        m = len(rest)
+        for p in range(1, min(max_period, m) + 1):
+            if m % p:
+                continue
+            if all(rest[i] == rest[i % p] for i in range(m)):
+                return LayerGroups(specs[:prefix_len], rest[:p], m // p)
+    return LayerGroups(specs[:-1], specs[-1:], 1)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
+    d = {"norm1": norm_defs(cfg.d_model, cfg.norm)}
+    if spec.mixer == MIXER_ATTN:
+        d["mixer"] = attn_mod.attn_defs(cfg)
+    elif spec.mixer == MIXER_MAMBA:
+        d["mixer"] = mamba_mod.mamba_defs(cfg)
+    elif spec.mixer == MIXER_MLSTM:
+        d["mixer"] = xlstm_mod.mlstm_defs(cfg)
+    elif spec.mixer == MIXER_SLSTM:
+        d["mixer"] = xlstm_mod.slstm_defs(cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        d["norm_cross"] = norm_defs(cfg.d_model, cfg.norm)
+        d["cross"] = attn_mod.attn_defs(cfg)
+    if spec.ffn == FFN_DENSE:
+        d["ffn"] = mlp_defs(cfg)
+        if not cfg.parallel_block:
+            d["norm2"] = norm_defs(cfg.d_model, cfg.norm)
+    elif spec.ffn == FFN_MOE:
+        d["ffn"] = moe_defs(cfg)
+        if not cfg.parallel_block:
+            d["norm2"] = norm_defs(cfg.d_model, cfg.norm)
+    return d
+
+
+def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     cache_len: int, dtype, cross_len: int = 0):
+    """Decode-time cache entry for one block."""
+    hd = cfg.resolved_head_dim
+    if spec.mixer == MIXER_ATTN:
+        cache = {
+            "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        }
+    elif spec.mixer == MIXER_MAMBA:
+        cache = mamba_mod.init_mamba_state(cfg, batch, dtype)._asdict()
+    elif spec.mixer == MIXER_MLSTM:
+        cache = xlstm_mod.init_mlstm_state(cfg, batch, dtype)._asdict()
+    elif spec.mixer == MIXER_SLSTM:
+        cache = xlstm_mod.init_slstm_state(cfg, batch)._asdict()
+    else:
+        raise ValueError(spec.mixer)
+    if cross_len:
+        cache["cross_k"] = jnp.zeros((batch, cross_len, cfg.n_kv_heads, hd), dtype)
+        cache["cross_v"] = jnp.zeros((batch, cross_len, cfg.n_kv_heads, hd), dtype)
+    return cache
+
+
+def block_cache_logical(cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
+    """Logical axes for each cache leaf (mirrors init_block_cache)."""
+    if spec.mixer == MIXER_ATTN:
+        out = {"k": (BATCH, KV_SEQ, KV_HEADS, None),
+               "v": (BATCH, KV_SEQ, KV_HEADS, None)}
+    elif spec.mixer == MIXER_MAMBA:
+        out = {"ssm": (BATCH, "inner", None), "conv": (BATCH, None, "inner")}
+    elif spec.mixer == MIXER_MLSTM:
+        out = {"c": (BATCH, None, "head_dim", None), "n": (BATCH, None, "head_dim"),
+               "m": (BATCH, None), "conv": (BATCH, None, "inner")}
+    elif spec.mixer == MIXER_SLSTM:
+        out = {"c": (BATCH, None), "n": (BATCH, None), "h": (BATCH, None),
+               "m": (BATCH, None)}
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        out["cross_k"] = (BATCH, None, KV_HEADS, None)
+        out["cross_v"] = (BATCH, None, KV_HEADS, None)
+    return out
+
+
+def _apply_attn_full(params, x, cfg, topo, positions):
+    q, k, v = attn_mod.project_qkv(params, x, cfg, positions)
+    o = attn_mod.attention(q, k, v, causal=True)
+    return attn_mod.out_proj(params, o), {"k": k, "v": v}
+
+
+def _apply_attn_bidir(params, x, cfg, topo, positions):
+    q, k, v = attn_mod.project_qkv(params, x, cfg, positions)
+    o = attn_mod.attention(q, k, v, causal=False)
+    return attn_mod.out_proj(params, o), None
+
+
+def _apply_attn_decode(params, x, cfg, topo, cache, pos):
+    """x: (B,1,d); cache k/v (B,S,KV,hd); pos (B,) current write index."""
+    positions = pos[:, None]
+    q, k_new, v_new = attn_mod.project_qkv(params, x, cfg, positions)
+    s = cache["k"].shape[1]
+    slot = jnp.minimum(pos, s - 1)  # ring write
+    if topo is not None and topo.rules.get(KV_SEQ):
+        o, k_c, v_c = attn_mod.decode_attention_seqsharded(
+            q, cache["k"], cache["v"], k_new, v_new, slot, pos, topo)
+    else:
+        k_c, v_c = attn_mod.write_kv_slot(cache["k"], cache["v"], k_new,
+                                          v_new, slot)
+        o = attn_mod.decode_attention(q, k_c, v_c, slot, valid_len=pos)
+    new_cache = {"k": k_c, "v": v_c}
+    return attn_mod.out_proj(params, o), new_cache
+
+
+def _apply_cross_attn(params, x, cfg, topo, k_c, v_c):
+    """Decoder cross-attention over encoder K/V."""
+    q, _, _ = attn_mod.project_qkv(params, x, cfg, rope=False)
+    o = attn_mod.attention(q, k_c, v_c, causal=False)
+    return attn_mod.out_proj(params, o)
+
+
+def cross_kv(params, enc_out, cfg):
+    """Precompute encoder K/V for decoder cross-attention."""
+    _, k, v = attn_mod.project_qkv(params, enc_out, cfg, rope=False)
+    return k, v
+
+
+def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
+                *, mode: str = "full", positions=None, cache: Optional[dict] = None,
+                pos=None, enc_out=None):
+    """Returns (x, new_cache, aux).
+
+    mode: "full" (train: no cache IO), "prefill" (returns built cache),
+    "decode" (single token, consumes + updates cache), "encode"
+    (bidirectional, no cache).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    new_cache: dict = {}
+
+    if spec.mixer == MIXER_ATTN:
+        if mode == "decode":
+            mix_out, kv = _apply_attn_decode(params["mixer"], h, cfg, topo,
+                                             cache, pos)
+            new_cache.update(kv)
+        elif mode == "encode":
+            mix_out, _ = _apply_attn_bidir(params["mixer"], h, cfg, topo,
+                                           positions)
+        else:
+            mix_out, kv = _apply_attn_full(params["mixer"], h, cfg, topo,
+                                           positions)
+            if mode == "prefill":
+                new_cache.update(kv)
+    elif spec.mixer == MIXER_MAMBA:
+        if mode == "decode":
+            st = mamba_mod.MambaState(**{k: cache[k] for k in ("ssm", "conv")})
+            mix_out, st2 = mamba_mod.mamba_decode_step(params["mixer"], h, cfg, st)
+        else:
+            mix_out, st2 = mamba_mod.apply_mamba(params["mixer"], h, cfg, topo)
+        if mode in ("decode", "prefill"):
+            new_cache.update(st2._asdict())
+    elif spec.mixer == MIXER_MLSTM:
+        if mode == "decode":
+            st = xlstm_mod.MLSTMState(**{k: cache[k] for k in ("c", "n", "m", "conv")})
+            mix_out, st2 = xlstm_mod.mlstm_decode_step(params["mixer"], h, cfg, st)
+        else:
+            mix_out, st2 = xlstm_mod.apply_mlstm(params["mixer"], h, cfg, topo)
+        if mode in ("decode", "prefill"):
+            new_cache.update(st2._asdict())
+    elif spec.mixer == MIXER_SLSTM:
+        if mode == "decode":
+            st = xlstm_mod.SLSTMState(**{k: cache[k] for k in ("c", "n", "h", "m")})
+            mix_out, st2 = xlstm_mod.slstm_decode_step(params["mixer"], h, cfg, st)
+        else:
+            mix_out, st2 = xlstm_mod.apply_slstm(params["mixer"], h, cfg, topo)
+        if mode in ("decode", "prefill"):
+            new_cache.update(st2._asdict())
+    else:
+        raise ValueError(spec.mixer)
+
+    if "cross" in params:
+        xc = x + mix_out
+        hc = apply_norm(params["norm_cross"], xc, cfg.norm)
+        if mode == "decode":
+            k_c, v_c = cache["cross_k"], cache["cross_v"]
+            new_cache["cross_k"], new_cache["cross_v"] = k_c, v_c
+        else:
+            k_c, v_c = cross_kv(params["cross"], enc_out, cfg)
+            if mode == "prefill":
+                new_cache["cross_k"], new_cache["cross_v"] = k_c, v_c
+        mix_out = mix_out + _apply_cross_attn(params["cross"], hc, cfg, topo,
+                                              k_c, v_c)
+
+    if cfg.parallel_block and spec.ffn != FFN_NONE:
+        # command-r: y = x + attn(n(x)) + ffn(n(x)) (shared norm)
+        if spec.ffn == FFN_MOE:
+            ffn_out, aux_l = apply_moe(params["ffn"], h, cfg, topo)
+            aux = aux + aux_l
+        else:
+            ffn_out = apply_mlp(params["ffn"], h, cfg)
+        x = x + mix_out + ffn_out
+        return x, new_cache, aux
+
+    x = x + mix_out
+    if spec.ffn != FFN_NONE:
+        h2 = apply_norm(params["norm2"], x, cfg.norm)
+        if spec.ffn == FFN_MOE:
+            ffn_out, aux_l = apply_moe(params["ffn"], h2, cfg, topo)
+            aux = aux + aux_l
+        else:
+            ffn_out = apply_mlp(params["ffn"], h2, cfg)
+        x = x + ffn_out
+    if topo is not None:
+        x = topo.constrain(x, BATCH, SEQ, EMBED)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks (prefix + scanned pattern)
+# ---------------------------------------------------------------------------
+
+
+def stack_defs(cfg: ModelConfig, specs: tuple[LayerSpec, ...],
+               cross: bool = False) -> dict:
+    groups = layer_groups(specs)
+    d: dict = {"prefix": [block_defs(cfg, s, cross) for s in groups.prefix]}
+    if groups.n_repeat:
+        pat = {f"l{j}": block_defs(cfg, s, cross)
+               for j, s in enumerate(groups.pattern)}
+        d["stack"] = jax.tree.map(
+            lambda pd: pd.stacked(groups.n_repeat), pat,
+            is_leaf=lambda x: isinstance(x, ParamDef))
+    return d
+
+
+def pad_cache(cache, cache_len: int):
+    """Pad attention K/V cache seq axes (axis = ndim-3) out to cache_len
+    so decode has ring-write headroom. SSM states and cross K/V are
+    untouched."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("k", "v"):
+                    ax = v.ndim - 3
+                    if v.shape[ax] < cache_len:
+                        pad = [(0, 0)] * v.ndim
+                        pad[ax] = (0, cache_len - v.shape[ax])
+                        v = jnp.pad(v, pad)
+                    out[k] = v
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, list):
+            return [walk(x) for x in node]
+        return node
+
+    return walk(cache)
+
+
+def stack_cache_init(cfg: ModelConfig, specs, batch: int, cache_len: int,
+                     dtype, cross_len: int = 0):
+    groups = layer_groups(specs)
+    cache: dict = {"prefix": [
+        init_block_cache(cfg, s, batch, cache_len, dtype, cross_len)
+        for s in groups.prefix]}
+    if groups.n_repeat:
+        pat = {f"l{j}": init_block_cache(cfg, s, batch, cache_len, dtype,
+                                         cross_len)
+               for j, s in enumerate(groups.pattern)}
+        cache["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (groups.n_repeat, *a.shape)).copy(),
+            pat)
+    return cache
+
+
+def apply_stack(params, x, cfg: ModelConfig, topo: Topology, specs,
+                *, mode="full", positions=None, cache=None, pos=None,
+                remat: str = "block", enc_out=None, scan: bool = True):
+    """Run the full layer stack. Returns (x, new_cache, aux).
+
+    scan=True executes the repeated pattern with lax.scan (small HLO,
+    fast compile); scan=False unrolls it (one HLO copy per repeat —
+    required for faithful cost_analysis, which counts loop bodies once).
+    """
+    groups = layer_groups(specs)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {"prefix": []}
+
+    for i, spec in enumerate(groups.prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = apply_block(params["prefix"][i], x, cfg, topo, spec,
+                                 mode=mode, positions=positions, cache=c,
+                                 pos=pos, enc_out=enc_out)
+        new_cache["prefix"].append(nc)
+        aux_total = aux_total + aux
+
+    if not groups.n_repeat:
+        return x, new_cache, aux_total
+
+    use_cache = cache is not None
+
+    if not scan:
+        # Unrolled execution (dry-run roofline fidelity).
+        def one_repeat(x, aux_acc, p_slice, c_slice):
+            ncs = {}
+            for j, spec in enumerate(groups.pattern):
+                cj = c_slice[f"l{j}"] if use_cache else None
+                x, ncj, aux = apply_block(p_slice[f"l{j}"], x, cfg, topo,
+                                          spec, mode=mode,
+                                          positions=positions, cache=cj,
+                                          pos=pos, enc_out=enc_out)
+                ncs[f"l{j}"] = ncj
+                aux_acc = aux_acc + aux
+            return x, aux_acc, ncs
+
+        if remat == "block":
+            one_repeat = jax.checkpoint(one_repeat)
+        nc_list = []
+        for i in range(groups.n_repeat):
+            p_slice = jax.tree.map(lambda a: a[i], params["stack"])
+            c_slice = (jax.tree.map(lambda a: a[i], cache["stack"])
+                       if use_cache else None)
+            x, aux_total, ncs = one_repeat(x, aux_total, p_slice, c_slice)
+            nc_list.append(ncs)
+        if nc_list and jax.tree.leaves(nc_list[0]):
+            new_cache["stack"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *nc_list)
+        return x, new_cache, aux_total
+
+    def body(carry, xs):
+        xx, aux_acc = carry
+        p_slice = xs[0]
+        c_slice = xs[1] if use_cache else None
+        ncs = {}
+        for j, spec in enumerate(groups.pattern):
+            cj = c_slice[f"l{j}"] if use_cache else None
+            xx, ncj, aux = apply_block(p_slice[f"l{j}"], xx, cfg, topo, spec,
+                                       mode=mode, positions=positions,
+                                       cache=cj, pos=pos, enc_out=enc_out)
+            ncs[f"l{j}"] = ncj
+            aux_acc = aux_acc + aux
+        return (xx, aux_acc), ncs
+
+    if remat == "block":
+        body = jax.checkpoint(body)
+    xs = (params["stack"], cache["stack"]) if use_cache else (params["stack"],)
+    (x, aux_total), stack_cache = jax.lax.scan(body, (x, aux_total), xs)
+    new_cache["stack"] = stack_cache
+    return x, new_cache, aux_total

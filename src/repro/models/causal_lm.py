@@ -1,0 +1,163 @@
+"""Decoder-only causal LM (dense / MoE / SSM / hybrid / VLM families).
+
+Public surface:
+  model = CausalLM(cfg, topo)
+  params = model.init(key)             # or model.abstract_params() for AOT
+  loss, metrics = model.loss(params, batch)
+  cache, logits = model.prefill(params, batch)
+  logits, cache = model.decode_step(params, cache, token, pos)
+
+Batch dict:
+  tokens: (B, S_text) int32
+  targets/loss_mask: (B, S) — training only
+  embeds: (B, P, d) — VLM/audio frontends: precomputed prefix embeddings
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.common import (
+    DTYPES,
+    ParamDef,
+    abstract_params,
+    einsum,
+    init_params,
+    param_shardings,
+)
+from repro.models.norms import apply_norm, norm_defs
+from repro.sharding.rules import BATCH, EMBED, SEQ, VOCAB, Topology
+
+
+class CausalLM:
+    def __init__(self, cfg: ModelConfig, topo: Topology,
+                 remat: str = "block", scan_layers: bool = True):
+        assert not cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.topo = topo
+        self.remat = remat
+        self.scan_layers = scan_layers
+        self.specs = cfg.layer_specs()
+
+    # ------------------------------------------------------------- params
+    def defs(self) -> dict:
+        cfg = self.cfg
+        d: dict = {
+            "embed": ParamDef((cfg.padded_vocab, cfg.d_model), (VOCAB, EMBED),
+                              init="embed", scale=0.02),
+            "blocks": blocks.stack_defs(cfg, self.specs),
+            "final_norm": norm_defs(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                 (EMBED, VOCAB))
+        return d
+
+    def init(self, key) -> Any:
+        return init_params(key, self.defs(), self.cfg.dtype)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.defs(), self.cfg.dtype, self.topo)
+
+    def param_shardings(self) -> Any:
+        return param_shardings(self.defs(), self.topo)
+
+    # ------------------------------------------------------------ forward
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tok_emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.frontend != "none" and "embeds" in batch:
+            x = jnp.concatenate(
+                [batch["embeds"].astype(tok_emb.dtype), tok_emb], axis=1)
+        else:
+            x = tok_emb
+        return self.topo.constrain(x, BATCH, SEQ, EMBED)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = einsum("bsd,dv->bsv", x, head, dtype=jnp.float32)
+        # mask padded vocab entries
+        pad_mask = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+        logits = logits + pad_mask
+        return self.topo.constrain(logits, BATCH, SEQ, VOCAB)
+
+    def forward(self, params, batch, mode: str = "full"):
+        """Returns (logits, cache_or_None, aux)."""
+        x = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, cache, aux = blocks.apply_stack(
+            params["blocks"], x, self.cfg, self.topo, self.specs,
+            mode=mode, positions=positions, remat=self.remat,
+            scan=self.scan_layers)
+        return self._logits(params, x), cache, aux
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        logits, _, aux = self.forward(params, batch, mode="full")
+        return lm_loss(logits, batch, self.cfg, aux)
+
+    # -------------------------------------------------------------- serve
+    def prefill(self, params, batch, cache_len: int | None = None):
+        logits, cache, _ = self.forward(params, batch, mode="prefill")
+        if cache_len is not None:
+            cache = blocks.pad_cache(cache, cache_len)
+        return cache, logits[:, -1:]
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        return blocks.stack_cache_init(
+            self.cfg, self.specs, batch_size, cache_len,
+            DTYPES[self.cfg.dtype])
+
+    def cache_shardings(self):
+        return _cache_shardings(self.cfg, self.specs, self.topo)
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,1) int32; pos: (B,) int32 write/mask index."""
+        x = jnp.take(params["embed"], token, axis=0)
+        x, new_cache, _ = blocks.apply_stack(
+            params["blocks"], x, self.cfg, self.topo, self.specs,
+            mode="decode", cache=cache, pos=pos, remat="none",
+            scan=self.scan_layers)
+        return self._logits(params, x), new_cache
+
+
+def lm_loss(logits, batch, cfg: ModelConfig, aux):
+    """Cross-entropy over unpadded vocab + router aux."""
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    # align: logits predict the NEXT token; batch supplies aligned targets
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    total = ce + cfg.router_aux_loss * aux
+    metrics = {"ce": ce, "aux": aux, "tokens": denom}
+    return total, metrics
+
+
+def _cache_shardings(cfg, specs, topo: Topology):
+    groups = blocks.layer_groups(specs)
+    out: dict = {"prefix": []}
+
+    def entry(spec, stacked: bool):
+        logical = blocks.block_cache_logical(cfg, spec, cfg.is_encoder_decoder)
+        return {
+            k: topo.named(("layers", *ax) if stacked else ax)
+            for k, ax in logical.items()
+        }
+
+    for s in groups.prefix:
+        out["prefix"].append(entry(s, False))
+    if groups.n_repeat:
+        out["stack"] = {f"l{j}": entry(s, True)
+                        for j, s in enumerate(groups.pattern)}
+    return out

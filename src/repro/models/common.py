@@ -1,0 +1,125 @@
+"""Spec-first parameter machinery.
+
+Every module declares its parameters as a pytree of `ParamDef`s (shape +
+logical axes + initializer). Params, shardings, and dry-run
+ShapeDtypeStructs are all derived from the same tree, so they can never
+drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import LAYERS, Topology
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "fan_in"  # fan_in | zeros | ones | normal | embed
+    scale: float = 1.0
+    dtype: Optional[Any] = None  # override model dtype (e.g. fp32 gates)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def stacked(self, n: int) -> "ParamDef":
+        return dataclasses.replace(
+            self, shape=(n, *self.shape), logical=(LAYERS, *self.logical)
+        )
+
+
+ParamTree = Any  # nested dict of jnp arrays
+DefTree = Any  # nested dict of ParamDef
+
+
+def _init_one(key, d: ParamDef, default_dtype):
+    dtype = d.dtype or default_dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    if d.init == "embed":
+        return (d.scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / np.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_params(key, defs: DefTree, dtype_name: str) -> ParamTree:
+    """Materialise a DefTree into arrays (deterministic per-leaf keys)."""
+    default_dtype = DTYPES[dtype_name]
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, d, default_dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: DefTree, dtype_name: str, topo: Topology) -> ParamTree:
+    """ShapeDtypeStructs with shardings attached — for AOT dry-runs."""
+    default_dtype = DTYPES[dtype_name]
+
+    def mk(d: ParamDef):
+        dt = d.dtype or default_dtype
+        sh = topo.named(d.logical, fsdp=True, shape=d.shape)
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sh)
+
+    return jax.tree.map(mk, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_shardings(defs: DefTree, topo: Topology):
+    return jax.tree.map(
+        lambda d: topo.named(d.logical, fsdp=True, shape=d.shape),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def param_bytes(defs: DefTree, dtype_name: str) -> int:
+    dt = DTYPES[dtype_name]
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)):
+        itemsize = jnp.dtype(d.dtype or dt).itemsize
+        total += int(np.prod(d.shape)) * itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def matmul(x, w, dtype=None):
+    """Matmul emitting the model dtype directly (MXU-faithful: the TPU
+    MXU accumulates fp32 internally regardless of the HLO output dtype,
+    so emitting bf16 rounds once at the output — same numerics as
+    fp32-accumulate-then-convert, without the fp32 fusion-boundary
+    tensors that double HBM traffic)."""
+    return jnp.matmul(x, w, preferred_element_type=dtype or x.dtype)
+
+
+def einsum(subs, *args, dtype=None):
+    """Einsum emitting `dtype` (default: input dtype). Pass
+    dtype=jnp.float32 only where downstream math genuinely needs wide
+    outputs (logits, router scores, gate exponents)."""
+    return jnp.einsum(subs, *args, preferred_element_type=dtype or args[0].dtype)
+
+
+def einsum_out(subs, *args):
+    """Alias of einsum at input dtype — marks psum-adjacent projections
+    (bf16 partial sums over ICI; standard Megatron-style practice)."""
+    return jnp.einsum(subs, *args, preferred_element_type=args[0].dtype)

@@ -1,0 +1,135 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+Encoder consumes frontend frame embeddings (audio stub) or token
+embeddings; decoder is causal with per-layer cross-attention. Decode
+carries a self-attention KV cache plus precomputed cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.causal_lm import lm_loss
+from repro.models.common import (
+    DTYPES,
+    ParamDef,
+    abstract_params,
+    einsum,
+    init_params,
+    param_shardings,
+)
+from repro.models.norms import apply_norm, norm_defs
+from repro.sharding.rules import BATCH, EMBED, SEQ, VOCAB, Topology
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, topo: Topology, remat: str = "block",
+                 scan_layers: bool = True):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.topo = topo
+        self.remat = remat
+        self.scan_layers = scan_layers
+        self.enc_specs = cfg.encoder_layer_specs()
+        self.dec_specs = cfg.layer_specs()
+
+    def defs(self) -> dict:
+        cfg = self.cfg
+        d: dict = {
+            "embed": ParamDef((cfg.padded_vocab, cfg.d_model), (VOCAB, EMBED),
+                              init="embed", scale=0.02),
+            "encoder": blocks.stack_defs(cfg, self.enc_specs, cross=False),
+            "enc_norm": norm_defs(cfg.d_model, cfg.norm),
+            "decoder": blocks.stack_defs(cfg, self.dec_specs, cross=True),
+            "final_norm": norm_defs(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                 (EMBED, VOCAB))
+        return d
+
+    def init(self, key) -> Any:
+        return init_params(key, self.defs(), self.cfg.dtype)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.defs(), self.cfg.dtype, self.topo)
+
+    def param_shardings(self) -> Any:
+        return param_shardings(self.defs(), self.topo)
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = batch["frames"].astype(DTYPES[cfg.dtype])
+        else:
+            x = jnp.take(params["embed"], batch["enc_tokens"], axis=0)
+        x = self.topo.constrain(x, BATCH, SEQ, EMBED)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, _, _ = blocks.apply_stack(
+            params["encoder"], x, cfg, self.topo, self.enc_specs,
+            mode="encode", positions=positions, remat=self.remat,
+            scan=self.scan_layers)
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    # ------------------------------------------------------------ decoder
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = einsum("bsd,dv->bsv", x, head, dtype=jnp.float32)
+        pad_mask = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30)
+        return logits + pad_mask
+
+    def forward(self, params, batch, mode: str = "full"):
+        enc_out = self.encode(params, batch)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = self.topo.constrain(x, BATCH, SEQ, EMBED)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, cache, aux = blocks.apply_stack(
+            params["decoder"], x, self.cfg, self.topo, self.dec_specs,
+            mode=mode, positions=positions, remat=self.remat, enc_out=enc_out,
+            scan=self.scan_layers)
+        return self._logits(params, x), cache, aux
+
+    def loss(self, params, batch):
+        logits, _, aux = self.forward(params, batch, mode="full")
+        return lm_loss(logits, batch, self.cfg, aux)
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        logits, cache, _ = self.forward(params, batch, mode="prefill")
+        if cache_len is not None:
+            cache = blocks.pad_cache(cache, cache_len)
+        return cache, logits[:, -1:]
+
+    def init_cache(self, batch_size: int, cache_len: int, cross_len: int):
+        return blocks.stack_cache_init(
+            self.cfg, self.dec_specs, batch_size, cache_len,
+            DTYPES[self.cfg.dtype], cross_len=cross_len)
+
+    def cache_shardings(self):
+        from repro.models.causal_lm import _cache_shardings
+
+        return _cache_shardings(self.cfg, self.dec_specs, self.topo)
+
+    def decode_step(self, params, cache, token, pos):
+        x = jnp.take(params["embed"], token, axis=0)
+        x, new_cache, _ = blocks.apply_stack(
+            params["decoder"], x, self.cfg, self.topo, self.dec_specs,
+            mode="decode", cache=cache, pos=pos, remat="none",
+            scan=self.scan_layers)
+        return self._logits(params, x), new_cache
+
+
+def build_model(cfg: ModelConfig, topo: Topology, remat: str = "block",
+                scan_layers: bool = True):
+    from repro.models.causal_lm import CausalLM
+
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg, topo, remat, scan_layers)
+    return CausalLM(cfg, topo, remat, scan_layers)

@@ -1,0 +1,164 @@
+"""Mamba-1 selective SSM mixer.
+
+Training/prefill uses a chunked parallel scan: `lax.scan` over sequence
+chunks with a `lax.associative_scan` inside each chunk, so the
+materialised state tensor is (B, chunk, d_inner, d_state) instead of
+(B, T, d_inner, d_state). Decode is the exact single-step recurrence
+with (ssm_state, conv_state) carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, einsum, einsum_out
+from repro.sharding.rules import CONV, EMBED, INNER, STATE, Topology
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    k = cfg.mamba_d_conv
+    dtr = _dt_rank(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * di), (EMBED, INNER)),
+        "conv_w": ParamDef((k, di), (CONV, INNER), scale=0.5),
+        "conv_b": ParamDef((di,), (INNER,), init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * ds), (INNER, None)),
+        "dt_proj": ParamDef((dtr, di), (None, INNER)),
+        "dt_bias": ParamDef((di,), (INNER,), init="zeros"),
+        "A_log": ParamDef((di, ds), (INNER, STATE), init="ones"),
+        "D": ParamDef((di,), (INNER,), init="ones"),
+        "out_proj": ParamDef((di, d), (INNER, EMBED)),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array  # (B, d_inner, d_state) fp32
+    conv: jax.Array  # (B, d_conv - 1, d_inner)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    di = cfg.mamba_expand * cfg.d_model
+    return MambaState(
+        ssm=jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    )
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along seq. x: (B,T,di); conv_w: (k,di)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+k-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(k))
+    return out + conv_b, xp[:, -(k - 1):]  # new conv state = last k-1 inputs
+
+
+def _ssm_inputs(params, xc, cfg: ModelConfig):
+    """xc: (B,T,di) post-conv post-act. Returns deltaA (B,T,di,ds) and
+    deltaBx (B,T,di,ds) plus C-matrix (B,T,ds)."""
+    dtr = _dt_rank(cfg)
+    ds = cfg.mamba_d_state
+    proj = einsum("btd,de->bte", xc, params["x_proj"], dtype=jnp.float32)
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        einsum("btr,rd->btd", dt.astype(xc.dtype), params["dt_proj"],
+               dtype=jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, ds)
+    delta_a = jnp.exp(dt[..., None] * a)  # (B,T,di,ds)
+    delta_bx = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    return delta_a, delta_bx, cmat
+
+
+def _scan_chunk(carry_h, delta_a, delta_bx):
+    """Associative scan within one chunk. carry_h: (B,di,ds)."""
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    cum_a, h_local = jax.lax.associative_scan(
+        combine, (delta_a, delta_bx), axis=1)
+    h = h_local + cum_a * carry_h[:, None]
+    return h, h[:, -1]
+
+
+def apply_mamba(params, x, cfg: ModelConfig, topo: Topology | None = None,
+                state: MambaState | None = None):
+    """Full-sequence mixer. x: (B,T,d) -> (y (B,T,d), final MambaState)."""
+    b, t, d = x.shape
+    di = cfg.mamba_expand * d
+    xz = einsum("btd,de->bte", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    if topo is not None:
+        xin = topo.constrain(xin, "batch", None, INNER)
+    conv_state = state.conv if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    delta_a, delta_bx, cmat = _ssm_inputs(params, xc, cfg)
+
+    h0 = state.ssm if state is not None else jnp.zeros(
+        (b, di, cfg.mamba_d_state), jnp.float32)
+    chunk = min(cfg.chunk_size, t)
+    if t % chunk:
+        chunk = t  # fallback: single chunk
+    nc = t // chunk
+
+    def body(h, inp):
+        da, dbx = inp
+        hs, h_new = _scan_chunk(h, da, dbx)
+        return h_new, hs
+
+    da_c = delta_a.reshape(b, nc, chunk, di, -1).swapaxes(0, 1)
+    dbx_c = delta_bx.reshape(b, nc, chunk, di, -1).swapaxes(0, 1)
+    h_final, hs = jax.lax.scan(body, h0, (da_c, dbx_c))
+    hs = hs.swapaxes(0, 1).reshape(b, t, di, -1)
+    y = jnp.einsum("btds,bts->btd", hs, cmat,
+                   preferred_element_type=jnp.float32)
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = einsum_out("bte,ed->btd", y, params["out_proj"])
+    return out, MambaState(ssm=h_final, conv=new_conv)
+
+
+def mamba_decode_step(params, x, cfg: ModelConfig, state: MambaState):
+    """x: (B,1,d) -> (y (B,1,d), new state). Exact recurrence."""
+    b = x.shape[0]
+    xz = einsum("btd,de->bte", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                state.conv)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    delta_a, delta_bx, cmat = _ssm_inputs(params, xc, cfg)
+    h = delta_a[:, 0] * state.ssm + delta_bx[:, 0]  # (B,di,ds)
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0],
+                   preferred_element_type=jnp.float32)[:, None]
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = einsum_out("bte,ed->btd", y, params["out_proj"])
+    return out, MambaState(ssm=h, conv=new_conv)
+
+
+def mamba_ref(params, x, cfg: ModelConfig):
+    """Pure sequential reference (oracle for tests)."""
+    b, t, d = x.shape
+    state = init_mamba_state(cfg, b, x.dtype)
+    ys = []
+    for i in range(t):
+        y, state = mamba_decode_step(params, x[:, i:i + 1], cfg, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state

@@ -1,0 +1,51 @@
+"""Channel-mixing FFNs: SwiGLU / GeGLU / non-gated GELU(+bias)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, einsum, einsum_out
+from repro.sharding.rules import EMBED, FFN
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        defs = {
+            "w_gate": ParamDef((d, f), (EMBED, FFN)),
+            "w_up": ParamDef((d, f), (EMBED, FFN)),
+            "w_down": ParamDef((f, d), (FFN, EMBED)),
+        }
+    else:  # non-gated
+        defs = {
+            "w_up": ParamDef((d, f), (EMBED, FFN)),
+            "w_down": ParamDef((f, d), (FFN, EMBED)),
+        }
+    if cfg.mlp_bias:
+        defs["b_up"] = ParamDef((f,), (FFN,), init="zeros")
+        defs["b_down"] = ParamDef((d,), (EMBED,), init="zeros")
+    return defs
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.mlp_variant == "swiglu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x)
+
+
+def apply_mlp(params: dict, x, cfg: ModelConfig):
+    """x: (..., d_model)."""
+    up = einsum("...d,df->...f", x, params["w_up"])
+    if "b_up" in params:
+        up = up + params["b_up"]
+    if "w_gate" in params:
+        gate = einsum("...d,df->...f", x, params["w_gate"])
+        h = _act(cfg, gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = _act(cfg, up.astype(jnp.float32)).astype(x.dtype)
+    y = einsum_out("...f,fd->...d", h, params["w_down"])
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y

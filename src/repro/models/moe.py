@@ -1,0 +1,325 @@
+"""Mixture-of-Experts FFN.
+
+Execution paths:
+
+* `moe_dense_oracle` — computes every expert for every token, weighted by
+  the router. O(E·T·d·f): tests-only correctness oracle.
+* `apply_moe` — production path under `shard_map`:
+  - tokens are local to each data shard (no global sort);
+  - **EP** (experts sharded over `model`): each model shard additionally
+    takes a 1/ep slice of the local tokens, routes them, packs a static
+    `(E, cap, d)` buffer via argsort-by-expert, `all_to_all` exchanges
+    expert buffers, batched expert matmuls run on the local E/ep experts,
+    a second `all_to_all` returns outputs, and an `all_gather` restores
+    the token axis. This is the Switch/MegaBlocks dispatch mapped onto
+    TPU ICI collectives.
+  - **TP-in-expert** fallback (expert FFN dim sharded over `model`):
+    dispatch is replicated over `model`, expert matmuls are sliced on the
+    FFN dim, outputs psum over `model`. Used when E doesn't divide the
+    mesh or per-token work is too small for all_to_all (decode).
+
+Capacity-factor token dropping follows standard practice: overflow
+tokens contribute zero and flow through the residual. Router aux loss is
+Switch-style `E · Σ_e f_e · p_e`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, einsum
+from repro.models.mlp import apply_mlp
+from repro.sharding.rules import BATCH, EMBED, EXPERT_FFN, EXPERTS, Topology
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    defs = {
+        "router": ParamDef((d, e), (EMBED, EXPERTS)),
+        "w_gate": ParamDef((e, d, f), (EXPERTS, EMBED, EXPERT_FFN)),
+        "w_up": ParamDef((e, d, f), (EXPERTS, EMBED, EXPERT_FFN)),
+        "w_down": ParamDef((e, f, d), (EXPERTS, EXPERT_FFN, EMBED)),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared"] = {
+            "w_gate": ParamDef((d, fs), (EMBED, EXPERT_FFN)),
+            "w_up": ParamDef((d, fs), (EMBED, EXPERT_FFN)),
+            "w_down": ParamDef((fs, d), (EXPERT_FFN, EMBED)),
+        }
+    return defs
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.n_experts_per_token
+            / cfg.n_experts)
+    return max(cfg.n_experts_per_token, c)
+
+
+def _router_probs(params, x, cfg: ModelConfig):
+    logits = einsum("...d,de->...e", x, params["router"], dtype=jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _aux_loss(probs, expert_ids, cfg: ModelConfig):
+    one_hot = jax.nn.one_hot(expert_ids, cfg.n_experts)  # (T, k, E)
+    f = one_hot.sum(axis=(0, 1)) / (probs.shape[0] * cfg.n_experts_per_token)
+    p = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(f * p)
+
+
+def _expert_ffn(cfg, w_gate, w_up, w_down, h):
+    """h: (E, C, d); weights (E, d, f)/(E, f, d) (possibly f-shards)."""
+    up = jnp.einsum("ecd,edf->ecf", h, w_up, preferred_element_type=jnp.float32)
+    gate = jnp.einsum("ecd,edf->ecf", h, w_gate,
+                      preferred_element_type=jnp.float32)
+    act = jax.nn.silu(gate) if cfg.mlp_variant == "swiglu" else jax.nn.gelu(gate)
+    inner = (act * up).astype(h.dtype)
+    return jnp.einsum("ecf,efd->ecd", inner, w_down,
+                      preferred_element_type=jnp.float32)
+
+
+def _dispatch(x_flat, expert_ids, cfg: ModelConfig, capacity: int):
+    """Pack tokens into a static (E, capacity, d) buffer, sorted by expert.
+
+    Returns (buffer, dst_e, dst_c, keep, token_idx, order)."""
+    t, d = x_flat.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    flat_ids = expert_ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_ids)  # stable
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=e)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - offsets[sorted_ids]
+    keep = rank < capacity
+    token_idx = order // k
+    dst_e = jnp.where(keep, sorted_ids, 0)
+    dst_c = jnp.where(keep, rank, 0)
+    src = x_flat[token_idx] * keep[:, None].astype(x_flat.dtype)
+    buf = jnp.zeros((e, capacity, d), x_flat.dtype).at[dst_e, dst_c].add(src)
+    return buf, dst_e, dst_c, keep, token_idx, order
+
+
+def _combine(out_buf, dst_e, dst_c, keep, token_idx, order, weights, t):
+    gathered = out_buf[dst_e, dst_c].astype(jnp.float32) * keep[:, None]
+    w_flat = weights.reshape(-1)[order]
+    d = gathered.shape[-1]
+    return jnp.zeros((t, d), jnp.float32).at[token_idx].add(
+        gathered * w_flat[:, None])
+
+
+def moe_routed_local(params, x_flat, cfg: ModelConfig, *, capacity: int,
+                     psum_axis: Optional[str] = None):
+    """Routed experts over local tokens (no shared experts). (T,d)->(T,d) fp32."""
+    t, _ = x_flat.shape
+    probs = _router_probs(params, x_flat, cfg)
+    weights, expert_ids = jax.lax.top_k(probs, cfg.n_experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    buf, dst_e, dst_c, keep, token_idx, order = _dispatch(
+        x_flat, expert_ids, cfg, capacity)
+    out_buf = _expert_ffn(cfg, params["w_gate"], params["w_up"],
+                          params["w_down"], buf)
+    if psum_axis is not None:
+        out_buf = jax.lax.psum(out_buf, psum_axis)
+    y = _combine(out_buf, dst_e, dst_c, keep, token_idx, order, weights, t)
+    aux = _aux_loss(probs, expert_ids, cfg)
+    return y, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig, topo: Topology):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    mesh = topo.mesh
+
+    if mesh.devices.size == 1:
+        x_flat = x.reshape(-1, d)
+        y, aux = moe_routed_local(params, x_flat, cfg,
+                                  capacity=_capacity(cfg, b * s))
+        if cfg.n_shared_experts:
+            y = y + apply_mlp(params["shared"], x_flat, cfg).astype(jnp.float32)
+        return y.astype(x.dtype).reshape(b, s, d), aux
+
+    data_axes = topo.data_axes
+    dp = topo.dp_size
+    ep = topo.tp_size
+    batch_rule = topo.rules[BATCH]
+    x_spec = P(batch_rule, None, None)
+    expert_rule = topo.rules[EXPERTS]
+    ffn_rule = topo.rules[EXPERT_FFN]
+    # local tokens per data shard
+    t_local = (b // max(dp, 1)) * s if batch_rule else b * s
+
+    use_ep = (expert_rule is not None and t_local % ep == 0
+              and t_local >= ep * cfg.n_experts_per_token)
+
+    if use_ep:
+        return _apply_moe_ep(params, x, cfg, topo, x_spec)
+    if expert_rule is not None:
+        # decode-sized token counts: weights stay expert-sharded; every
+        # shard routes the (tiny, already-replicated) token set against
+        # its local experts and outputs psum over `model`. Moves O(T·d)
+        # instead of all-gathering O(E·d·f) weights (§Perf H2:
+        # 158 GB/step -> ~MB/step on jamba decode).
+        return _apply_moe_ep_small(params, x, cfg, topo, x_spec)
+
+    # ---- TP-in-expert fallback: dispatch replicated over `model` -------
+    w_e = P(None, None, ffn_rule)
+    w_d = P(None, ffn_rule, None)
+    p_specs = {"router": P(None, None), "w_gate": w_e, "w_up": w_e,
+               "w_down": w_d}
+    if cfg.n_shared_experts:
+        p_specs["shared"] = {"w_gate": P(None, ffn_rule),
+                             "w_up": P(None, ffn_rule),
+                             "w_down": P(ffn_rule, None)}
+    capacity = _capacity(cfg, t_local)
+
+    def body(params, x_local):
+        bl, sl, _ = x_local.shape
+        x_flat = x_local.reshape(-1, d)
+        y, aux = moe_routed_local(params, x_flat, cfg, capacity=capacity,
+                                  psum_axis="model" if ffn_rule else None)
+        if cfg.n_shared_experts:
+            ys = apply_mlp(params["shared"], x_flat, cfg).astype(jnp.float32)
+            if ffn_rule:
+                ys = jax.lax.psum(ys, "model")
+            y = y + ys
+        aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
+        return y.astype(x_local.dtype).reshape(bl, sl, d), aux
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+                         out_specs=(x_spec, P()), check_vma=False)(params, x)
+
+
+def _apply_moe_ep_small(params, x, cfg: ModelConfig, topo: Topology, x_spec):
+    """Expert-parallel MoE for small token counts (decode): each model
+    shard computes its local experts over ALL local tokens; outputs
+    combine with one psum. No weight movement."""
+    mesh = topo.mesh
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    ep = topo.tp_size
+    e_local = e // ep
+    data_axes = topo.data_axes
+    w_e = P("model", None, None)
+    p_specs = {"router": P(None, None), "w_gate": w_e, "w_up": w_e,
+               "w_down": w_e}
+    if cfg.n_shared_experts:
+        p_specs["shared"] = {"w_gate": P(None, "model"),
+                             "w_up": P(None, "model"),
+                             "w_down": P("model", None)}
+
+    def body(params, x_local):
+        bl, sl, _ = x_local.shape
+        x_flat = x_local.reshape(-1, d)
+        t = x_flat.shape[0]
+        idx = jax.lax.axis_index("model")
+        e_lo = idx * e_local
+        probs = _router_probs(params, x_flat, cfg)
+        weights, expert_ids = jax.lax.top_k(probs, k)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+        cap = t * k  # no drops at decode size
+        flat_ids = expert_ids.reshape(-1)
+        owned = (flat_ids >= e_lo) & (flat_ids < e_lo + e_local)
+        local_ids = jnp.where(owned, flat_ids - e_lo, 0)
+        slot = jnp.arange(t * k)
+        token_idx = slot // k
+        src = x_flat[token_idx] * owned[:, None].astype(x_flat.dtype)
+        buf = jnp.zeros((e_local, cap, d), x_flat.dtype).at[
+            local_ids, slot].add(src)
+        out = _expert_ffn(cfg, params["w_gate"], params["w_up"],
+                          params["w_down"], buf)
+        gathered = out[local_ids, slot].astype(jnp.float32) * owned[:, None]
+        w_flat = weights.reshape(-1)
+        y = jnp.zeros((t, d), jnp.float32).at[token_idx].add(
+            gathered * w_flat[:, None])
+        if cfg.n_shared_experts:
+            ys = apply_mlp(params["shared"], x_flat, cfg).astype(jnp.float32)
+            y = y + ys  # shared partials join the same psum below
+        y = jax.lax.psum(y, "model")
+        aux = _aux_loss(probs, expert_ids, cfg)
+        aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
+        return y.astype(x_local.dtype).reshape(bl, sl, d), aux
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+                         out_specs=(x_spec, P()), check_vma=False)(params, x)
+
+
+def _apply_moe_ep(params, x, cfg: ModelConfig, topo: Topology, x_spec):
+    """Expert parallelism with token-slicing over `model` during dispatch."""
+    mesh = topo.mesh
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    ep = topo.tp_size
+    e_local = e // ep
+    data_axes = topo.data_axes
+    w_e = P("model", None, None)
+    p_specs = {"router": P(None, None), "w_gate": w_e, "w_up": w_e,
+               "w_down": w_e}
+    if cfg.n_shared_experts:
+        # shared experts: TP on their FFN dim over `model`
+        p_specs["shared"] = {"w_gate": P(None, "model"),
+                             "w_up": P(None, "model"),
+                             "w_down": P("model", None)}
+
+    def body(params, x_local):
+        bl, sl, _ = x_local.shape
+        x_flat = x_local.reshape(-1, d)
+        t = x_flat.shape[0]
+        tm = t // ep
+        idx = jax.lax.axis_index("model")
+        x_me = jax.lax.dynamic_slice_in_dim(x_flat, idx * tm, tm, 0)
+
+        probs = _router_probs(params, x_me, cfg)
+        weights, expert_ids = jax.lax.top_k(probs, k)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+        cap = _capacity(cfg, tm)
+        buf, dst_e, dst_c, keep, token_idx, order = _dispatch(
+            x_me, expert_ids, cfg, cap)
+        # (E, cap, d) -> (E/ep, ep*cap, d): shard i keeps experts
+        # [i*e_local, (i+1)*e_local) with buffers from every model shard.
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)
+        out = _expert_ffn(cfg, params["w_gate"], params["w_up"],
+                          params["w_down"], buf).astype(x_flat.dtype)
+        # inverse exchange: (E/ep, ep*cap, d) -> (E, cap, d)
+        out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
+                                 tiled=True)
+        y_me = _combine(out, dst_e, dst_c, keep, token_idx, order, weights, tm)
+        y = jax.lax.all_gather(y_me, "model", axis=0, tiled=True)  # (t, d)
+        if cfg.n_shared_experts:
+            # shared experts = TP over `model` on the FFN dim, computed on
+            # the full local token set (every shard holds all t tokens).
+            ys = apply_mlp(params["shared"], x_flat, cfg).astype(jnp.float32)
+            y = y + jax.lax.psum(ys, "model")
+        y = y.astype(x_local.dtype)
+        aux = _aux_loss(probs, expert_ids, cfg)
+        aux = jax.lax.pmean(aux, ("model", *data_axes))
+        return y.reshape(bl, sl, d), aux
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+                         out_specs=(x_spec, P()), check_vma=False)(params, x)
+
+
+def moe_dense_oracle(params, x, cfg: ModelConfig):
+    """All-experts reference (tests only)."""
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    probs = _router_probs(params, x_flat, cfg)
+    weights, expert_ids = jax.lax.top_k(probs, cfg.n_experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    h = jnp.repeat(x_flat[None, :, :], cfg.n_experts, axis=0)  # (E,T,d)
+    out_all = _expert_ffn(cfg, params["w_gate"], params["w_up"],
+                          params["w_down"], h)  # (E,T,d) fp32
+    gate = jnp.zeros((x_flat.shape[0], cfg.n_experts), jnp.float32)
+    gate = gate.at[jnp.arange(x_flat.shape[0])[:, None], expert_ids].add(weights)
+    y = jnp.einsum("etd,te->td", out_all, gate)
+    aux = _aux_loss(probs, expert_ids, cfg)
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(params["shared"], x_flat, cfg).astype(jnp.float32)
+    return y.astype(x.dtype).reshape(b, s, d), aux

@@ -1,0 +1,32 @@
+"""Normalisation layers (fp32 internals, params in model dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+from repro.sharding.rules import EMBED
+
+
+def norm_defs(d_model: int, kind: str) -> dict:
+    defs = {"scale": ParamDef((d_model,), (EMBED,), init="ones")}
+    if kind == "layernorm":
+        defs["bias"] = ParamDef((d_model,), (EMBED,), init="zeros")
+    return defs
+
+
+def apply_norm(params: dict, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * (var + eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * (var + eps) ** -0.5
+        y = y * params["scale"].astype(jnp.float32)
+        if "bias" in params:
+            y = y + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)

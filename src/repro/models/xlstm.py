@@ -1,0 +1,321 @@
+"""xLSTM mixers: chunkwise-parallel stabilized mLSTM and recurrent sLSTM.
+
+mLSTM (matrix memory, exponential gating): training/prefill uses the
+chunkwise form — within a chunk a masked quadratic (like linear
+attention), across chunks an exact recurrence on the stabilized carry
+(C_hat, n_hat, m) with C_true = exp(m)·C_hat. Derivation (chunk-local
+cumsum F, g_s = i_s − F_s, M_t = max(m_prev, cummax g_s), m_t = F_t+M_t):
+
+  Ĉ_t = exp(m_prev−M_t)·Ĉ_prev + Σ_{s≤t} exp(g_s−M_t)·k_s v_sᵀ
+  h_t = (q_t·Ĉ_t) / max(|q_t·n̂_t|, exp(−m_t))
+
+which reduces to the official single-step stabilized recurrence for
+chunk length 1. sLSTM (scalar memory, block-diagonal recurrence) is
+inherently sequential — `lax.scan` over time, exactly as the xLSTM
+paper prescribes (and why only 1 block in 8 is sLSTM).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, einsum, einsum_out
+from repro.sharding.rules import (
+    CONV,
+    EMBED,
+    FFN,
+    HEAD_DIM,
+    INNER,
+    Q_HEADS,
+    Topology,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.xlstm_expand * d
+    h = cfg.n_heads
+    hd = di // h
+    k = cfg.mamba_d_conv
+    return {
+        "in_proj": ParamDef((d, 2 * di), (EMBED, INNER)),
+        "conv_w": ParamDef((k, di), (CONV, INNER), scale=0.5),
+        "conv_b": ParamDef((di,), (INNER,), init="zeros"),
+        "wq": ParamDef((h, hd, hd), (Q_HEADS, HEAD_DIM, None)),
+        "wk": ParamDef((h, hd, hd), (Q_HEADS, HEAD_DIM, None)),
+        "wv": ParamDef((h, hd, hd), (Q_HEADS, HEAD_DIM, None)),
+        "w_i": ParamDef((di, h), (INNER, None), scale=0.1),
+        "b_i": ParamDef((h,), (None,), init="zeros"),
+        "w_f": ParamDef((di, h), (INNER, None), scale=0.1),
+        "b_f": ParamDef((h,), (None,), init="ones", scale=3.0),
+        "out_norm": ParamDef((di,), (INNER,), init="ones"),
+        "out_proj": ParamDef((di, d), (INNER, EMBED)),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv) fp32, stabilized
+    n: jax.Array  # (B, H, dk) fp32, stabilized
+    m: jax.Array  # (B, H) fp32 stabilizer
+    conv: jax.Array  # (B, k-1, di)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    di = cfg.xlstm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = di // h
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    )
+
+
+def _mlstm_qkvgates(params, x, cfg: ModelConfig, conv_state=None):
+    """x: (B,T,d). Returns q,k,v (B,T,H,hd); i_log,f_log (B,T,H); z (B,T,di);
+    new conv state."""
+    from repro.models.mamba import _causal_conv
+
+    b, t, d = x.shape
+    di = cfg.xlstm_expand * d
+    h = cfg.n_heads
+    hd = di // h
+    xz = einsum("btd,de->bte", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    xh = xc.reshape(b, t, h, hd)
+    q = einsum("bthd,hde->bthe", xh, params["wq"])
+    k = einsum("bthd,hde->bthe", xh, params["wk"]) * (hd ** -0.5)
+    v = einsum("bthd,hde->bthe", xin.reshape(b, t, h, hd), params["wv"])
+    i_log = einsum("btd,dh->bth", xc, params["w_i"],
+                   dtype=jnp.float32) + params["b_i"].astype(jnp.float32)
+    f_raw = einsum("btd,dh->bth", xc, params["w_f"],
+                   dtype=jnp.float32) + params["b_f"].astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, i_log, f_log, z, new_conv
+
+
+def _mlstm_chunk(q, k, v, i_log, f_log, state):
+    """One chunk. q,k,v: (B,L,H,hd); gates (B,L,H). state: (c,n,m)."""
+    b, el, h, hd = q.shape
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,H,L,hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    i_l = i_log.transpose(0, 2, 1)  # (B,H,L)
+    f_l = f_log.transpose(0, 2, 1)
+    c_prev, n_prev, m_prev = state
+
+    F = jnp.cumsum(f_l, axis=-1)  # inclusive
+    g = i_l - F  # (B,H,L)
+    M = jnp.maximum(m_prev[..., None], jax.lax.cummax(g, axis=2))  # (B,H,L)
+    m_t = F + M
+
+    # intra-chunk: scores_ts = (q_t·k_s)·exp(g_s − M_t), s ≤ t
+    qk = jnp.einsum("bhte,bhse->bhts", qf, kf,
+                    preferred_element_type=jnp.float32)
+    decay = jnp.exp(g[:, :, None, :] - M[..., None])  # (B,H,t,s)
+    mask = jnp.tril(jnp.ones((el, el), bool))
+    w = jnp.where(mask, qk * decay, 0.0)
+    num_intra = jnp.einsum("bhts,bhse->bhte", w, vf,
+                           preferred_element_type=jnp.float32)
+    den_intra = w.sum(axis=-1)  # (B,H,L)
+
+    # inter-chunk history
+    inter_scale = jnp.exp(m_prev[..., None] - M)  # (B,H,L)
+    qc = jnp.einsum("bhte,bhef->bhtf", qf, c_prev,
+                    preferred_element_type=jnp.float32)
+    num_inter = qc * inter_scale[..., None]
+    den_inter = jnp.einsum("bhte,bhe->bht", qf, n_prev,
+                           preferred_element_type=jnp.float32) * inter_scale
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    floor = jnp.exp(-m_t)
+    h_out = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+
+    # carry update
+    m_end = M[..., -1]  # = max(m_prev, max_s g_s)
+    scale_hist = jnp.exp(m_prev - m_end)[..., None, None]
+    kv_scale = jnp.exp(g - m_end[..., None])  # (B,H,L)
+    c_new = scale_hist * c_prev + jnp.einsum(
+        "bhse,bhsf,bhs->bhef", kf, vf, kv_scale,
+        preferred_element_type=jnp.float32)
+    n_new = scale_hist[..., 0] * n_prev + jnp.einsum(
+        "bhse,bhs->bhe", kf, kv_scale, preferred_element_type=jnp.float32)
+    m_new = F[..., -1] + m_end
+    return h_out.transpose(0, 2, 1, 3), (c_new, n_new, m_new)
+
+
+def _head_rmsnorm(h, scale, eps=1e-6):
+    """Per-head RMS norm on (B,T,H,hd), scale (di,)."""
+    b, t, nh, hd = h.shape
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * (var + eps) ** -0.5
+    return y.reshape(b, t, nh * hd) * scale.astype(jnp.float32)
+
+
+def apply_mlstm(params, x, cfg: ModelConfig, topo: Topology | None = None,
+                state: MLSTMState | None = None):
+    """x: (B,T,d) -> (y, final state)."""
+    b, t, d = x.shape
+    di = cfg.xlstm_expand * d
+    conv_state = state.conv if state is not None else None
+    q, k, v, i_log, f_log, z, new_conv = _mlstm_qkvgates(
+        params, x, cfg, conv_state)
+    if state is None:
+        h_heads = cfg.n_heads
+        hd = di // h_heads
+        carry = (jnp.zeros((b, h_heads, hd, hd), jnp.float32),
+                 jnp.zeros((b, h_heads, hd), jnp.float32),
+                 jnp.full((b, h_heads), -1e30, jnp.float32))
+    else:
+        carry = (state.c, state.n, state.m)
+
+    chunk = min(cfg.chunk_size, t)
+    if t % chunk:
+        chunk = t
+    nc = t // chunk
+
+    def body(c, inp):
+        qc, kc, vc, ic, fc = inp
+        h_out, c_new = _mlstm_chunk(qc, kc, vc, ic, fc, c)
+        return c_new, h_out
+
+    def split(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    carry, hs = jax.lax.scan(
+        body, carry, (split(q), split(k), split(v), split(i_log), split(f_log)))
+    hs = hs.swapaxes(0, 1).reshape(b, t, cfg.n_heads, -1)
+    y = _head_rmsnorm(hs, params["out_norm"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = einsum_out("bte,ed->btd", y, params["out_proj"])
+    return out, MLSTMState(c=carry[0], n=carry[1], m=carry[2], conv=new_conv)
+
+
+def mlstm_decode_step(params, x, cfg: ModelConfig, state: MLSTMState):
+    """Official stabilized single-step recurrence. x: (B,1,d)."""
+    q, k, v, i_log, f_log, z, new_conv = _mlstm_qkvgates(
+        params, x, cfg, state.conv)
+    qf = q[:, 0].astype(jnp.float32)  # (B,H,hd)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i_l = i_log[:, 0]  # (B,H)
+    f_l = f_log[:, 0]
+    m_new = jnp.maximum(f_l + state.m, i_l)
+    f_s = jnp.exp(f_l + state.m - m_new)[..., None]
+    i_s = jnp.exp(i_l - m_new)[..., None]
+    c = f_s[..., None] * state.c + i_s[..., None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = f_s * state.n + i_s * kf
+    num = jnp.einsum("bhe,bhef->bhf", qf, c,
+                     preferred_element_type=jnp.float32)
+    den = jnp.einsum("bhe,bhe->bh", qf, n,
+                     preferred_element_type=jnp.float32)
+    floor = jnp.exp(-m_new)
+    h = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+    y = _head_rmsnorm(h[:, None].transpose(0, 1, 2, 3).reshape(
+        x.shape[0], 1, cfg.n_heads, -1), params["out_norm"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = einsum("bte,ed->btd", y, params["out_proj"])
+    return out, MLSTMState(c=c, n=n, m=m_new, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    d_ffs = int(round(4 * d / 3 / 64)) * 64 or 64
+    gate = lambda: {
+        "w": ParamDef((d, d), (EMBED, INNER)),
+        "r": ParamDef((h, hd, hd), (Q_HEADS, HEAD_DIM, None)),
+        "b": ParamDef((d,), (INNER,), init="zeros"),
+    }
+    return {
+        "gi": gate(), "gf": gate(), "gz": gate(), "go": gate(),
+        "out_norm": ParamDef((d,), (EMBED,), init="ones"),
+        "ffn": {
+            "w_up": ParamDef((d, d_ffs), (EMBED, FFN)),
+            "w_down": ParamDef((d_ffs, d), (FFN, EMBED)),
+        },
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d) fp32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_step(params, x_t, st: SLSTMState, cfg: ModelConfig):
+    """x_t: (B,d). Block-diagonal recurrence per head."""
+    b, d = x_t.shape
+    h_heads = cfg.n_heads
+    hd = d // h_heads
+    h_prev = st.h.reshape(b, h_heads, hd)
+
+    def gate(g):
+        wx = einsum("bd,de->be", x_t, params[g]["w"], dtype=jnp.float32)
+        rh = jnp.einsum("bhd,hde->bhe", h_prev, params[g]["r"].astype(jnp.float32),
+                        preferred_element_type=jnp.float32).reshape(b, d)
+        return wx + rh + params[g]["b"].astype(jnp.float32)
+
+    i_t, f_t, z_t, o_t = gate("gi"), gate("gf"), gate("gz"), gate("go")
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + st.m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(f_log + st.m - m_new)
+    c = f_s * st.c + i_s * jnp.tanh(z_t)
+    n = f_s * st.n + i_s
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def apply_slstm(params, x, cfg: ModelConfig, topo: Topology | None = None,
+                state: SLSTMState | None = None):
+    """x: (B,T,d) -> (y, final state). Sequential scan (faithful to paper)."""
+    b, t, d = x.shape
+    st = state if state is not None else init_slstm_state(cfg, b)
+
+    def body(st, x_t):
+        st2 = _slstm_step(params, x_t, st, cfg)
+        return st2, st2.h
+
+    st_f, hs = jax.lax.scan(body, st, x.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)  # (B,T,d) fp32
+    var = jnp.mean(hs * hs, axis=-1, keepdims=True)
+    y = hs * (var + 1e-6) ** -0.5 * params["out_norm"].astype(jnp.float32)
+    # post-up-projection FFN (xLSTM paper: factor 4/3, GeLU)
+    up = einsum("btd,df->btf", y.astype(x.dtype), params["ffn"]["w_up"])
+    up = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    out = einsum_out("btf,fd->btd", up, params["ffn"]["w_down"])
+    return out, st_f
+
+
+def slstm_decode_step(params, x, cfg: ModelConfig, state: SLSTMState):
+    y, st = apply_slstm(params, x, cfg, None, state)
+    return y, st
+

@@ -1,0 +1,1 @@
+"""Runtime: failure injection/recovery, straggler mitigation."""

@@ -1,0 +1,37 @@
+"""Straggler mitigation for the simulation farm.
+
+Two mechanisms (paper G4, adapted):
+* `WindowWatchdog` — per-window wall-time monitor; a group whose
+  wall time exceeds `factor` × the running median is flagged; the
+  scheduler's predictive policy then re-sorts its instances into
+  cost-homogeneous groups (lock-step waste shrinks).
+* at multi-pod scale, a pod that misses `max_missed` window barriers is
+  declared lost; its instance slice is re-queued on the survivors from
+  the last checkpoint (see runtime/fault.py drill).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class WindowWatchdog:
+    factor: float = 3.0
+    history: deque = field(default_factory=lambda: deque(maxlen=64))
+    flagged: list = field(default_factory=list)
+
+    def observe(self, window: int, wall_s: float) -> bool:
+        """Returns True if this window is a straggler."""
+        med = float(np.median(self.history)) if self.history else wall_s
+        self.history.append(wall_s)
+        if self.history and wall_s > self.factor * max(med, 1e-9):
+            self.flagged.append((window, wall_s, med))
+            return True
+        return False
+
+    def straggler_rate(self) -> float:
+        seen = len(self.history)
+        return len(self.flagged) / seen if seen else 0.0

@@ -1,0 +1,1 @@
+"""Serving: KV-cached decode + continuous batching engine."""

@@ -1,0 +1,171 @@
+"""Continuous-batching serve engine — paper schema ii/iii for LM decoding.
+
+The mapping (DESIGN.md §5): a decode request IS a paper "simulation
+instance" — irregular lifetime, stop/restartable, advancing on its own
+clock. The engine realises the paper's mechanisms:
+
+* fixed decode slices (schema ii time slicing): every engine tick is
+  one batched `decode_step` over the slot array;
+* slot compaction + on-demand admission (guideline G4): finished slots
+  are freed and refilled from the pending queue without draining the
+  batch (iteration-level scheduling);
+* streaming outputs (G1/schema iii): tokens are pushed to per-request
+  sinks as they are produced; nothing is buffered beyond the running
+  window.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import sample_token
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1: never
+    temperature: float = 0.0
+    out_tokens: list = field(default_factory=list)
+    on_token: Optional[Callable[[int, int], None]] = None  # (uid, token)
+
+    @property
+    def done(self) -> bool:
+        return (len(self.out_tokens) >= self.max_new_tokens
+                or (self.out_tokens and self.out_tokens[-1] == self.eos_id))
+
+
+class ServeEngine:
+    def __init__(self, model, params, n_slots: int, cache_len: int,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        cfg = model.cfg
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("serve engine targets decoder-only")
+        self.cache = model.init_cache(n_slots, cache_len)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self.pending: collections.deque = collections.deque()
+        self.key = jax.random.PRNGKey(seed)
+        self.ticks = 0
+        self.busy_slot_ticks = 0
+        self.total_slot_ticks = 0
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill_one = jax.jit(self._prefill_impl)
+
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, tokens):
+        batch = {"tokens": tokens}
+        cache, last_logits = self.model.prefill(params, batch,
+                                                cache_len=self.cache_len)
+        return cache, last_logits
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        """Fill free slots from the pending queue (paper: on-demand
+        dispatch; the prefill writes the request's KV into the slot)."""
+        for slot in range(self.n_slots):
+            if self.active[slot] is not None or not self.pending:
+                continue
+            req = self.pending.popleft()
+            p = len(req.prompt)
+            assert p < self.cache_len
+            cache_r, last_logits = self._prefill_one(
+                self.params, jnp.asarray(req.prompt[None, :]))
+            self.cache = _insert_slot(self.cache, cache_r, slot,
+                                      self.cache_len)
+            self.key, sub = jax.random.split(self.key)
+            tok = sample_token(last_logits[0, -1], req.temperature, sub)
+            self._record(req, int(tok))
+            self.tokens[slot, 0] = int(tok)
+            self.pos[slot] = p
+            self.active[slot] = req if not req.done else None
+
+    def _record(self, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        if req.on_token:
+            req.on_token(req.uid, tok)
+
+    def tick(self) -> int:
+        """One decode slice over all slots. Returns #active slots."""
+        self._admit()
+        live = [s for s in range(self.n_slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos))
+        self.ticks += 1
+        self.busy_slot_ticks += len(live)
+        self.total_slot_ticks += self.n_slots
+        logits_np = logits[:, 0]
+        for slot in live:
+            req = self.active[slot]
+            self.key, sub = jax.random.split(self.key)
+            tok = int(sample_token(logits_np[slot], req.temperature, sub))
+            self._record(req, tok)
+            self.pos[slot] = min(self.pos[slot] + 1, self.cache_len - 1)
+            self.tokens[slot, 0] = tok
+            if req.done or self.pos[slot] >= self.cache_len - 1:
+                self.active[slot] = None  # free slot -> refilled next tick
+        return len(live)
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        seen: set[int] = set()
+        for _ in range(max_ticks):
+            n = self.tick()
+            if n == 0 and not self.pending:
+                break
+        return finished
+
+    @property
+    def utilisation(self) -> float:
+        return (self.busy_slot_ticks / self.total_slot_ticks
+                if self.total_slot_ticks else 0.0)
+
+
+def _insert_slot(cache, cache_r, slot: int, cache_len: int):
+    """Scatter a single-request prefill cache into batch slot `slot`,
+    padding the sequence axis to cache_len."""
+
+    def ins(dst, src):
+        if dst.ndim >= 2 and src.shape[0] == 1:
+            # pad seq axis (axis 1 for k/v with ndim>=3; states have no seq)
+            if dst.ndim >= 3 and src.shape[1] != dst.shape[1]:
+                pad = [(0, 0)] * src.ndim
+                pad[1] = (0, dst.shape[1] - src.shape[1])
+                src = jnp.pad(src, pad)
+            return dst.at[slot].set(src[0])
+        return dst
+
+    def walk(dst, src):
+        if isinstance(dst, dict):
+            return {k: walk(dst[k], src[k]) for k in dst}
+        if isinstance(dst, list):
+            return [walk(d, s) for d, s in zip(dst, src)]
+        # stacked leaves: (n_repeat, B, ...) -> insert along axis 1
+        if dst.ndim == src.ndim and dst.shape[0] == src.shape[0] and (
+                src.ndim >= 2 and src.shape[1] == 1):
+            if src.ndim >= 4 and src.shape[2] != dst.shape[2]:
+                pad = [(0, 0)] * src.ndim
+                pad[2] = (0, dst.shape[2] - src.shape[2])
+                src = jnp.pad(src, pad)
+            return dst.at[:, slot].set(src[:, 0])
+        return ins(dst, src)
+
+    return walk(cache, cache_r)

@@ -1,0 +1,1 @@
+"""Sharding: logical-axis rules resolved against the device mesh."""

@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules → physical mesh layouts.
+
+The model code annotates parameters and activations with *logical* axis
+names ("embed", "ffn", "q_heads", ...). A `Topology` resolves these to
+physical mesh axes according to the selected `ShardingConfig` strategy,
+the mesh shape, and per-arch divisibility (axes that do not divide the
+mesh axis size fall back to replication — GSPMD padding is deliberately
+avoided: padded shards waste MXU cycles; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshSpec, ModelConfig, ShardingConfig
+
+# Logical axis vocabulary ----------------------------------------------------
+# params
+VOCAB = "vocab"
+EMBED = "embed"  # d_model
+FFN = "ffn"  # MLP intermediate
+Q_HEADS = "q_heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+EXPERTS = "experts"
+EXPERT_FFN = "expert_ffn"
+INNER = "inner"  # mamba/xlstm d_inner
+STATE = "state"  # ssm state dim
+CONV = "conv"
+LAYERS = "layers"  # stacked scan axis
+# activations
+BATCH = "batch"
+SEQ = "seq"
+KV_SEQ = "kv_seq"  # decode-cache sequence axis
+REPL = None  # explicit "replicated"
+
+
+def make_mesh_from_spec(spec: MeshSpec, devices: Optional[Sequence] = None) -> Mesh:
+    devs = list(devices) if devices is not None else list(jax.devices())
+    need = spec.n_devices
+    if len(devs) < need:
+        raise ValueError(f"mesh {spec.shape} needs {need} devices, have {len(devs)}")
+    return jax.make_mesh(
+        spec.shape,
+        spec.axes,
+        devices=devs[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes),
+    )
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Binds a mesh + model + sharding strategy; resolves logical axes."""
+
+    mesh: Mesh
+    model: ModelConfig
+    sharding: ShardingConfig
+
+    # ------------------------------------------------------------------
+    @cached_property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.axis_sizes)
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return "model" if "model" in self.axis_sizes else None
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.data_axes:
+            out *= self.axis_sizes[a]
+        return out
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_sizes.get("model", 1)
+
+    def _divides(self, dim: int, axes) -> bool:
+        size = 1
+        for a in axes if isinstance(axes, tuple) else (axes,):
+            size *= self.axis_sizes.get(a, 1)
+        return dim % size == 0 and dim >= size
+
+    # ------------------------------------------------------------------
+    @cached_property
+    def rules(self) -> dict[str, object]:
+        """logical name -> physical axis (str | tuple | None)."""
+        m = self.model
+        tp = self.model_axis
+
+        r: dict[str, object] = {
+            VOCAB: tp if self._divides(m.padded_vocab, tp) else None,
+            EMBED: None,
+            FFN: tp if m.d_ff and self._divides(m.d_ff, tp) else None,
+            Q_HEADS: tp if self._divides(m.n_heads, tp) else None,
+            KV_HEADS: tp if self._divides(m.n_kv_heads, tp) else None,
+            HEAD_DIM: None,
+            EXPERTS: None,
+            EXPERT_FFN: None,
+            INNER: tp if self._divides(m.d_inner, tp) else None,
+            STATE: None,
+            CONV: None,
+            LAYERS: None,
+            BATCH: self.data_axes if len(self.data_axes) > 1 else (self.data_axes[0] if self.data_axes else None),
+            SEQ: None,
+            KV_SEQ: None,
+        }
+        if m.n_experts:
+            moe_ff = m.moe_d_ff or m.d_ff
+            if self.sharding.expert_parallel and self._divides(m.n_experts, tp):
+                r[EXPERTS] = tp
+                r[EXPERT_FFN] = None
+            elif self._divides(moe_ff, tp):
+                r[EXPERTS] = None
+                r[EXPERT_FFN] = tp
+        if self.sharding.seq_sharded_kv:
+            ax = self.sharding.kv_seq_axis
+            if ax in self.axis_sizes:
+                r[KV_SEQ] = ax
+                if ax == "data":
+                    # long_500k decodes batch=1: batch axis unshardable.
+                    r[BATCH] = None
+        if self.sharding.seq_sharded_activations:
+            r[SEQ] = tp
+        return r
+
+    @cached_property
+    def fsdp_axis(self) -> Optional[str]:
+        """FSDP: params get this extra axis on their largest free dim."""
+        if self.sharding.strategy == "fsdp_tp" and "data" in self.axis_sizes:
+            return "data"
+        return None
+
+    # ------------------------------------------------------------------
+    def spec(self, logical: Sequence[Optional[str]], *, fsdp: bool = False,
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axes to a PartitionSpec.
+
+        With fsdp=True (parameters), additionally shard the largest
+        still-replicated dim over the `data` axis when divisible.
+        """
+        phys = []
+        used: set[str] = set()
+        for name in logical:
+            ax = self.rules.get(name) if name else None
+            if ax is None:
+                phys.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in axs):
+                phys.append(None)
+                continue
+            used.update(axs)
+            phys.append(ax)
+        if fsdp and self.fsdp_axis and self.fsdp_axis not in used and shape is not None:
+            # choose the largest unsharded, divisible dim
+            best, best_size = -1, 0
+            for i, (p_ax, dim) in enumerate(zip(phys, shape)):
+                if p_ax is None and dim % self.axis_sizes[self.fsdp_axis] == 0 and dim > best_size:
+                    best, best_size = i, dim
+            if best >= 0:
+                phys[best] = self.fsdp_axis
+        return P(*phys)
+
+    def named(self, logical: Sequence[Optional[str]], **kw) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, **kw))
+
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint by logical axes (no-op on 1-device meshes)."""
+        if self.mesh.devices.size == 1:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(logical))
+
+    # convenience activation specs ------------------------------------
+    def batch_spec(self, *trailing: Optional[str]) -> NamedSharding:
+        return self.named((BATCH, *trailing))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def smoke_topology(model: ModelConfig, sharding: ShardingConfig | None = None) -> Topology:
+    """1-device topology with production axis names (for CPU tests)."""
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        devices=jax.devices()[:1],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    return Topology(mesh, model, sharding or ShardingConfig(strategy="dp_tp"))

@@ -1,0 +1,83 @@
+"""AdamW with fp32 master weights, cosine schedule, global-norm clipping.
+
+No external deps (optax is not available offline); implemented as pure
+pytree transforms. Optimizer state leaves inherit their parameter's
+sharding (which already carries FSDP axes), so ZeRO-style state
+partitioning falls out of the param layout for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: Any  # fp32 pytree
+    nu: Any  # fp32 pytree
+    master: Any  # fp32 params (None when params already fp32)
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params, cfg: OptimizerConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    needs_master = cfg.master_fp32 and any(
+        p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if needs_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics). grads may be bf16."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    ref = state.master if state.master is not None else params
+
+    def upd(p32, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * p32)
+
+    new_master = jax.tree.map(
+        lambda p, m, v: upd(p.astype(jnp.float32), m, v), ref, mu, nu)
+    new_params = jax.tree.map(
+        lambda p, p32: p32.astype(p.dtype), params, new_master)
+    new_state = AdamWState(
+        step=step, mu=mu, nu=nu,
+        master=new_master if state.master is not None else None)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,148 @@
+"""Training step factories.
+
+`make_train_step(model, ...)` builds the pjit train step:
+  state = {"params", "opt": AdamWState, "step"}
+  new_state, metrics = train_step(state, batch)
+
+Features:
+* grad accumulation — `lax.scan` over microbatches (activation memory
+  divided by `grad_accum`, gradients accumulated in fp32);
+* per-block remat (set on the model);
+* donation of the state pytree (in-place update on device);
+* `make_dp_train_step` — explicit data-parallel variant (params
+  replicated, grads reduced with a *compressed* psum over the given
+  axis) used to exercise the paper-motivated int8 error-feedback
+  reduction end-to-end on small models.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import OptimizerConfig, ShardingConfig
+from repro.train import compression
+from repro.train.optim import AdamWState, adamw_update, init_opt_state
+
+
+def init_train_state(model, key, ocfg: OptimizerConfig):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, ocfg)}
+
+
+def abstract_train_state(model, ocfg: OptimizerConfig):
+    """ShapeDtypeStructs (with shardings) for AOT lowering."""
+    params = model.abstract_params()
+
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    zeros = jax.tree.map(f32, params)
+    master = jax.tree.map(f32, params) if any(
+        p.dtype != jnp.float32 for p in jax.tree.leaves(params)) else None
+    opt = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                     mu=zeros, nu=zeros, master=master)
+    return {"params": params, "opt": opt}
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, ocfg: OptimizerConfig, scfg: ShardingConfig) -> Callable:
+    accum = max(1, scfg.grad_accum)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / accum, acc, g)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, zero, mbs)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, ocfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Explicit-DP step with compressed gradient reduction (paper-motivated)
+# ---------------------------------------------------------------------------
+
+
+def make_dp_train_step(model, ocfg: OptimizerConfig, mesh, axis: str = "data",
+                       compress: bool = True) -> Callable:
+    """Params replicated; batch sharded over `axis`; per-shard grads
+    reduced with int8 error-feedback psum (or plain psum)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def train_step(state, batch):
+        def body(params, opt, err, batch):
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / n_shards,
+                                 grads)
+            if compress:
+                flat_g, tdef = jax.tree.flatten(grads)
+                flat_e = jax.tree.leaves(err)
+                red = [compression.compressed_psum(g, axis, e)
+                       for g, e in zip(flat_g, flat_e)]
+                grads = jax.tree.unflatten(tdef, [r[0] for r in red])
+                new_err = jax.tree.unflatten(tdef, [r[1] for r in red])
+            else:
+                grads = jax.tree.map(lambda g: jax.lax.psum(g, axis), grads)
+                new_err = err
+            loss = jax.lax.pmean(loss, axis)
+            new_params, new_opt, om = adamw_update(grads, opt, params, ocfg)
+            return new_params, new_opt, new_err, dict(metrics, loss=loss, **om)
+
+        batch_spec = jax.tree.map(lambda _: P(axis), batch)
+        rep = jax.tree.map(lambda _: P(), state["params"])
+        opt_spec = jax.tree.map(lambda _: P(), state["opt"])
+        err_spec = jax.tree.map(lambda _: P(), state["error"])
+        out = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(rep, opt_spec, err_spec, batch_spec),
+            out_specs=(rep, opt_spec, err_spec,
+                       jax.tree.map(lambda _: P(), {"ce": 0, "aux": 0,
+                                                    "tokens": 0, "loss": 0,
+                                                    "grad_norm": 0, "lr": 0})),
+            check_vma=False,
+        )(state["params"], state["opt"], state["error"], batch)
+        new_params, new_opt, new_err, metrics = out
+        return {"params": new_params, "opt": new_opt, "error": new_err}, metrics
+
+    return train_step

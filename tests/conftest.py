@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real (1-device) platform; only launch/dryrun.py
+forces 512 placeholder devices. Multi-device tests run in subprocesses
+(see tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Config/registry/shape-matrix tests."""
+import pytest
+
+from repro.configs.base import ALL_SHAPES, SHAPES, shape_applicable
+from repro.configs.registry import (
+    ARCH_NAMES,
+    default_sharding,
+    dryrun_cells,
+    get_config,
+    get_smoke_config,
+    skipped_cells,
+)
+
+
+def test_all_archs_registered():
+    assert len(ARCH_NAMES) == 10
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_counts_in_band(name):
+    """Sanity bands around the published sizes."""
+    bands = {
+        "olmoe-1b-7b": (6e9, 8e9),
+        "deepseek-moe-16b": (15e9, 18e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "xlstm-1.3b": (0.9e9, 2.5e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+        "llama3-8b": (7.5e9, 8.6e9),
+        "starcoder2-7b": (6.5e9, 8e9),
+        "command-r-35b": (28e9, 36e9),
+        "gemma-7b": (7.5e9, 9.5e9),
+        "seamless-m4t-large-v2": (1.2e9, 2.5e9),
+    }
+    n = get_config(name).param_count()
+    lo, hi = bands[name]
+    assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_cell_matrix():
+    cells = dryrun_cells()
+    skips = skipped_cells()
+    assert len(cells) == 32
+    assert len(skips) == 8
+    assert all(s[1] == "long_500k" for s in skips)
+    # long_500k runs exactly for the sub-quadratic archs
+    long_archs = {a for a, s in cells if s.name == "long_500k"}
+    assert long_archs == {"xlstm-1.3b", "jamba-v0.1-52b"}
+
+
+def test_jamba_layer_pattern():
+    cfg = get_config("jamba-v0.1-52b")
+    specs = cfg.layer_specs()
+    assert len(specs) == 32
+    attn_layers = [i for i, s in enumerate(specs) if s.mixer == "attn"]
+    assert attn_layers == [4, 12, 20, 28]  # 1 in 8
+    moe_layers = [i for i, s in enumerate(specs) if s.ffn == "moe"]
+    assert moe_layers == list(range(1, 32, 2))  # every other
+
+
+def test_xlstm_layer_pattern():
+    cfg = get_config("xlstm-1.3b")
+    specs = cfg.layer_specs()
+    slstm = [i for i, s in enumerate(specs) if s.mixer == "slstm"]
+    assert slstm == list(range(7, 48, 8))
+    assert all(s.ffn == "none" for s in specs)
+
+
+def test_deepseek_first_dense():
+    cfg = get_config("deepseek-moe-16b")
+    specs = cfg.layer_specs()
+    assert specs[0].ffn == "dense"
+    assert all(s.ffn == "moe" for s in specs[1:])
+
+
+def test_default_sharding_decode_rules():
+    # kv heads not divisible by 16 -> flash-decode over `model`
+    s = default_sharding("llama3-8b", SHAPES["decode_32k"])
+    assert s.seq_sharded_kv and s.kv_seq_axis == "model"
+    # divisible kv heads -> plain kv-head sharding
+    s = default_sharding("gemma-7b", SHAPES["decode_32k"])
+    assert not s.seq_sharded_kv
+    # long context -> cache seq over `data`
+    s = default_sharding("jamba-v0.1-52b", SHAPES["long_500k"])
+    assert s.seq_sharded_kv and s.kv_seq_axis == "data"
+
+
+def test_padded_vocab():
+    cfg = get_config("internvl2-1b")
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_configs_are_small(name):
+    cfg = get_smoke_config(name)
+    assert cfg.param_count() < 5e7
+    assert cfg.family == get_config(name).family

@@ -1,0 +1,75 @@
+"""SSA exactness: analytic moments + determinism + horizon semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gillespie import advance_to, init_lanes, system_tensors
+from repro.core.reactions import make_system
+
+
+def _run(system, n, t, seed):
+    st = init_lanes(system, n, seed)
+    tens = system_tensors(system)
+    return jax.jit(lambda s: advance_to(s, tens, t))(st)
+
+
+def test_pure_death_mean():
+    sys = make_system(["A"], [({"A": 1}, {}, 0.5)], {"A": 1000})
+    st = _run(sys, 1500, 2.0, seed=1)
+    analytic = 1000 * np.exp(-0.5 * 2.0)
+    emp = float(st.x.mean())
+    # binomial thinning: sd of the lane mean
+    sd = np.sqrt(1000 * np.exp(-1.0) * (1 - np.exp(-1.0)) / 1500)
+    assert abs(emp - analytic) < 5 * sd
+
+
+def test_immigration_death_stationary_poisson():
+    lam, mu = 50.0, 1.0
+    sys = make_system(["A"], [({}, {"A": 1}, lam), ({"A": 1}, {}, mu)],
+                      {"A": 0})
+    st = _run(sys, 1500, 10.0, seed=2)
+    x = np.asarray(st.x[:, 0])
+    assert abs(x.mean() - lam) < 1.0
+    assert abs(x.var() - lam) < 5.0  # Poisson: var == mean
+
+
+def test_dimerisation_conservation():
+    # 2A -> B conserves A + 2B... (A + 2B invariant)
+    sys = make_system(["A", "B"], [({"A": 2}, {"B": 1}, 0.01)],
+                      {"A": 100, "B": 0})
+    st = _run(sys, 64, 50.0, seed=3)
+    inv = np.asarray(st.x[:, 0] + 2 * st.x[:, 1])
+    assert (inv == 100).all()
+
+
+def test_deterministic_same_seed():
+    sys = make_system(["A"], [({}, {"A": 1}, 5.0), ({"A": 1}, {}, 0.5)],
+                      {"A": 10})
+    a = _run(sys, 32, 3.0, seed=7)
+    b = _run(sys, 32, 3.0, seed=7)
+    assert (a.x == b.x).all() and (a.t == b.t).all()
+
+
+def test_horizon_freeze_exact():
+    """Windowed advance == single long advance distributionally; clocks
+    never overshoot the horizon."""
+    sys = make_system(["A"], [({}, {"A": 1}, 5.0), ({"A": 1}, {}, 0.5)],
+                      {"A": 0})
+    tens = system_tensors(sys)
+    st = init_lanes(sys, 256, seed=4)
+    adv = jax.jit(lambda s, h: advance_to(s, tens, h))
+    for h in (0.5, 1.0, 1.5, 2.0):
+        st = adv(st, h)
+        assert float(st.t.max()) <= h + 1e-6
+        assert float(st.t.min()) >= h - 1e-6
+    one = _run(sys, 256, 2.0, seed=5)
+    m_win, m_one = float(st.x.mean()), float(one.x.mean())
+    assert abs(m_win - m_one) < 1.5  # both ~Poisson(10) means over 256 lanes
+
+
+def test_dead_lanes_stay_dead():
+    sys = make_system(["A"], [({"A": 1}, {}, 10.0)], {"A": 3})
+    st = _run(sys, 16, 100.0, seed=6)
+    assert bool(st.dead.all())
+    assert (np.asarray(st.x) == 0).all()

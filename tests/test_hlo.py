@@ -1,0 +1,58 @@
+"""HLO collective parser (roofline input)."""
+from repro.launch.hlo import Collective, collective_summary, parse_collectives
+
+SAMPLE = """
+HloModule jit_step
+
+%fused (x: f32[8,16]) -> f32[8,16] {
+  ...
+}
+
+ENTRY %main {
+  %ar = f32[8,4096,1024]{2,1,0} all-reduce(%p0), channel_id=1, replica_groups=[32,16]<=[512], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[256,1024]{1,0} all-gather(%p1), channel_id=2, replica_groups=[16,32]<=[512], dimensions={0}
+  %ag2 = bf16[256,1024]{1,0} all-gather(%p1), channel_id=3, replica_groups=[16,32]<=[512], dimensions={0}
+  %rs = f32[64,128]{1,0} reduce-scatter(%p2), channel_id=4, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %a2a = bf16[16,64]{1,0} all-to-all(%p3), channel_id=5, replica_groups=[64,8]<=[512]
+  %cp = u32[4]{0} collective-permute(%p4), channel_id=6, source_target_pairs={{0,1}}
+  %ars = (f32[100]{0}, f32[100]{0}) all-reduce-start(%p5, %p6), channel_id=7, replica_groups=[1,512]<=[512]
+  %ard = (f32[100]{0}, f32[100]{0}) all-reduce-done(%ars)
+}
+"""
+
+
+def test_parse_ops_and_groups():
+    colls = parse_collectives(SAMPLE)
+    by_op = {}
+    for c in colls:
+        by_op.setdefault(c.op, []).append(c)
+    assert sum(c.count for c in by_op["all-reduce"]) == 2  # ar + ar-start
+    assert sum(c.count for c in by_op["all-gather"]) == 2
+    ar = [c for c in by_op["all-reduce"] if c.group_size == 16][0]
+    assert ar.bytes_buffer == 8 * 4096 * 1024 * 4
+    rs = by_op["reduce-scatter"][0]
+    assert rs.group_size == 4  # literal groups
+    assert by_op["collective-permute"][0].bytes_buffer == 16
+
+
+def test_moved_bytes_factors():
+    ar = Collective("all-reduce", 1000, 4)
+    assert abs(ar.moved_bytes - 2 * 3 / 4 * 1000) < 1e-9
+    ag = Collective("all-gather", 1000, 4)
+    assert abs(ag.moved_bytes - 3 / 4 * 1000) < 1e-9
+    rs = Collective("reduce-scatter", 1000, 4)
+    assert abs(rs.moved_bytes - 3 * 1000) < 1e-9
+    cp = Collective("collective-permute", 1000, 1)
+    assert cp.moved_bytes == 1000
+
+
+def test_summary_totals():
+    colls = parse_collectives(SAMPLE)
+    s = collective_summary(colls)
+    assert s["moved_bytes_per_device"] > 0
+    assert set(s["by_op"]) <= {"all-reduce", "all-gather", "reduce-scatter",
+                               "all-to-all", "collective-permute"}
+    # tuple-shaped async all-reduce counted once with both operands
+    ar_small = [c for c in colls
+                if c.op == "all-reduce" and c.group_size == 512][0]
+    assert ar_small.bytes_buffer == 2 * 100 * 4

@@ -1,0 +1,65 @@
+"""Welford streaming statistics: exactness + merge associativity."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reduction import (
+    finalize,
+    init_welford,
+    merge,
+    update_batch,
+)
+
+
+def test_update_batch_matches_numpy(rng):
+    x = rng.standard_normal((64, 3)).astype(np.float32) * 10
+    acc = init_welford((3,))
+    acc = update_batch(acc, jnp.asarray(x))
+    stats = finalize(acc)
+    np.testing.assert_allclose(np.asarray(stats.mean), x.mean(0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(stats.var), x.var(0, ddof=1),
+                               rtol=1e-4)
+
+
+def test_windowed_merge_equals_batch(rng):
+    x = rng.standard_normal((100, 2)).astype(np.float32)
+    acc = init_welford((2,))
+    for i in range(0, 100, 10):
+        acc = update_batch(acc, jnp.asarray(x[i:i + 10]))
+    s = finalize(acc)
+    np.testing.assert_allclose(np.asarray(s.mean), x.mean(0), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s.var), x.var(0, ddof=1), rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_masked_update(rng):
+    x = rng.standard_normal((10, 2)).astype(np.float32)
+    mask = np.array([1, 1, 0, 1, 0, 1, 1, 0, 1, 1], bool)
+    acc = update_batch(init_welford((2,)), jnp.asarray(x), jnp.asarray(mask))
+    s = finalize(acc)
+    np.testing.assert_allclose(np.asarray(s.mean), x[mask].mean(0), rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=2, max_size=40),
+       st.integers(1, 10))
+def test_merge_associative_split_invariant(xs, split):
+    """Any split of the sample stream yields identical (n, mean, m2)."""
+    x = np.asarray(xs, np.float32)[:, None]
+    split = min(split, len(xs) - 1)
+    a = update_batch(init_welford((1,)), jnp.asarray(x))
+    b1 = update_batch(init_welford((1,)), jnp.asarray(x[:split]))
+    b2 = update_batch(init_welford((1,)), jnp.asarray(x[split:]))
+    b = merge(b1, b2)
+    scale = max(1.0, np.abs(x).max()) ** 2
+    assert abs(float(a.n[0] - b.n[0])) == 0
+    assert abs(float(a.mean[0] - b.mean[0])) < 1e-3 * max(1.0, np.abs(x).max())
+    assert abs(float(a.m2[0] - b.m2[0])) < 1e-2 * scale * len(xs)
+
+
+def test_ci90_shrinks_with_n(rng):
+    x = rng.standard_normal((1000, 1)).astype(np.float32)
+    s_small = finalize(update_batch(init_welford((1,)), jnp.asarray(x[:10])))
+    s_big = finalize(update_batch(init_welford((1,)), jnp.asarray(x)))
+    assert float(s_big.ci90[0]) < float(s_small.ci90[0])

@@ -1,0 +1,95 @@
+"""SSM mixers: chunkwise-parallel forms vs exact recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.common import init_params
+from repro.models.mamba import (
+    apply_mamba,
+    init_mamba_state,
+    mamba_decode_step,
+    mamba_defs,
+    mamba_ref,
+)
+from repro.models.xlstm import (
+    apply_mlstm,
+    apply_slstm,
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_decode_step,
+    mlstm_defs,
+    slstm_defs,
+)
+
+
+@pytest.fixture(scope="module")
+def jcfg():
+    return get_smoke_config("jamba-v0.1-52b")
+
+
+@pytest.fixture(scope="module")
+def xcfg():
+    return get_smoke_config("xlstm-1.3b")
+
+
+@pytest.mark.parametrize("t", [8, 16, 48])
+def test_mamba_chunked_vs_sequential(jcfg, t):
+    params = init_params(jax.random.PRNGKey(0), mamba_defs(jcfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, t, jcfg.d_model)) * 0.5
+    y_par, st_par = apply_mamba(params, x, jcfg)
+    y_ref, st_ref = mamba_ref(params, x, jcfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_ref),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_par.ssm), np.asarray(st_ref.ssm),
+                               atol=1e-5)
+
+
+def test_mamba_prefill_then_decode(jcfg):
+    params = init_params(jax.random.PRNGKey(0), mamba_defs(jcfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 33, jcfg.d_model)) * 0.5
+    y_full, _ = mamba_ref(params, x, jcfg)
+    y_pre, st = apply_mamba(params, x[:, :32], jcfg)
+    y_dec, _ = mamba_decode_step(params, x[:, 32:33], jcfg, st)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full[:, 32:33]),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("t", [16, 32])
+def test_mlstm_chunkwise_vs_recurrent(xcfg, t):
+    params = init_params(jax.random.PRNGKey(0), mlstm_defs(xcfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, t, xcfg.d_model)) * 0.5
+    st = init_mlstm_state(xcfg, 2)
+    ys = []
+    for i in range(t):
+        y, st = mlstm_decode_step(params, x[:, i:i + 1], xcfg, st)
+        ys.append(y)
+    y_ref = jnp.concatenate(ys, 1)
+    y_par, st_par = apply_mlstm(params, x, xcfg)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_ref),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(st_par.c), np.asarray(st.c),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(st_par.m), np.asarray(st.m),
+                               atol=5e-5)
+
+
+def test_mlstm_stability_long_sequence(xcfg):
+    """Exponential gating must not overflow over long horizons."""
+    params = init_params(jax.random.PRNGKey(0), mlstm_defs(xcfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, xcfg.d_model)) * 3.0
+    y, st = apply_mlstm(params, x, xcfg)
+    assert bool(jnp.isfinite(y).all())
+    assert bool(jnp.isfinite(st.c).all())
+
+
+def test_slstm_split_equals_full(xcfg):
+    params = init_params(jax.random.PRNGKey(2), slstm_defs(xcfg), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 24, xcfg.d_model)) * 0.5
+    y_full, _ = apply_slstm(params, x, xcfg)
+    ya, st = apply_slstm(params, x[:, :12], xcfg)
+    yb, _ = apply_slstm(params, x[:, 12:], xcfg, state=st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([ya, yb], 1)), np.asarray(y_full),
+        atol=1e-6)

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline: CWC model -> compile -> mesh-farm ensemble ->
+time-sliced windows -> on-line reduction -> statistics stream, plus the
+scheduler/stream/straggler substrate units.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cwc.models import ecoli_gene_regulation, lotka_volterra
+from repro.core.engine import SimConfig, SimulationEngine
+from repro.core.scheduler import Scheduler
+from repro.core.stream import StatsStream, StatsRecord, csv_sink
+from repro.runtime.straggler import WindowWatchdog
+
+
+def test_end_to_end_fig1_style():
+    """The paper's Fig. 1 experiment shape: N independent instances of
+    the E. coli regulation model, mean + 90% CI on a fixed grid."""
+    cfg = SimConfig(n_instances=100, t_end=20.0, n_windows=10, n_lanes=100,
+                    schema="iii", seed=0)
+    eng = SimulationEngine(ecoli_gene_regulation(), cfg)
+    recs = eng.run()
+    assert len(recs) == 10
+    assert all(r.n == 100 for r in recs)
+    protein = np.array([r.mean[1] for r in recs])
+    # protein rises from 0 and the CI is meaningful
+    assert protein[0] < protein[-1]
+    assert all(r.ci90[1] > 0 for r in recs[1:])
+    # stream got every record
+    assert len(eng.stream.records()) == 10
+
+
+def test_scheduler_groups_cover_everything():
+    s = Scheduler(n_instances=37, n_lanes=8, policy="on_demand")
+    gs = s.groups()
+    seen = set()
+    for g in gs:
+        assert len(g) == 8
+        seen.update(g.tolist())
+    assert seen == set(range(37))
+
+
+def test_scheduler_predictive_sorts_by_cost():
+    s = Scheduler(n_instances=16, n_lanes=4, policy="predictive")
+    costs = np.arange(16)[::-1].astype(float)  # instance 0 most expensive
+    s.record_costs(np.arange(16), costs)
+    gs = s.groups()
+    # cheapest instances grouped together first
+    assert set(gs[0].tolist()) == {15, 14, 13, 12}
+    assert set(gs[-1].tolist()) == {3, 2, 1, 0}
+    assert s.imbalance() > 0.5
+
+
+def test_stats_stream_and_csv(tmp_path):
+    stream = StatsStream(maxlen=4)
+    path = str(tmp_path / "out.csv")
+    stream.attach(csv_sink(path, ["a", "b"]))
+    for w in range(6):
+        stream.emit(StatsRecord(
+            t=float(w), window=w, mean=np.array([w, 2 * w], float),
+            var=np.zeros(2), ci90=np.zeros(2), n=10))
+    assert stream.dropped == 2  # bounded buffer
+    lines = open(path).read().strip().splitlines()
+    assert len(lines) == 7  # header + all 6 (sink sees everything)
+    assert lines[0].startswith("t,n,a_mean")
+
+
+def test_watchdog_flags_stragglers():
+    w = WindowWatchdog(factor=3.0)
+    for _ in range(10):
+        assert not w.observe(0, 1.0)
+    assert w.observe(10, 10.0)
+    assert w.straggler_rate() > 0
+
+
+def test_sweep_end_to_end_separates_points():
+    from repro.core.cwc.compile import compile_model
+    from repro.core.sweep import SweepSpec, sweep_rates
+
+    model = lotka_volterra(2)
+    system, _ = compile_model(model)
+    spec = SweepSpec.make({"reproduce": [0.5, 2.0]}, replicas=16)
+    cfg = SimConfig(n_instances=spec.n_instances(), t_end=1.5, n_windows=3,
+                    n_lanes=32, schema="iii", seed=4)
+    eng = SimulationEngine(model, cfg, rates=sweep_rates(system, spec))
+    eng.run()
+    x = np.asarray(eng._pool.x)
+    prey_low, prey_high = x[:16, 0].mean(), x[16:, 0].mean()
+    assert prey_high > prey_low  # higher birth rate -> more prey

@@ -1,0 +1,102 @@
+"""Training: convergence, grad-accum equivalence, crash/restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import store
+from repro.configs.base import OptimizerConfig, ShardingConfig
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import synth_batch
+from repro.models import build_model
+from repro.runtime.fault import FailurePlan, run_train_with_failures
+from repro.sharding.rules import smoke_topology
+from repro.train.optim import init_opt_state
+from repro.train.step import make_train_step
+
+
+def _setup(arch="llama3-8b", accum=1, lr=1e-3, steps=100):
+    cfg = get_smoke_config(arch)
+    topo = smoke_topology(cfg)
+    model = build_model(cfg, topo, remat="none")
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=5, total_steps=steps)
+    scfg = ShardingConfig(strategy="dp_tp", grad_accum=accum)
+    step = jax.jit(make_train_step(model, ocfg, scfg), donate_argnums=(0,))
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": init_opt_state(params, ocfg)}
+    return cfg, model, step, state, ocfg
+
+
+def test_loss_decreases():
+    cfg, model, step, state, _ = _setup(steps=40)
+    losses = []
+    for i in range(40):
+        b = synth_batch(cfg, 8, 32, i % 4)  # small repeated data
+        state, m = step(state, b)
+        losses.append(float(np.asarray(m["loss"])))
+    assert losses[-1] < losses[0] - 0.5, losses[::8]
+
+
+def test_grad_accum_equivalent():
+    """accum=2 over a batch == accum=1 on the same batch (same grads up
+    to fp tolerance) — verified via resulting params."""
+    b = synth_batch(get_smoke_config("llama3-8b"), 8, 32, 0)
+    outs = []
+    for accum in (1, 2):
+        cfg, model, step, state, _ = _setup(accum=accum)
+        state, _ = step(state, b)
+        outs.append(state["params"]["embed"])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               atol=2e-5)
+
+
+def test_crash_restore_deterministic(tmp_path):
+    cfg, model, step, state0, ocfg = _setup(steps=12)
+    batches = [synth_batch(cfg, 4, 32, i) for i in range(8)]
+
+    # clean run
+    state = jax.tree.map(jnp.copy, state0)
+    clean = []
+    for b in batches:
+        state, m = step(state, b)
+        clean.append(float(np.asarray(m["loss"])))
+
+    # crashy run
+    ckpt_dir = str(tmp_path / "ck")
+    saved = {}
+
+    def save_fn(st, i):
+        store.save(st, ckpt_dir, i)
+        saved[i] = True
+
+    def restore_fn():
+        s = store.latest_step(ckpt_dir)
+        template = jax.tree.map(jnp.copy, state0)
+        return store.restore(template, ckpt_dir, s), s
+
+    def make_state():
+        return jax.tree.map(jnp.copy, state0)
+
+    plan = FailurePlan(schedule={3: "crash", 6: "crash"})
+    _, crashy, events = run_train_with_failures(
+        make_state, step, batches, ckpt_dir, plan, save_fn, restore_fn,
+        ckpt_every=2)
+    assert len(events) == 2
+    np.testing.assert_allclose(clean, crashy, rtol=1e-4, atol=1e-5)
+
+
+def test_lr_schedule_and_clip():
+    from repro.train.optim import clip_by_global_norm, lr_schedule
+
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(ocfg, 0)) == 0.0
+    assert np.isclose(float(lr_schedule(ocfg, 10)), 1e-3)
+    assert float(lr_schedule(ocfg, 100)) < 2e-4
+    g = {"a": jnp.full((4,), 100.0)}
+    gc, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 200.0)
+    assert np.isclose(
+        float(jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(gc)))),
+        1.0, rtol=1e-5)
