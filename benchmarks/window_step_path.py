@@ -1,0 +1,67 @@
+"""Old-vs-new window dispatch: per-group host gather/scatter loop vs
+the single jitted, donated `window_step` (device-side permutation +
+lax.scan over lane slices).
+
+Measures, for identical experiments:
+  * device dispatches (jit launches) per run — the host<->device round
+    trips the refactor removes;
+  * blocking device->host pulls;
+  * wall time per window (post-warmup);
+and asserts the two paths produce bit-identical records.
+
+  PYTHONPATH=src python benchmarks/window_step_path.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import Ensemble, Experiment, Schedule, simulate
+from repro.core.cwc.models import lotka_volterra
+
+
+def run_path(host_loop: bool, n_instances: int, n_lanes: int,
+             n_windows: int = 8):
+    exp = Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=n_instances),
+        schedule=Schedule(t_end=2.0, n_windows=n_windows, schema="iii"),
+        n_lanes=n_lanes,
+        seed=7,
+        host_loop=host_loop)
+    result = simulate(exp)
+    tele = result.telemetry
+    # first window includes jit compile — report steady-state median
+    steady = sorted(tele.window_wall_times[1:])
+    return result, dict(
+        dispatches=tele.dispatches,
+        host_syncs=tele.host_syncs,
+        wall_total_s=tele.wall_time_s,
+        wall_per_window_ms=1e3 * steady[len(steady) // 2])
+
+
+def main() -> None:
+    print("instances,lanes,path,dispatches,host_syncs,"
+          "wall_per_window_ms,wall_total_s")
+    for n_instances, n_lanes in ((256, 32), (512, 64), (1024, 128)):
+        rows = {}
+        for host_loop in (True, False):
+            result, m = run_path(host_loop, n_instances, n_lanes)
+            rows[host_loop] = (result, m)
+            path = "host_loop" if host_loop else "window_step"
+            print(f"{n_instances},{n_lanes},{path},{m['dispatches']},"
+                  f"{m['host_syncs']},{m['wall_per_window_ms']:.2f},"
+                  f"{m['wall_total_s']:.2f}")
+        old, new = rows[True][0], rows[False][0]
+        assert (old.means() == new.means()).all(), "paths diverged!"
+        d_old = rows[True][1]["dispatches"]
+        d_new = rows[False][1]["dispatches"]
+        w_old = rows[True][1]["wall_per_window_ms"]
+        w_new = rows[False][1]["wall_per_window_ms"]
+        print(f"#  bit-identical; dispatches {d_old} -> {d_new} "
+              f"({d_old / d_new:.0f}x fewer), steady window "
+              f"{w_old:.2f}ms -> {w_new:.2f}ms "
+              f"({w_old / max(w_new, 1e-9):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,23 +7,26 @@ Writes artifacts/ecoli_fig1.csv (t, mean, var, ci90 per observable).
 """
 import os
 
+from repro.api import CsvSink, Ensemble, Experiment, Schedule, simulate
+from repro.api.run import observable_names
 from repro.core.cwc.models import ecoli_gene_regulation
-from repro.core.engine import SimConfig, SimulationEngine
-from repro.core.stream import csv_sink
 
 OUT = "artifacts/ecoli_fig1.csv"
 os.makedirs("artifacts", exist_ok=True)
 
-engine = SimulationEngine(
-    ecoli_gene_regulation(),
-    SimConfig(n_instances=100, t_end=100.0, n_windows=100, n_lanes=100,
-              schema="iii", seed=0),
-)
-engine.stream.attach(csv_sink(OUT, engine.obs_names))
-records = engine.run()
+model = ecoli_gene_regulation()
+result = simulate(Experiment(
+    model=model,
+    ensemble=Ensemble.make(replicas=100),
+    schedule=Schedule(t_end=100.0, n_windows=100, schema="iii"),
+    sinks=(CsvSink(OUT, observable_names(model)),),  # closed by simulate()
+    n_lanes=100,
+    seed=0,
+))
 
 # a terminal sparkline of the protein trajectory with its CI band
-prot = engine.obs_names.index("ecoli/protein")
+records = result.records
+prot = result.obs_names.index("ecoli/protein")
 peak = max(r.mean[prot] for r in records) or 1.0
 print("t      protein (mean ± ci90)")
 for r in records[::5]:

@@ -1,35 +1,37 @@
 """Parameter sweep (paper §3.1.2: "replicas or parameter sweeping"):
 Lotka-Volterra predator death-rate sweep, 4 points × 32 replicas,
-scheduled as ONE self-balancing farm with per-point on-line reduction.
+declared as ONE experiment with per-point on-line reduction.
 
   PYTHONPATH=src python examples/lotka_volterra_sweep.py
 """
-import numpy as np
-
-from repro.core.cwc.compile import compile_model
-from repro.core.cwc.models import lotka_volterra
-from repro.core.engine import SimConfig, SimulationEngine
-from repro.core.sweep import SweepSpec, point_slices, sweep_rates
-
-model = lotka_volterra(2)
-system, _ = compile_model(model)
-
-spec = SweepSpec.make({"die": [0.3, 0.6, 1.2, 2.4]}, replicas=32)
-rates = sweep_rates(system, spec)
-
-engine = SimulationEngine(
-    model,
-    SimConfig(n_instances=spec.n_instances(), t_end=5.0, n_windows=10,
-              n_lanes=64, schema="iii", policy="predictive", seed=0),
-    rates=rates,
+from repro.api import (
+    Ensemble,
+    Experiment,
+    Policy,
+    Reduction,
+    Schedule,
+    Schema,
+    simulate,
 )
-engine.run()
+from repro.core.cwc.models import lotka_volterra
 
-x = np.asarray(engine._pool.x)  # (I, S) final states
+result = simulate(Experiment(
+    model=lotka_volterra(2),
+    ensemble=Ensemble.make(replicas=32,
+                           sweep={"die": [0.3, 0.6, 1.2, 2.4]}),
+    schedule=Schedule(t_end=5.0, n_windows=10, schema=Schema.ONLINE,
+                      policy=Policy.PREDICTIVE),
+    reduction=Reduction.PER_POINT,
+    n_lanes=64,
+    seed=0,
+))
+
+pp = result.per_point()  # {"mean": (W, P, n_obs), ..., "points": [...]}
 print("predator death rate | final prey (mean) | final predators (mean)")
-for pt, sl in zip(spec.points(), point_slices(spec)):
-    prey, pred = x[sl, 0].mean(), x[sl, 1].mean()
-    print(f"  k_die = {pt['die']:4.1f}       | {prey:12.1f}      | "
+for p, point in enumerate(pp["points"]):
+    prey, pred = pp["mean"][-1, p]
+    print(f"  k_die = {point['die']:4.1f}       | {prey:12.1f}      | "
           f"{pred:12.1f}")
-print(f"\nscheduler imbalance (cv of per-instance cost): "
-      f"{engine.scheduler.imbalance():.2f}")
+print(f"\nwall={result.telemetry.wall_time_s:.2f}s "
+      f"dispatches={result.telemetry.dispatches} "
+      f"(one fused window_step per window)")

@@ -1,10 +1,10 @@
-"""Quickstart: define a CWC model, run an ensemble, stream statistics.
+"""Quickstart: define a CWC model, declare an experiment, stream stats.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import Ensemble, Experiment, Schedule, Schema, simulate
 from repro.core.cwc.rules import CWCModel, Rule
 from repro.core.cwc.terms import TOP, term
-from repro.core.engine import SimConfig, SimulationEngine
 
 # A CWC model straight from the paper's §2.1 example style:
 #   ⊤ : a b X  -k->  c X
@@ -19,15 +19,20 @@ model = CWCModel(
 )
 
 # 64 stochastic instances, 20 sim-time windows, on-line reduction
-engine = SimulationEngine(
-    model,
-    SimConfig(n_instances=64, t_end=50.0, n_windows=20, n_lanes=64,
-              schema="iii", seed=0),
-)
-for rec in iter(engine.run()):
+result = simulate(Experiment(
+    model=model,
+    ensemble=Ensemble.make(replicas=64),
+    schedule=Schedule(t_end=50.0, n_windows=20, schema=Schema.ONLINE),
+    n_lanes=64,
+    seed=0,
+))
+for rec in result.records:
     a, b, c = rec.mean
     print(f"t={rec.t:6.1f}  a={a:7.1f}  b={b:7.1f}  c={c:7.1f} "
           f"(ci90 ±{rec.ci90[2]:.2f}, n={rec.n:.0f})")
 
+tele = result.telemetry
 print(f"\npeak buffered bytes (schema iii is memory-bounded): "
-      f"{engine.peak_buffered_bytes}")
+      f"{tele.peak_buffered_bytes}")
+print(f"one device dispatch per window: {tele.dispatches} dispatches "
+      f"for {len(result.records)} windows in {tele.wall_time_s:.2f}s")

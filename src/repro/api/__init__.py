@@ -1,0 +1,47 @@
+"""repro.api — declarative experiment layer (DESIGN.md §1).
+
+An `Experiment` composes a model (CWCModel or ReactionSystem), an
+`Ensemble` (replicas and/or a parameter sweep), a `Schedule` (time grid
+plus typed `Schema`/`Policy` enums), a `Reduction` mode, and output
+sinks. `simulate(experiment)` validates, compiles, runs, and returns a
+`SimulationResult` handle.
+
+    from repro.api import (Ensemble, Experiment, Schedule, Schema,
+                           simulate)
+
+    result = simulate(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=64),
+        schedule=Schedule(t_end=10.0, n_windows=50, schema=Schema.ONLINE),
+    ))
+    result.means()        # (windows, n_obs)
+    result.telemetry      # wall time, peak memory, dispatch counts
+"""
+from repro.api.result import SimulationResult, Telemetry
+from repro.api.run import simulate
+from repro.api.spec import (
+    Ensemble,
+    Experiment,
+    ExperimentError,
+    Policy,
+    Reduction,
+    Schedule,
+    Schema,
+)
+from repro.core.stream import CsvSink
+from repro.core.sweep import SweepSpec
+
+__all__ = [
+    "CsvSink",
+    "Ensemble",
+    "Experiment",
+    "ExperimentError",
+    "Policy",
+    "Reduction",
+    "Schedule",
+    "Schema",
+    "SimulationResult",
+    "SweepSpec",
+    "Telemetry",
+    "simulate",
+]

@@ -1,0 +1,157 @@
+"""SimulationResult — the handle `simulate()` returns.
+
+Wraps the running (or finished) engine: streamed records, per-sweep-
+point grouped statistics, raw trajectories, wall-time / peak-memory
+telemetry, and the checkpoint()/resume() lifecycle. The handle owns the
+run loop so a partially-run experiment (``max_windows=``) can be
+continued in-process, or from a checkpoint file in a later process.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.stream import StatsRecord
+
+
+@dataclass(frozen=True)
+class Telemetry:
+    """Run telemetry (DESIGN.md §6).
+
+    dispatches: jitted device launches for pool advancement — the new
+    window_step path pays one per window, the legacy host loop one per
+    (group × window).
+    host_syncs: blocking device->host pulls (stats, samples, costs).
+    peak_buffered_bytes: engine-side trajectory buffering high-water
+    mark (schema iii's memory bound).
+    peak_rss_bytes: process high-water RSS where the platform reports
+    it (None otherwise).
+    """
+
+    wall_time_s: float
+    window_wall_times: tuple
+    peak_buffered_bytes: int
+    dispatches: int
+    host_syncs: int
+    peak_rss_bytes: Optional[int]
+
+
+def _peak_rss_bytes() -> Optional[int]:
+    try:
+        import resource
+        import sys
+
+        ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # linux reports KiB, macOS bytes
+        return ru * (1 if sys.platform == "darwin" else 1024)
+    except Exception:
+        return None
+
+
+class SimulationResult:
+    def __init__(self, experiment, engine):
+        self.experiment = experiment
+        self._engine = engine
+        self._wall_time = 0.0
+
+    # ------------------------------------------------------------ run
+    def resume(self, max_windows: Optional[int] = None,
+               checkpoint_path: Optional[str] = None) -> "SimulationResult":
+        """Advance the experiment, at most `max_windows` windows (all
+        remaining if None), checkpointing after every window when a
+        path is given. Returns self for chaining."""
+        eng = self._engine
+        t0 = time.perf_counter()
+        done = 0
+        try:
+            while eng._window < len(eng.grid) and (
+                    max_windows is None or done < max_windows):
+                eng.run_window()
+                done += 1
+                if checkpoint_path:
+                    eng.checkpoint(checkpoint_path)
+        finally:
+            self._wall_time += time.perf_counter() - t0
+        if self.completed:
+            eng.stream.close()
+        return self
+
+    def checkpoint(self, path: str) -> None:
+        """Serialise pool + scheduler + emitted records to `path`."""
+        self._engine.checkpoint(path)
+
+    @property
+    def completed(self) -> bool:
+        return self._engine._window >= len(self._engine.grid)
+
+    @property
+    def windows_run(self) -> int:
+        return self._engine._window
+
+    # ----------------------------------------------------------- data
+    @property
+    def obs_names(self) -> list[str]:
+        return list(self._engine.obs_names)
+
+    @property
+    def records(self) -> list[StatsRecord]:
+        return self._engine.stream.records()
+
+    def means(self) -> np.ndarray:
+        """(windows_run, n_obs) ensemble means."""
+        return np.stack([r.mean for r in self.records])
+
+    @property
+    def t_grid(self) -> np.ndarray:
+        return np.asarray(self._engine.grid)
+
+    def trajectories(self) -> Optional[np.ndarray]:
+        """(I, T, n_obs) raw samples — schemas i/ii always; schema iii
+        when Experiment.record_trajectories was set."""
+        return self._engine.trajectories()
+
+    def per_point(self) -> Optional[dict]:
+        """Grouped per-sweep-point statistics (Reduction.PER_POINT).
+
+        Returns {"mean"|"var"|"ci90"|"n": (windows, points, n_obs)},
+        plus "points": the sweep point dicts, or None when the run used
+        a pooled ensemble reduction.
+        """
+        grouped = self._engine.grouped_stats()
+        if not grouped:
+            return None
+        out = {
+            "n": np.stack([g.n for g in grouped]),
+            "mean": np.stack([g.mean for g in grouped]),
+            "var": np.stack([g.var for g in grouped]),
+            "ci90": np.stack([g.ci90 for g in grouped]),
+        }
+        sweep = self.experiment.ensemble.sweep
+        out["points"] = sweep.points() if sweep else [{}]
+        return out
+
+    def final_state(self) -> np.ndarray:
+        """(I, S) species counts at the last completed window."""
+        return np.asarray(self._engine._pool.x)
+
+    # ------------------------------------------------------ telemetry
+    @property
+    def telemetry(self) -> Telemetry:
+        eng = self._engine
+        return Telemetry(
+            wall_time_s=self._wall_time,
+            window_wall_times=tuple(eng.wall_times),
+            peak_buffered_bytes=eng.peak_buffered_bytes,
+            dispatches=eng.n_dispatches,
+            host_syncs=eng.n_host_syncs,
+            peak_rss_bytes=_peak_rss_bytes())
+
+    def __repr__(self) -> str:
+        state = "completed" if self.completed else (
+            f"{self.windows_run}/{len(self._engine.grid)} windows")
+        return (f"SimulationResult({state}, instances="
+                f"{self.experiment.ensemble.n_instances}, "
+                f"schema={self.experiment.schedule.schema.value!r})")

@@ -1,0 +1,96 @@
+"""simulate() — validate, compile, run, return a result handle.
+
+This is the single entry point over the engine: it resolves the typed
+spec onto `SimulationEngine` (schema/policy enums -> engine strings,
+sweep -> per-instance rate matrix, PER_POINT reduction -> instance
+group ids), attaches sinks, and drives the window loop through the
+returned `SimulationResult` so checkpoint/resume and partial runs share
+one code path.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.api.result import SimulationResult
+from repro.api.spec import Experiment, ExperimentError, Reduction
+from repro.core.engine import SimConfig, SimulationEngine
+from repro.core.sweep import sweep_rates
+
+
+def observable_names(model) -> list[str]:
+    """The observable column names an Experiment on `model` will report
+    (what a CsvSink wants), without building an engine."""
+    from repro.core.engine import resolve_observables
+
+    return resolve_observables(model)[1]
+
+
+def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
+    """Compile an Experiment down to a ready-to-run engine (no windows
+    are run). Exposed for benchmarks; prefer simulate()."""
+    experiment.validate()
+    ens = experiment.ensemble
+    sched = experiment.schedule
+    cfg = SimConfig(
+        n_instances=ens.n_instances,
+        t_end=float(sched.t_end),
+        n_windows=sched.n_windows,
+        n_lanes=min(experiment.n_lanes, ens.n_instances),
+        schema=sched.schema.value,
+        policy=sched.policy.value,
+        seed=experiment.seed,
+        max_steps_per_window=sched.max_steps_per_window,
+        use_kernel=experiment.use_kernel,
+        host_loop=experiment.host_loop)
+    group_ids = (ens.group_ids()
+                 if experiment.reduction is Reduction.PER_POINT else None)
+    engine = SimulationEngine(
+        experiment.model, cfg, mesh=mesh, group_ids=group_ids,
+        record_trajectories=experiment.record_trajectories,
+        _deprecated=False)
+    if ens.sweep is not None:
+        try:
+            engine.set_rates(sweep_rates(engine.system, ens.sweep))
+        except KeyError as e:
+            raise ExperimentError(
+                f"sweep names a rate the model does not define: {e}; "
+                f"reactions are {list(engine.system.reaction_names)}"
+            ) from e
+    return engine
+
+
+def simulate(experiment: Experiment, *,
+             checkpoint_path: Optional[str] = None,
+             resume: bool = False,
+             max_windows: Optional[int] = None,
+             mesh=None) -> SimulationResult:
+    """Run an Experiment end to end.
+
+    checkpoint_path: checkpoint after every window (and the restore
+    source when resume=True).
+    resume: restore pool/records from checkpoint_path before running —
+    the file must exist; records emitted before the checkpoint are
+    replayed into the result buffer AND into this run's sinks (a fresh
+    CsvSink starts from an empty file, so the replay keeps it
+    complete).
+    max_windows: stop after this many windows; the returned handle's
+    `.resume()` continues the same run in-process.
+    """
+    engine = build_engine(experiment, mesh=mesh)
+    if resume:
+        if not checkpoint_path:
+            raise ExperimentError("resume=True requires checkpoint_path")
+        path = (checkpoint_path if checkpoint_path.endswith(".npz")
+                else checkpoint_path + ".npz")
+        if not os.path.exists(path):
+            raise ExperimentError(
+                f"resume=True but no checkpoint at {path!r}")
+        engine.restore(checkpoint_path)
+    for sink in experiment.sinks:
+        engine.stream.attach(sink)
+        for rec in engine.stream.records():  # replay restored windows
+            sink(rec)
+    result = SimulationResult(experiment, engine)
+    return result.resume(max_windows=max_windows,
+                         checkpoint_path=checkpoint_path)

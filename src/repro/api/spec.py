@@ -1,0 +1,218 @@
+"""Typed experiment specification (the declarative front-end).
+
+Everything the old imperative surface expressed through `SimConfig`
+kwargs and stringly-typed `"i"/"ii"/"iii"` schemas is a validated,
+composable spec here (see DESIGN.md for the migration table). A spec is
+pure data: building one performs no compilation and touches no device —
+`simulate()` does that. The one stateful exception is `sinks`: those
+are live callables (a CsvSink opens its file when constructed and is
+closed when the run completes), so build fresh sinks per simulate()
+call rather than reusing one spec's sinks across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from enum import Enum
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.cwc.rules import CWCModel
+from repro.core.reactions import ReactionSystem
+from repro.core.sweep import SweepSpec
+
+
+class ExperimentError(ValueError):
+    """A spec failed validation; the message names the offending field."""
+
+
+class Schema(Enum):
+    """The paper's three parallelisation schemas (Fig. 5)."""
+
+    STATIC_FARM = "i"       # static farm, post-hoc reduction
+    TIME_SLICED = "ii"      # self-balancing farm, post-hoc reduction
+    ONLINE = "iii"          # time-sliced farm + on-line windowed reduction
+
+    @classmethod
+    def coerce(cls, v: Union["Schema", str]) -> "Schema":
+        if isinstance(v, cls):
+            return v
+        for member in cls:
+            if v in (member.value, member.name, member.name.lower()):
+                return member
+        raise ExperimentError(
+            f"unknown schema {v!r}; expected one of "
+            f"{[m.value for m in cls]} or {[m.name for m in cls]}")
+
+
+class Policy(Enum):
+    """Lane-grouping policy for the scheduler."""
+
+    STATIC_RR = "static_rr"
+    ON_DEMAND = "on_demand"
+    PREDICTIVE = "predictive"  # EMA-cost-sorted groups (§5.2 heuristics)
+
+    @classmethod
+    def coerce(cls, v: Union["Policy", str]) -> "Policy":
+        if isinstance(v, cls):
+            return v
+        for member in cls:
+            if v in (member.value, member.name, member.name.lower()):
+                return member
+        raise ExperimentError(
+            f"unknown policy {v!r}; expected one of "
+            f"{[m.value for m in cls]}")
+
+
+class Reduction(Enum):
+    """What the per-window statistics aggregate over."""
+
+    ENSEMBLE = "ensemble"    # pool every instance (replicas of one point)
+    PER_POINT = "per_point"  # grouped per sweep point (paper §3.1.2)
+
+
+@dataclass(frozen=True)
+class Ensemble:
+    """How many stochastic instances, and over which parameter points.
+
+    `replicas` is the number of instances per sweep point (or the total
+    ensemble size when there is no sweep). The embedded SweepSpec always
+    carries the same replica count — use `Ensemble.make` to build one
+    from a plain dict.
+    """
+
+    replicas: int = 1
+    sweep: Optional[SweepSpec] = None
+
+    @staticmethod
+    def make(replicas: int = 1,
+             sweep: Union[dict, SweepSpec, None] = None) -> "Ensemble":
+        if isinstance(sweep, dict):
+            sweep = SweepSpec.make(sweep, replicas)
+        elif isinstance(sweep, SweepSpec):
+            sweep = SweepSpec(sweep.values, replicas)
+        return Ensemble(replicas=replicas, sweep=sweep)
+
+    @property
+    def n_points(self) -> int:
+        return len(self.sweep.points()) if self.sweep else 1
+
+    @property
+    def n_instances(self) -> int:
+        return self.n_points * self.replicas
+
+    def group_ids(self) -> np.ndarray:
+        """(I,) sweep-point id per instance (instance i -> point i//m)."""
+        return np.repeat(np.arange(self.n_points, dtype=np.int32),
+                         self.replicas)
+
+    def validate(self) -> None:
+        if self.replicas < 1:
+            raise ExperimentError(
+                f"Ensemble.replicas must be >= 1, got {self.replicas}")
+        if self.sweep is not None:
+            if self.sweep.replicas != self.replicas:
+                raise ExperimentError(
+                    f"Ensemble.replicas ({self.replicas}) disagrees with "
+                    f"sweep.replicas ({self.sweep.replicas}); build via "
+                    "Ensemble.make(replicas=..., sweep=...)")
+            if not self.sweep.points():
+                raise ExperimentError("sweep has no points (empty values)")
+            for name, vals in self.sweep.values:
+                if len(vals) == 0:
+                    raise ExperimentError(
+                        f"sweep axis {name!r} has no values")
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """The simulation-time grid and its parallelisation schema."""
+
+    t_end: float
+    n_windows: int
+    schema: Schema = Schema.ONLINE
+    policy: Policy = Policy.ON_DEMAND
+    max_steps_per_window: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "schema", Schema.coerce(self.schema))
+        object.__setattr__(self, "policy", Policy.coerce(self.policy))
+
+    def validate(self) -> None:
+        if not self.t_end > 0:
+            raise ExperimentError(
+                f"Schedule.t_end must be > 0, got {self.t_end}")
+        if self.n_windows < 1:
+            raise ExperimentError(
+                f"Schedule.n_windows must be >= 1, got {self.n_windows}")
+        if (self.schema is Schema.STATIC_FARM
+                and self.policy is Policy.PREDICTIVE):
+            raise ExperimentError(
+                "schema STATIC_FARM (i) uses static round-robin groups; "
+                "policy PREDICTIVE is only meaningful for time-sliced "
+                "schemas (ii/iii)")
+        if self.max_steps_per_window is not None \
+                and self.max_steps_per_window < 1:
+            raise ExperimentError(
+                "Schedule.max_steps_per_window must be >= 1 or None, "
+                f"got {self.max_steps_per_window}")
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """One fully-specified ensemble simulation.
+
+    sinks: callables receiving each StatsRecord; anything with a
+    `close()` is closed when the run completes.
+    record_trajectories: buffer raw per-window samples even under
+    schema ONLINE (forfeits its memory bound — opt-in).
+    host_loop / use_kernel: select the legacy per-group host dispatch
+    (benchmark baseline) or the fused Pallas kernel path.
+    """
+
+    model: Union[CWCModel, ReactionSystem]
+    ensemble: Ensemble
+    schedule: Schedule
+    reduction: Reduction = Reduction.ENSEMBLE
+    sinks: Sequence = ()
+    seed: int = 0
+    n_lanes: int = 128
+    record_trajectories: bool = False
+    use_kernel: bool = False
+    host_loop: bool = False
+
+    def validate(self) -> None:
+        if not isinstance(self.model, (CWCModel, ReactionSystem)):
+            raise ExperimentError(
+                "Experiment.model must be a CWCModel or ReactionSystem, "
+                f"got {type(self.model).__name__}")
+        if not isinstance(self.ensemble, Ensemble):
+            raise ExperimentError(
+                "Experiment.ensemble must be an Ensemble "
+                f"(got {type(self.ensemble).__name__}); wrap a SweepSpec "
+                "via Ensemble.make(replicas=..., sweep=...)")
+        if not isinstance(self.schedule, Schedule):
+            raise ExperimentError(
+                "Experiment.schedule must be a Schedule, "
+                f"got {type(self.schedule).__name__}")
+        self.ensemble.validate()
+        self.schedule.validate()
+        if not isinstance(self.reduction, Reduction):
+            raise ExperimentError(
+                f"Experiment.reduction must be a Reduction enum, "
+                f"got {self.reduction!r}")
+        if self.n_lanes < 1:
+            raise ExperimentError(
+                f"Experiment.n_lanes must be >= 1, got {self.n_lanes}")
+        if self.use_kernel and self.schedule.max_steps_per_window:
+            raise ExperimentError(
+                "max_steps_per_window is not honoured by the fused "
+                "Pallas kernel path (use_kernel=True); drop one of them")
+        for s in self.sinks:
+            if not callable(s):
+                raise ExperimentError(f"sink {s!r} is not callable")
+
+    # convenience constructors ----------------------------------------
+    def with_(self, **changes) -> "Experiment":
+        return dataclasses.replace(self, **changes)

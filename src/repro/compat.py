@@ -1,0 +1,44 @@
+"""Version-compat shims for the JAX public API.
+
+The codebase targets the modern surface (`jax.make_mesh(...,
+axis_types=...)`, `jax.shard_map(..., check_vma=...)`); older releases
+(<= 0.4.x) expose neither `jax.sharding.AxisType` nor a top-level
+`shard_map`. Everything that builds meshes or shard_maps goes through
+this module so one guarded lookup covers both worlds.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+# `jax.sharding.AxisType` (and the `axis_types=` kwarg on make_mesh)
+# landed after 0.4.x; None means "legacy jax — omit the kwarg".
+AXIS_TYPE_AUTO = getattr(
+    getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with Auto axis types where the kwarg exists."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if AXIS_TYPE_AUTO is not None:
+        kwargs["axis_types"] = (AXIS_TYPE_AUTO,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map`, falling back to the experimental entry point.
+
+    `check_vma` (new name) maps onto `check_rep` (old name); both gate
+    the same replication/varying-axes check.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

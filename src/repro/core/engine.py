@@ -8,19 +8,34 @@ parameter sweep) under one of the paper's three schemas:
   schema "iii" time-sliced farm + ON-LINE windowed reduction (the
                paper's best variant; memory-bounded)
 
+Hot path: the whole instance pool advances one window as ONE pytree
+through a single jitted, donated `window_step` — the scheduler's groups
+become a device-side permutation plus a `lax.scan` over fixed-size lane
+slices, so a window costs one dispatch instead of one gather/advance/
+scatter round trip per group. The legacy host-driven per-group loop is
+kept behind `SimConfig.host_loop` (and for the Pallas fused kernel,
+whose chunk loop must stay host-driven) as the benchmark baseline; both
+paths are bit-identical because every per-lane operation is unchanged.
+
 Distribution: the instance pool is sharded over the mesh's data axes
 (each shard = a farm worker); per-window statistics are reduced with a
 single psum tree (`reduction.merge_over_axis`) so only O(species)
 floats ever cross pods. Fault tolerance: `checkpoint()`/`restore()`
-serialise the pool + scheduler + accumulators; trajectories are
-deterministic per-instance (keyed RNG), so a restart — even with a
-different mesh — resumes bit-identically.
+serialise the pool + scheduler + accumulators + emitted records;
+trajectories are deterministic per-instance (keyed RNG), so a restart —
+even with a different mesh — resumes bit-identically.
+
+NOTE: constructing `SimulationEngine` directly is deprecated — use the
+declarative front-end, `repro.api.simulate(Experiment(...))` (see
+DESIGN.md for the migration table). The old surface is kept as a thin
+shim over the same engine.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from dataclasses import dataclass
+from functools import partial
 from typing import Optional
 
 import jax
@@ -47,21 +62,36 @@ class SimConfig:
     seed: int = 0
     max_steps_per_window: Optional[int] = None
     use_kernel: bool = False  # fused Pallas SSA step (see kernels/)
+    host_loop: bool = False  # legacy per-group gather/scatter dispatch
+
+
+def resolve_observables(model: CWCModel | ReactionSystem):
+    """(system, obs_names, obs_idx) for a model — the single source of
+    the observable-column derivation (engine and repro.api share it)."""
+    if isinstance(model, CWCModel):
+        system, meta = compile_model(model)
+        names = list(meta["observables"]) or list(meta["species"])
+        idx = [v for v in meta["observables"].values()] or [
+            [i] for i in range(system.n_species)]
+    else:
+        system = model
+        names = list(model.species_names)
+        idx = [[i] for i in range(model.n_species)]
+    return system, names, idx
 
 
 class SimulationEngine:
     def __init__(self, model: CWCModel | ReactionSystem, cfg: SimConfig,
-                 rates=None, mesh=None, observables: Optional[list] = None):
-        if isinstance(model, CWCModel):
-            self.system, meta = compile_model(model)
-            self.obs_names = list(meta["observables"]) or list(
-                meta["species"])
-            self.obs_idx = [v for v in meta["observables"].values()] or [
-                [i] for i in range(self.system.n_species)]
-        else:
-            self.system = model
-            self.obs_names = list(self.system.species_names)
-            self.obs_idx = [[i] for i in range(self.system.n_species)]
+                 rates=None, mesh=None, observables: Optional[list] = None,
+                 group_ids=None, record_trajectories: bool = False,
+                 _deprecated: bool = True):
+        if _deprecated:
+            warnings.warn(
+                "constructing SimulationEngine directly is deprecated; "
+                "use repro.api.simulate(Experiment(...))",
+                DeprecationWarning, stacklevel=2)
+        self.system, self.obs_names, self.obs_idx = resolve_observables(
+            model)
         self.cfg = cfg
         self.mesh = mesh
         # per-instance rates (parameter sweep) or shared
@@ -80,14 +110,59 @@ class SimulationEngine:
             policy=("static_rr" if cfg.schema == "i" else cfg.policy))
         self._tensors_base = system_tensors(self.system)
         self._pool = init_lanes(self.system, cfg.n_instances, cfg.seed)
+        self._rates_dev = jnp.asarray(self.rates)
         self._window = 0
-        self._samples: list = []  # schemas i/ii: raw per-window samples
+        # schemas i/ii always buffer raw per-window samples; schema iii
+        # only on explicit opt-in (it forfeits the memory bound)
+        self._record_trajectories = record_trajectories
+        self._samples: list = []
         self._peak_buffered = 0
         self.wall_times: list[float] = []
-        self._advance = self._make_advance()
+        # telemetry: device dispatches and blocking device->host pulls
+        self.n_dispatches = 0
+        self.n_host_syncs = 0
+        # optional grouped (per-sweep-point) reduction
+        self._group_ids = None
+        self._group_ids_dev = None
+        self._grouped_fn = None
+        self._grouped: list[reduction.Stats] = []
+        if group_ids is not None:
+            self.set_groups(group_ids)
+        # dispatch path: one fused window_step by default; host-driven
+        # per-group loop for the Pallas kernel (its chunk loop cannot be
+        # jitted whole) or when explicitly requested as a baseline
+        self._use_host_loop = cfg.host_loop or cfg.use_kernel
+        self._perm_cache: Optional[jax.Array] = None
+        if self._use_host_loop:
+            self._advance = self._make_advance()
+            self._window_step = None
+        else:
+            self._advance = None
+            self._window_step = self._make_window_step()
+
+    # -------------------------------------------------------- re-spec
+    def set_rates(self, rates) -> None:
+        """Install a per-instance (I, R) rate matrix (parameter sweep).
+        Must happen before the first window runs."""
+        assert self._window == 0, "rates must be set before running"
+        rates = np.asarray(rates, np.float32)
+        assert rates.shape == (self.cfg.n_instances, self.system.n_reactions)
+        self.rates = rates
+        self._rates_dev = jnp.asarray(rates)
+
+    def set_groups(self, group_ids) -> None:
+        """Enable grouped reduction: group_ids (I,) maps each instance
+        to a reduction group (e.g. its sweep point)."""
+        ids = np.asarray(group_ids, np.int32)
+        assert ids.shape == (self.cfg.n_instances,)
+        self._group_ids = ids
+        self._group_ids_dev = jnp.asarray(ids)
+        self._grouped_fn = jax.jit(partial(
+            reduction.grouped_stats, n_groups=int(ids.max()) + 1))
 
     # ------------------------------------------------------------------
     def _make_advance(self):
+        """Legacy per-group advance (host dispatch loop baseline)."""
         idx_t, coef_t, delta_t, _ = self._tensors_base
         cfg = self.cfg
 
@@ -102,6 +177,8 @@ class SimulationEngine:
 
             return advance
         else:
+            max_steps = cfg.max_steps_per_window
+
             def advance(pool_slice: LaneState, rates, horizon):
                 tensors = (idx_t, coef_t, delta_t, rates)
 
@@ -111,11 +188,88 @@ class SimulationEngine:
                 def body(s):
                     return ssa_step(s, tensors, horizon)
 
-                out = jax.lax.while_loop(cond, body, pool_slice)
+                if max_steps is None:
+                    out = jax.lax.while_loop(cond, body, pool_slice)
+                else:
+                    out = jax.lax.fori_loop(
+                        0, max_steps,
+                        lambda _, s: jax.lax.cond(
+                            cond(s), body, lambda s_: s_, s),
+                        pool_slice)
                 return out._replace(
                     t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
 
         return jax.jit(advance, donate_argnums=(0,))
+
+    def _make_window_step(self):
+        """One jitted, donated step advancing the WHOLE pool a window.
+
+        The scheduler's lane groups become a device-side permutation;
+        `lax.scan` walks the fixed-size lane slices (the SIMD groups)
+        sequentially on device, so the host dispatches once per window
+        instead of once per group, and no pool state ever round-trips.
+        Per-lane operations are identical to the host path — the two are
+        bit-identical.
+        """
+        idx_t, coef_t, delta_t, _ = self._tensors_base
+        n_lanes = self.scheduler.n_lanes
+        obs_idx = tuple(tuple(int(i) for i in ii) for ii in self.obs_idx)
+        max_steps = self.cfg.max_steps_per_window
+
+        def window_step(pool: LaneState, rates, perm, horizon):
+            n_groups = perm.shape[0] // n_lanes
+
+            def take(a):
+                return a[perm].reshape((n_groups, n_lanes) + a.shape[1:])
+
+            lanes = LaneState(*(take(a) for a in pool))
+            rates_g = take(rates)
+
+            def advance_group(carry, grp):
+                sl, r = grp
+                tensors = (idx_t, coef_t, delta_t, r)
+
+                def cond(s):
+                    return jnp.any((s.t < horizon) & ~s.dead)
+
+                def body(s):
+                    return ssa_step(s, tensors, horizon)
+
+                if max_steps is None:
+                    out = jax.lax.while_loop(cond, body, sl)
+                else:
+                    out = jax.lax.fori_loop(
+                        0, max_steps,
+                        lambda _, s: jax.lax.cond(
+                            cond(s), body, lambda s_: s_, s),
+                        sl)
+                out = out._replace(
+                    t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
+                return carry, out
+
+            _, advanced = jax.lax.scan(advance_group, 0, (lanes, rates_g))
+            flat = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_groups * n_lanes,) + a.shape[2:]),
+                advanced)
+            # duplicate padding indices write identical data — safe
+            new_pool = LaneState(*(
+                p.at[perm].set(v) for p, v in zip(pool, flat)))
+            cols = [new_pool.x[:, list(ii)].sum(axis=1) for ii in obs_idx]
+            obs = jnp.stack(cols, axis=1)
+            return new_pool, obs, new_pool.steps - pool.steps
+
+        return jax.jit(window_step, donate_argnums=(0,))
+
+    def _permutation(self) -> jax.Array:
+        """Concatenated, padded scheduler groups as a device index map."""
+        if self.scheduler.policy != "predictive" and \
+                self._perm_cache is not None:
+            return self._perm_cache
+        perm = jnp.asarray(
+            np.concatenate(self.scheduler.groups()).astype(np.int32))
+        if self.scheduler.policy != "predictive":
+            self._perm_cache = perm
+        return perm
 
     def _gather(self, idx) -> tuple[LaneState, jax.Array]:
         p = self._pool
@@ -131,41 +285,70 @@ class SimulationEngine:
             key=p.key.at[idx].set(sl.key), steps=p.steps.at[idx].set(sl.steps),
             dead=p.dead.at[idx].set(sl.dead))
 
+    def _advance_window_host(self, horizon: float):
+        """Legacy baseline: per-group gather → advance → scatter."""
+        predictive = self.scheduler.policy == "predictive"
+        steps_before = None
+        if predictive:
+            steps_before = np.asarray(self._pool.steps)
+            self.n_host_syncs += 1
+        for idx in self.scheduler.groups():
+            sl, rates = self._gather(idx)
+            sl = self._advance(sl, rates, horizon)
+            self._scatter(idx, sl)
+            self.n_dispatches += 1
+        steps_delta = None
+        if predictive:
+            steps_delta = np.asarray(self._pool.steps) - steps_before
+            self.n_host_syncs += 1
+        return self._observe(), steps_delta
+
     # ------------------------------------------------------------------
     def run_window(self) -> StatsRecord:
-        """Advance every instance to the next grid point (schema ii/iii
-        slice; schema i groups also pass through here — the grouping
-        policy is what differs)."""
+        """Advance every instance to the next grid point. All three
+        schemas share this window loop — they differ in grouping policy
+        (schema i: static_rr) and in what is buffered (i/ii: raw
+        samples for post-hoc use; iii: nothing beyond the running
+        accumulator)."""
         cfg = self.cfg
         horizon = float(self.grid[self._window])
         t0 = time.perf_counter()
-        for idx in self.scheduler.groups():
-            sl, rates = self._gather(idx)
-            steps_before = np.asarray(sl.steps)
-            sl = self._advance(sl, rates, horizon)
-            self._scatter(idx, sl)
-            if self.scheduler.policy == "predictive":
-                self.scheduler.record_costs(
-                    np.asarray(idx), np.asarray(sl.steps) - steps_before)
+        if self._use_host_loop:
+            obs, steps_delta = self._advance_window_host(horizon)
+        else:
+            self._pool, obs, steps_delta = self._window_step(
+                self._pool, self._rates_dev, self._permutation(), horizon)
+            self.n_dispatches += 1
+        if self.scheduler.policy == "predictive":
+            if steps_delta is not None and not isinstance(
+                    steps_delta, np.ndarray):
+                steps_delta = np.asarray(steps_delta)
+                self.n_host_syncs += 1
+            self.scheduler.record_costs(
+                np.arange(cfg.n_instances), steps_delta)
         self.wall_times.append(time.perf_counter() - t0)
 
-        obs = self._observe()  # (I, n_obs)
-        if cfg.schema in ("i", "ii"):
+        if cfg.schema in ("i", "ii") or self._record_trajectories:
             self._samples.append(np.asarray(obs))
+            self.n_host_syncs += 1
             self._peak_buffered = max(
                 self._peak_buffered,
                 sum(s.nbytes for s in self._samples))
-            acc = reduction.init_welford(obs.shape[1:])
-            acc = reduction.update_batch(acc, obs)
         else:  # schema iii: on-line reduction, window dropped immediately
-            acc = reduction.init_welford(obs.shape[1:])
-            acc = reduction.update_batch(acc, obs)
             self._peak_buffered = max(self._peak_buffered, obs.nbytes)
+        acc = reduction.init_welford(obs.shape[1:])
+        acc = reduction.update_batch(acc, obs)
         stats = reduction.finalize(acc)
+        if self._grouped_fn is not None:
+            g = self._grouped_fn(obs, self._group_ids_dev)
+            self._grouped.append(
+                reduction.Stats(*(np.asarray(v) for v in g)))
+            self.n_host_syncs += 1
         rec = StatsRecord(
             t=horizon, window=self._window,
             mean=np.asarray(stats.mean), var=np.asarray(stats.var),
             ci90=np.asarray(stats.ci90), n=float(np.asarray(stats.n).max()))
+        self.n_host_syncs += 1
         self.stream.emit(rec)
         self._window += 1
         return rec
@@ -175,49 +358,39 @@ class SimulationEngine:
         return jnp.stack(cols, axis=1)
 
     def run(self) -> list[StatsRecord]:
-        if self.cfg.schema == "i":
-            return self._run_schema_i()
         while self._window < len(self.grid):
             self.run_window()
         return self.stream.records()
 
-    def _run_schema_i(self) -> list[StatsRecord]:
-        """Static farm: each group runs its full trajectory (all windows)
-        before the next group starts; reduction strictly post-hoc."""
-        cfg = self.cfg
-        groups = self.scheduler.groups()
-        all_samples = np.zeros(
-            (cfg.n_instances, len(self.grid), len(self.obs_idx)), np.float32)
-        for idx in groups:
-            for w, horizon in enumerate(self.grid):
-                sl, rates = self._gather(idx)
-                t0 = time.perf_counter()
-                sl = self._advance(sl, rates, float(horizon))
-                self.wall_times.append(time.perf_counter() - t0)
-                self._scatter(idx, sl)
-                obs = np.asarray(self._observe())[idx]
-                all_samples[idx, w] = obs
-        self._peak_buffered = all_samples.nbytes
-        # post-hoc reduction
-        for w, horizon in enumerate(self.grid):
-            acc = reduction.init_welford((len(self.obs_idx),))
-            acc = reduction.update_batch(acc, jnp.asarray(all_samples[:, w]))
-            stats = reduction.finalize(acc)
-            self.stream.emit(StatsRecord(
-                t=float(horizon), window=w,
-                mean=np.asarray(stats.mean), var=np.asarray(stats.var),
-                ci90=np.asarray(stats.ci90), n=float(cfg.n_instances)))
-        self._window = len(self.grid)
-        return self.stream.records()
-
     # ------------------------------------------------------------ fault
     def checkpoint(self, path: str) -> None:
+        """One-file snapshot: pool + scheduler + emitted records (+ any
+        buffered samples/grouped stats). Cost is O(pool + buffered
+        state): constant per call under schema iii (nothing is
+        buffered), but grows with the sample buffer under schemas
+        i/ii — prefer schema iii for per-window checkpointing."""
         p = self._pool
+        extra = {}
+        recs = self.stream.records()
+        if recs:
+            extra = dict(
+                rec_t=np.asarray([r.t for r in recs], np.float64),
+                rec_window=np.asarray([r.window for r in recs], np.int64),
+                rec_mean=np.stack([r.mean for r in recs]),
+                rec_var=np.stack([r.var for r in recs]),
+                rec_ci90=np.stack([r.ci90 for r in recs]),
+                rec_n=np.asarray([r.n for r in recs], np.float64))
+        if self._samples:
+            extra["samples"] = np.stack(self._samples, axis=1)
+        if self._grouped:
+            for name in ("n", "mean", "var", "ci90"):
+                extra[f"grouped_{name}"] = np.stack(
+                    [getattr(g, name) for g in self._grouped])
         np.savez(
             path, x=np.asarray(p.x), t=np.asarray(p.t),
             key=np.asarray(p.key), steps=np.asarray(p.steps),
             dead=np.asarray(p.dead), window=self._window,
-            cost=self.scheduler._cost, rates=self.rates)
+            cost=self.scheduler._cost, rates=self.rates, **extra)
 
     def restore(self, path: str) -> None:
         z = np.load(path if path.endswith(".npz") else path + ".npz")
@@ -227,15 +400,44 @@ class SimulationEngine:
             dead=jnp.asarray(z["dead"]))
         self._window = int(z["window"])
         self.scheduler._cost = z["cost"]
+        if "rates" in z:
+            self.rates = np.asarray(z["rates"], np.float32)
+            self._rates_dev = jnp.asarray(self.rates)
+        # re-populate already-emitted records (buffer only — sinks are
+        # not replayed so a resumed CSV does not double-write)
+        self.stream.buffer.clear()
+        if "rec_t" in z:
+            for i in range(len(z["rec_t"])):
+                self.stream.buffer.append(StatsRecord(
+                    t=float(z["rec_t"][i]), window=int(z["rec_window"][i]),
+                    mean=z["rec_mean"][i], var=z["rec_var"][i],
+                    ci90=z["rec_ci90"][i], n=float(z["rec_n"][i])))
+        if "samples" in z:
+            s = z["samples"]
+            self._samples = [s[:, w] for w in range(s.shape[1])]
+        else:
+            self._samples = []
+        if "grouped_n" in z:
+            self._grouped = [
+                reduction.Stats(n=z["grouped_n"][w], mean=z["grouped_mean"][w],
+                                var=z["grouped_var"][w],
+                                ci90=z["grouped_ci90"][w])
+                for w in range(len(z["grouped_n"]))]
+        else:
+            self._grouped = []
 
     @property
     def peak_buffered_bytes(self) -> int:
         return self._peak_buffered
 
     def trajectories(self) -> Optional[np.ndarray]:
-        """(I, T, n_obs) raw samples (schemas i/ii only)."""
-        if self.cfg.schema == "iii" or not self._samples:
-            return None
-        if self.cfg.schema == "i":
+        """(I, T, n_obs) raw samples. Buffered for schemas i/ii; for
+        schema iii only when record_trajectories was requested."""
+        if not self._samples:
             return None
         return np.stack(self._samples, axis=1)
+
+    def grouped_stats(self) -> list[reduction.Stats]:
+        """Per-window grouped Stats ((n_groups, n_obs) leaves) when a
+        grouped reduction is enabled via set_groups()."""
+        return list(self._grouped)

@@ -82,3 +82,18 @@ def finalize(acc: Welford) -> Stats:
     var = acc.m2 / jnp.maximum(acc.n - 1.0, 1.0)
     sem = jnp.sqrt(var / jnp.maximum(acc.n, 1.0))
     return Stats(n=acc.n, mean=acc.mean, var=var, ci90=Z90 * sem)
+
+
+def grouped_stats(obs, group_ids, n_groups: int) -> Stats:
+    """Per-group statistics over the instance axis (sweep points).
+
+    obs: (I, n_obs) one window's samples; group_ids: (I,) int32 group of
+    each instance; n_groups static. Returns Stats with (n_groups, n_obs)
+    leaves — the per-sweep-point reduction of paper §3.1.2, still one
+    masked Welford fold per group so it composes with merge_over_axis.
+    """
+    def one(g):
+        return update_batch(init_welford(obs.shape[1:]), obs,
+                            mask=group_ids == g)
+
+    return finalize(jax.vmap(one)(jnp.arange(n_groups)))

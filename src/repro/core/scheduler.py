@@ -4,10 +4,12 @@ An *instance* is one stochastic simulation (replica or sweep point);
 a *lane* is a row of the SIMD engine. The scheduler decides which
 instances occupy the lanes for each (window × slot):
 
-* `static_rr` (schema i): instances are partitioned into fixed groups;
-  each group runs its whole trajectory before the next group starts
-  (no sim-time alignment between groups — the paper's load-imbalance
-  case).
+* `static_rr` (schema i): instances are partitioned into fixed
+  round-robin groups that never re-form, whatever their relative cost
+  (the paper's load-imbalance case). Since the engine unified all
+  schemas onto the windowed pool loop, group membership — not
+  trajectory-major execution order — is what distinguishes it; per-lane
+  results are order-invariant either way (keyed RNG).
 * `on_demand` (schema ii/iii): all instances advance window-by-window,
   sliced into lane-width groups per window (fixed sim-time slices, the
   stop/restart instance objects of §5.2(ii) realised as gather/scatter

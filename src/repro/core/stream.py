@@ -5,13 +5,17 @@ Trajectory statistics flow out of the engine as a stream of
 writes incrementally (no trajectory is ever fully buffered — schema
 iii's memory bound). A bounded in-memory buffer with drop-oldest
 backpressure mirrors the FastFlow buffered collector.
+
+Sinks have an explicit lifecycle: anything exposing `close()` is closed
+by `StatsStream.close()`, which `repro.api.simulate()` and the CLI call
+when a run completes. `CsvSink` holds its file handle open for the whole
+run and flushes once on close (not per row).
 """
 from __future__ import annotations
 
 import collections
 import csv
-import io
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
@@ -48,21 +52,63 @@ class StatsStream:
     def records(self) -> list[StatsRecord]:
         return list(self.buffer)
 
+    def close(self) -> None:
+        """Close every sink that has a close() lifecycle."""
+        for s in self.sinks:
+            close = getattr(s, "close", None)
+            if callable(close):
+                close()
 
-def csv_sink(path: str, obs_names: list[str]) -> Callable[[StatsRecord], None]:
-    f = open(path, "w", newline="")
-    w = csv.writer(f)
-    header = ["t", "n"]
-    for n in obs_names:
-        header += [f"{n}_mean", f"{n}_var", f"{n}_ci90"]
-    w.writerow(header)
 
-    def sink(rec: StatsRecord) -> None:
+class CsvSink:
+    """Incremental CSV writer for the stats stream.
+
+    One open file handle for the run; rows go through the OS buffer and
+    are flushed on close() (per-row flushing dominated small-window
+    runs). Usable as a context manager; `StatsStream.close()` /
+    `simulate()` close it automatically, and the finaliser is a safety
+    net for abandoned handles.
+    """
+
+    def __init__(self, path: str, obs_names: list[str]):
+        self.path = path
+        self.obs_names = list(obs_names)
+        self._f = open(path, "w", newline="")
+        self._w = csv.writer(self._f)
+        header = ["t", "n"]
+        for n in self.obs_names:
+            header += [f"{n}_mean", f"{n}_var", f"{n}_ci90"]
+        self._w.writerow(header)
+        self.closed = False
+
+    def __call__(self, rec: StatsRecord) -> None:
+        if self.closed:
+            raise ValueError(f"CsvSink({self.path!r}) is closed")
         row = [f"{rec.t:.6g}", f"{rec.n:.0f}"]
-        for i in range(len(obs_names)):
+        for i in range(len(self.obs_names)):
             row += [f"{rec.mean[i]:.6g}", f"{rec.var[i]:.6g}",
                     f"{rec.ci90[i]:.6g}"]
-        w.writerow(row)
-        f.flush()
+        self._w.writerow(row)
 
-    return sink
+    def close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            self._f.flush()
+            self._f.close()
+
+    def __enter__(self) -> "CsvSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # safety net — prefer explicit close()
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def csv_sink(path: str, obs_names: list[str]) -> CsvSink:
+    """Back-compat constructor for CsvSink (old functional sink API)."""
+    return CsvSink(path, obs_names)

@@ -1,25 +1,54 @@
-"""Simulation driver — the paper's tool as a CLI.
+"""Simulation driver — the paper's tool as a CLI over repro.api.
 
   PYTHONPATH=src python -m repro.launch.simulate --model ecoli \
       --instances 100 --t-end 50 --windows 100 --schema iii \
       --out ecoli_stats.csv
+
+Parameter sweeps ride the same entry point:
+
+  ... --model lv2 --sweep die=0.3,0.6,1.2 --replicas 32 --per-point
 """
 from __future__ import annotations
 
 import argparse
-import time
+import os
 
-import numpy as np
-
+from repro.api import (
+    CsvSink,
+    Ensemble,
+    Experiment,
+    Policy,
+    Reduction,
+    Schedule,
+    Schema,
+    simulate,
+)
 from repro.core.cwc.models import MODELS
-from repro.core.engine import SimConfig, SimulationEngine
-from repro.core.stream import csv_sink
+
+
+def _parse_sweep(specs: list[str]) -> dict:
+    """["die=0.3,0.6", "grow=1,2"] -> {"die": [...], "grow": [...]}."""
+    out = {}
+    for s in specs:
+        name, _, vals = s.partition("=")
+        if not vals:
+            raise SystemExit(f"--sweep expects name=v1,v2,... got {s!r}")
+        out[name] = [float(v) for v in vals.split(",")]
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", choices=list(MODELS), default="lv2")
-    ap.add_argument("--instances", type=int, default=100)
+    ap.add_argument("--instances", type=int, default=100,
+                    help="ensemble size (replicas per point with --sweep)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="alias for --instances (sweep wording)")
+    ap.add_argument("--sweep", action="append", default=[],
+                    metavar="NAME=V1,V2,...",
+                    help="full-factorial rate sweep; repeatable")
+    ap.add_argument("--per-point", action="store_true",
+                    help="grouped per-sweep-point reduction")
     ap.add_argument("--t-end", type=float, default=10.0)
     ap.add_argument("--windows", type=int, default=50)
     ap.add_argument("--lanes", type=int, default=128)
@@ -29,40 +58,60 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas SSA kernel")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy per-group dispatch (benchmark baseline)")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint file: written per window, resumed "
+                    "from when it already exists")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    replicas = args.replicas if args.replicas is not None else args.instances
     model = MODELS[args.model]()
-    cfg = SimConfig(n_instances=args.instances, t_end=args.t_end,
-                    n_windows=args.windows, n_lanes=args.lanes,
-                    schema=args.schema, policy=args.policy, seed=args.seed,
-                    use_kernel=args.kernel)
-    eng = SimulationEngine(model, cfg)
+    experiment = Experiment(
+        model=model,
+        ensemble=Ensemble.make(replicas=replicas,
+                               sweep=_parse_sweep(args.sweep) or None),
+        schedule=Schedule(t_end=args.t_end, n_windows=args.windows,
+                          schema=Schema.coerce(args.schema),
+                          policy=Policy.coerce(args.policy)),
+        reduction=(Reduction.PER_POINT if args.per_point
+                   else Reduction.ENSEMBLE),
+        seed=args.seed,
+        n_lanes=args.lanes,
+        use_kernel=args.kernel,
+        host_loop=args.host_loop)
+
     if args.out:
-        eng.stream.attach(csv_sink(args.out, eng.obs_names))
+        from repro.api.run import observable_names
 
-    t0 = time.time()
-    if args.ckpt:
-        import os
+        experiment = experiment.with_(
+            sinks=(CsvSink(args.out, observable_names(model)),))
 
-        if os.path.exists(args.ckpt):
-            eng.restore(args.ckpt)
-            print(f"resumed at window {eng._window}")
-        while eng._window < len(eng.grid):
-            eng.run_window()
-            eng.checkpoint(args.ckpt)
-    else:
-        eng.run()
-    wall = time.time() - t0
+    resume = bool(args.ckpt) and os.path.exists(
+        args.ckpt if args.ckpt.endswith(".npz") else args.ckpt + ".npz")
+    if resume:
+        print(f"resuming from {args.ckpt}")
+    result = simulate(experiment, checkpoint_path=args.ckpt, resume=resume)
 
-    recs = eng.stream.records()
+    tele = result.telemetry
     print(f"model={model.name} schema={args.schema} "
-          f"instances={args.instances} windows={len(recs)} "
-          f"wall={wall:.2f}s peak_buffered={eng.peak_buffered_bytes}B")
-    last = recs[-1]
-    for name, m, v, ci in zip(eng.obs_names, last.mean, last.var, last.ci90):
+          f"instances={experiment.ensemble.n_instances} "
+          f"windows={len(result.records)} "
+          f"wall={tele.wall_time_s:.2f}s "
+          f"dispatches={tele.dispatches} host_syncs={tele.host_syncs} "
+          f"peak_buffered={tele.peak_buffered_bytes}B")
+    last = result.records[-1]
+    for name, m, v, ci in zip(result.obs_names, last.mean, last.var,
+                              last.ci90):
         print(f"  {name:24s} mean={m:10.2f} var={v:12.2f} ci90=±{ci:.3f}")
+    pp = result.per_point()
+    if pp is not None and len(pp["points"]) > 1:
+        print("per-sweep-point final means:")
+        for p, point in enumerate(pp["points"]):
+            vals = " ".join(f"{name}={m:.1f}" for name, m in
+                            zip(result.obs_names, pp["mean"][-1, p]))
+            print(f"  {point}: {vals}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.common import ParamDef, einsum, einsum_out
 from repro.models.rope import apply_rope
@@ -296,7 +297,7 @@ def decode_attention_seqsharded(q, k_cache, v_cache, k_new, v_new,
     batch_rule = topo.rules["batch"] if axis != "data" else None
     pspec_cache = P(batch_rule, axis, None, None)
     rep = P(batch_rule, None, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(rep, pspec_cache, pspec_cache, rep, rep, P(batch_rule),
                   P(batch_rule)),

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models.common import ParamDef, einsum
 from repro.models.mlp import apply_mlp
@@ -192,7 +193,7 @@ def apply_moe(params, x, cfg: ModelConfig, topo: Topology):
         aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
         return y.astype(x_local.dtype).reshape(bl, sl, d), aux
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+    return compat.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
                          out_specs=(x_spec, P()), check_vma=False)(params, x)
 
 
@@ -246,7 +247,7 @@ def _apply_moe_ep_small(params, x, cfg: ModelConfig, topo: Topology, x_spec):
         aux = jax.lax.pmean(aux, data_axes) if data_axes else aux
         return y.astype(x_local.dtype).reshape(bl, sl, d), aux
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+    return compat.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
                          out_specs=(x_spec, P()), check_vma=False)(params, x)
 
 
@@ -302,7 +303,7 @@ def _apply_moe_ep(params, x, cfg: ModelConfig, topo: Topology, x_spec):
         aux = jax.lax.pmean(aux, ("model", *data_axes))
         return y.reshape(bl, sl, d), aux
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
+    return compat.shard_map(body, mesh=mesh, in_specs=(p_specs, x_spec),
                          out_specs=(x_spec, P()), check_vma=False)(params, x)
 
 

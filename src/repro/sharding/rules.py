@@ -18,6 +18,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import MeshSpec, ModelConfig, ShardingConfig
 
 # Logical axis vocabulary ----------------------------------------------------
@@ -46,12 +47,7 @@ def make_mesh_from_spec(spec: MeshSpec, devices: Optional[Sequence] = None) -> M
     need = spec.n_devices
     if len(devs) < need:
         raise ValueError(f"mesh {spec.shape} needs {need} devices, have {len(devs)}")
-    return jax.make_mesh(
-        spec.shape,
-        spec.axes,
-        devices=devs[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(spec.axes),
-    )
+    return compat.make_mesh(spec.shape, spec.axes, devices=devs[:need])
 
 
 @dataclass(frozen=True)
@@ -192,9 +188,6 @@ class Topology:
 
 def smoke_topology(model: ModelConfig, sharding: ShardingConfig | None = None) -> Topology:
     """1-device topology with production axis names (for CPU tests)."""
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        devices=jax.devices()[:1],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
     return Topology(mesh, model, sharding or ShardingConfig(strategy="dp_tp"))

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import OptimizerConfig, ShardingConfig
 from repro.train import compression
 from repro.train.optim import AdamWState, adamw_update, init_opt_state
@@ -133,7 +134,7 @@ def make_dp_train_step(model, ocfg: OptimizerConfig, mesh, axis: str = "data",
         rep = jax.tree.map(lambda _: P(), state["params"])
         opt_spec = jax.tree.map(lambda _: P(), state["opt"])
         err_spec = jax.tree.map(lambda _: P(), state["error"])
-        out = jax.shard_map(
+        out = compat.shard_map(
             body, mesh=mesh,
             in_specs=(rep, opt_spec, err_spec, batch_spec),
             out_specs=(rep, opt_spec, err_spec,

@@ -58,8 +58,8 @@ def test_elastic_restore_with_shardings(tmp_path):
     elastic-rescale path; trivially a 1-device sharding here)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",), devices=jax.devices()[:1])
     t = _tree()
     store.save(t, str(tmp_path), 2)
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)

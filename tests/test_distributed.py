@@ -127,14 +127,15 @@ def test_welford_merge_over_axis():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core.reduction import init_welford, update_batch, merge_over_axis, finalize
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (64, 3)) * 5 + 2
     def local(x_loc):
         acc = update_batch(init_welford((3,)), x_loc)
         return merge_over_axis(acc, "data")
-    acc = jax.shard_map(local, mesh=mesh, in_specs=P("data"),
-                        out_specs=P(), check_vma=False)(x)
+    from repro.compat import shard_map
+    acc = shard_map(local, mesh=mesh, in_specs=P("data"),
+                    out_specs=P(), check_vma=False)(x)
     s = finalize(acc)
     np.testing.assert_allclose(np.asarray(s.mean), np.asarray(x.mean(0)),
                                rtol=1e-5)
@@ -148,14 +149,15 @@ def test_compressed_psum_error_feedback():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.train.compression import compressed_psum
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((4,), ("pod",))
     g = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
     def body(g_loc, err):
         return compressed_psum(g_loc[0], "pod", err)
     # single round: quantisation error bounded by scale
-    out, err = jax.shard_map(body, mesh=mesh, in_specs=(P("pod"), P()),
-                             out_specs=(P(), P()), check_vma=False)(
+    from repro.compat import shard_map
+    out, err = shard_map(body, mesh=mesh, in_specs=(P("pod"), P()),
+                         out_specs=(P(), P()), check_vma=False)(
         g, jnp.zeros((256,)))
     exact = np.asarray(g.sum(0))
     got = np.asarray(out)
@@ -168,10 +170,10 @@ def test_compressed_psum_error_feedback():
         err = jnp.zeros((128,))
         acc = jnp.zeros((128,))
         for t in range(T):
-            out, err = jax.shard_map(body, mesh=mesh,
-                                     in_specs=(P("pod"), P()),
-                                     out_specs=(P(), P()),
-                                     check_vma=False)(gs[t], err)
+            out, err = shard_map(body, mesh=mesh,
+                                 in_specs=(P("pod"), P()),
+                                 out_specs=(P(), P()),
+                                 check_vma=False)(gs[t], err)
             acc = acc + out
         return acc
     acc_c = run(True)

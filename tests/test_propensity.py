@@ -1,6 +1,11 @@
 """Propensity math: oracle match + hypothesis invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.reactions import make_system, propensities, propensities_ref

@@ -61,6 +61,7 @@ def test_stats_stream_and_csv(tmp_path):
             t=float(w), window=w, mean=np.array([w, 2 * w], float),
             var=np.zeros(2), ci90=np.zeros(2), n=10))
     assert stream.dropped == 2  # bounded buffer
+    stream.close()  # sinks flush-on-close (no per-row flush)
     lines = open(path).read().strip().splitlines()
     assert len(lines) == 7  # header + all 6 (sink sees everything)
     assert lines[0].startswith("t,n,a_mean")
