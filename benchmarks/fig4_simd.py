@@ -67,7 +67,7 @@ def run(n_species: int):
 
     pool = init_lanes(system, 256, seed=1)
     t0 = time.perf_counter()
-    out = fused_window(pool, tensors, HORIZON, chunk_steps=64)
+    out = fused_window(pool, tensors, HORIZON, chunk_steps=64).state
     jax.block_until_ready(out.x)
     fused = (time.perf_counter() - t0) / max(
         float(np.asarray(out.steps).sum()), 1)

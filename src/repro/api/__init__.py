@@ -23,6 +23,7 @@ from repro.api.spec import (
     Ensemble,
     Experiment,
     ExperimentError,
+    Partitioning,
     Policy,
     Reduction,
     Schedule,
@@ -36,6 +37,7 @@ __all__ = [
     "Ensemble",
     "Experiment",
     "ExperimentError",
+    "Partitioning",
     "Policy",
     "Reduction",
     "Schedule",

@@ -28,10 +28,16 @@ def observable_names(model) -> list[str]:
 
 def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
     """Compile an Experiment down to a ready-to-run engine (no windows
-    are run). Exposed for benchmarks; prefer simulate()."""
+    are run). Exposed for benchmarks; prefer simulate().
+
+    When the Experiment carries a multi-shard Partitioning and no mesh
+    is supplied, the farm's mesh is built by the dispatch seam
+    (`core/dispatch.select_dispatch`) with
+    `compat.make_mesh((n_shards,), (axis,))`."""
     experiment.validate()
     ens = experiment.ensemble
     sched = experiment.schedule
+    part = experiment.partitioning
     cfg = SimConfig(
         n_instances=ens.n_instances,
         t_end=float(sched.t_end),
@@ -45,10 +51,15 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         host_loop=experiment.host_loop)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
-    engine = SimulationEngine(
-        experiment.model, cfg, mesh=mesh, group_ids=group_ids,
-        record_trajectories=experiment.record_trajectories,
-        _deprecated=False)
+    try:
+        engine = SimulationEngine(
+            experiment.model, cfg, mesh=mesh, group_ids=group_ids,
+            record_trajectories=experiment.record_trajectories,
+            partitioning=part, _deprecated=False)
+    except ValueError as e:
+        # dispatch-seam errors (device count, mesh/partitioning
+        # mismatch) surface in the API's vocabulary
+        raise ExperimentError(str(e)) from e
     if ens.sweep is not None:
         try:
             engine.set_rates(sweep_rates(engine.system, ens.sweep))

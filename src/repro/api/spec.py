@@ -19,8 +19,14 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core.cwc.rules import CWCModel
+from repro.core.dispatch import Partitioning
 from repro.core.reactions import ReactionSystem
 from repro.core.sweep import SweepSpec
+
+__all__ = [
+    "Ensemble", "Experiment", "ExperimentError", "Partitioning",
+    "Policy", "Reduction", "Schedule", "Schema",
+]
 
 
 class ExperimentError(ValueError):
@@ -169,6 +175,10 @@ class Experiment:
     schema ONLINE (forfeits its memory bound — opt-in).
     host_loop / use_kernel: select the legacy per-group host dispatch
     (benchmark baseline) or the fused Pallas kernel path.
+    partitioning: shard the instance pool over a device mesh
+    (`Partitioning(n_shards=..., stat_blocks=...)`); records depend on
+    `stat_blocks` (the statistics merge tree), never on the physical
+    shard count, so pin it when comparing runs across mesh shapes.
     """
 
     model: Union[CWCModel, ReactionSystem]
@@ -181,6 +191,7 @@ class Experiment:
     record_trajectories: bool = False
     use_kernel: bool = False
     host_loop: bool = False
+    partitioning: Optional[Partitioning] = None
 
     def validate(self) -> None:
         if not isinstance(self.model, (CWCModel, ReactionSystem)):
@@ -209,6 +220,22 @@ class Experiment:
             raise ExperimentError(
                 "max_steps_per_window is not honoured by the fused "
                 "Pallas kernel path (use_kernel=True); drop one of them")
+        if self.partitioning is not None:
+            if not isinstance(self.partitioning, Partitioning):
+                raise ExperimentError(
+                    "Experiment.partitioning must be a Partitioning, "
+                    f"got {type(self.partitioning).__name__}")
+            try:
+                self.partitioning.validate(self.ensemble.n_instances)
+            except ValueError as e:
+                raise ExperimentError(str(e)) from e
+            if self.partitioning.n_shards > 1 and (
+                    self.use_kernel or self.host_loop):
+                raise ExperimentError(
+                    "partitioning with n_shards > 1 requires the fused "
+                    "dispatch; it is incompatible with use_kernel / "
+                    "host_loop (both are host-driven single-device "
+                    "paths)")
         for s in self.sinks:
             if not callable(s):
                 raise ExperimentError(f"sink {s!r} is not callable")

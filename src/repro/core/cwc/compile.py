@@ -24,7 +24,7 @@ def compile_model(model: CWCModel) -> tuple[ReactionSystem, dict]:
     t0 = model.initial_term()
 
     # 1. enumerate compartment contexts (path () = top level)
-    contexts: list[tuple, str] = []  # (path, label)
+    contexts: list[tuple[tuple, str]] = []  # (path, label)
     content_by_path: dict = {}
     for path, label, content in t0.walk():
         if label is None:
@@ -91,9 +91,9 @@ def compile_model(model: CWCModel) -> tuple[ReactionSystem, dict]:
         for a, c in content_by_path[path].atoms.items():
             x0[_species_name(path, label, a)] = c
 
-    # remap reactions/x0 keys to canonical species list order
-    sys = make_system(species, _remap(reactions, species, contexts, alphabet),
-                      x0, names)
+    # reactions/x0 already use species-name keys; make_system maps them
+    # onto the canonical species order
+    sys = make_system(species, reactions, x0, names)
 
     obs_idx = {}
     for obs in model.observables:
@@ -108,10 +108,6 @@ def compile_model(model: CWCModel) -> tuple[ReactionSystem, dict]:
     return sys, meta
 
 
-def _key(path, a):
-    return (path, a)
-
-
 def _path_str(path, label) -> str:
     return (label if not path else
             f"{label}[{'.'.join(map(str, path))}]")
@@ -119,8 +115,3 @@ def _path_str(path, label) -> str:
 
 def _species_name(path, label, atom) -> str:
     return f"{_path_str(path, label)}/{atom}"
-
-
-def _remap(reactions, species, contexts, alphabet):
-    # reactions already use species-name keys
-    return reactions

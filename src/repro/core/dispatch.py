@@ -1,0 +1,443 @@
+"""Window-dispatch strategies — the engine's execution seam.
+
+Three ways to advance the instance pool one window, selected by
+`select_dispatch` (SimulationEngine no longer branches on booleans
+inside its window loop):
+
+  host_loop : legacy per-group gather -> advance -> scatter round trips
+              (the benchmark baseline, and the required path for the
+              Pallas fused kernel, whose chunk loop stays host-driven);
+  fused     : one jitted, donated `window_step` over the whole pool
+              (device-side permutation + lax.scan over lane slices);
+  sharded   : the same window body wrapped in `compat.shard_map` over a
+              mesh data axis — each shard advances its contiguous slice
+              of the pool locally, and per-window Welford accumulators
+              (plain and grouped) are assembled device-side with ONE
+              psum per window (`reduction.gather_blocks_over_axis`),
+              so only O(stat_blocks x n_obs) floats ever cross shards;
+              the tiny final fold is `reduction.merge_blocks`.
+
+All three paths are bit-identical per lane (keyed per-lane RNG;
+identical per-lane ops). The sharded path additionally pins the
+statistics merge tree to `Partitioning.blocks` virtual blocks, so its
+StatsRecords are bit-identical for ANY shard count dividing the block
+count — including the unsharded fused path configured with the same
+`stat_blocks` — which is what makes checkpoints mesh-shape-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core import reduction
+from repro.core.gillespie import LaneState, ssa_step
+
+
+@dataclass(frozen=True)
+class Partitioning:
+    """How the instance pool is distributed over a device mesh.
+
+    n_shards: devices along the farm's data axis; each owns the
+    contiguous instance block [k*I/K, (k+1)*I/K).
+    axis: mesh axis name (the psum/shard_map axis).
+    stat_blocks: virtual blocks the per-window statistics reduce over
+    (defaults to n_shards). Records depend on this number — never on
+    the physical shard count — so pin it when comparing runs across
+    mesh shapes or resuming a checkpoint on a different device count.
+    """
+
+    n_shards: int = 1
+    axis: str = "data"
+    stat_blocks: Optional[int] = None
+
+    @property
+    def blocks(self) -> int:
+        return (self.stat_blocks if self.stat_blocks is not None
+                else max(self.n_shards, 1))
+
+    def validate(self, n_instances: int) -> None:
+        if self.n_shards < 1:
+            raise ValueError(
+                f"Partitioning.n_shards must be >= 1, got {self.n_shards}")
+        if not self.axis or not isinstance(self.axis, str):
+            raise ValueError(
+                f"Partitioning.axis must be a mesh axis name, "
+                f"got {self.axis!r}")
+        if n_instances % self.n_shards:
+            raise ValueError(
+                f"n_instances ({n_instances}) must divide evenly over "
+                f"Partitioning.n_shards ({self.n_shards})")
+        v = self.blocks
+        if v < 1:
+            raise ValueError(
+                f"Partitioning.stat_blocks must be >= 1, got {v}")
+        if v % self.n_shards:
+            raise ValueError(
+                f"Partitioning.stat_blocks ({v}) must be a multiple of "
+                f"n_shards ({self.n_shards}) so each shard owns whole "
+                "blocks")
+        if n_instances % v:
+            raise ValueError(
+                f"n_instances ({n_instances}) must divide evenly into "
+                f"Partitioning.stat_blocks ({v}) blocks")
+
+
+class WindowResult(NamedTuple):
+    """What one dispatched window hands back to the engine.
+
+    obs: (I, n_obs) window samples (device array; sharded under the
+    sharded strategy — only pulled when trajectories are buffered).
+    steps_delta: per-instance events this window (None on the host path
+    unless the predictive policy asked for it).
+    stats / grouped: per-window Stats already reduced device-side
+    (sharded strategy), or None when the engine should compute them
+    from `obs`.
+    """
+
+    obs: Any
+    steps_delta: Any
+    stats: Optional[reduction.Stats]
+    grouped: Optional[reduction.Stats]
+
+
+def make_window_body(tensors3, n_lanes: int, obs_idx,
+                     max_steps: Optional[int]):
+    """The shared whole-pool window advance: permutation gather,
+    lax.scan over fixed-size lane slices (each running the masked SSA
+    loop to the horizon), inverse scatter, device-side observables.
+
+    Used verbatim by BOTH the fused and the sharded strategies (the
+    sharded one applies it per shard with shard-local indices), which
+    is what keeps their per-lane trajectories bit-identical.
+    """
+    idx_t, coef_t, delta_t = tensors3
+    obs_idx = tuple(tuple(int(i) for i in ii) for ii in obs_idx)
+
+    def window_body(pool: LaneState, rates, perm, horizon):
+        n_groups = perm.shape[0] // n_lanes
+
+        def take(a):
+            return a[perm].reshape((n_groups, n_lanes) + a.shape[1:])
+
+        lanes = LaneState(*(take(a) for a in pool))
+        rates_g = take(rates)
+
+        def advance_group(carry, grp):
+            sl, r = grp
+            tensors = (idx_t, coef_t, delta_t, r)
+
+            def cond(s):
+                return jnp.any((s.t < horizon) & ~s.dead)
+
+            def body(s):
+                return ssa_step(s, tensors, horizon)
+
+            if max_steps is None:
+                out = jax.lax.while_loop(cond, body, sl)
+            else:
+                out = jax.lax.fori_loop(
+                    0, max_steps,
+                    lambda _, s: jax.lax.cond(
+                        cond(s), body, lambda s_: s_, s),
+                    sl)
+            out = out._replace(
+                t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
+            return carry, out
+
+        _, advanced = jax.lax.scan(advance_group, 0, (lanes, rates_g))
+        flat = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups * n_lanes,) + a.shape[2:]),
+            advanced)
+        # duplicate padding indices write identical data — safe
+        new_pool = LaneState(*(
+            p.at[perm].set(v) for p, v in zip(pool, flat)))
+        cols = [new_pool.x[:, list(ii)].sum(axis=1) for ii in obs_idx]
+        obs = jnp.stack(cols, axis=1)
+        return new_pool, obs, new_pool.steps - pool.steps
+
+    return window_body
+
+
+class _Dispatch:
+    """Base strategy: holds a back-reference to the engine, advances
+    the pool one window, and accounts its own telemetry."""
+
+    name = "?"
+
+    def __init__(self, engine):
+        self.eng = engine
+
+    def place(self, tree):
+        """Device placement for pool-shaped pytrees (leading instance
+        axis). Identity except under sharding."""
+        return tree
+
+    def advance(self, horizon) -> WindowResult:
+        raise NotImplementedError
+
+
+class HostLoopDispatch(_Dispatch):
+    """Legacy baseline: per-group gather -> advance -> scatter, one
+    dispatch per (group x window). Also the Pallas-kernel path."""
+
+    name = "host_loop"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self._advance_fn = self._make_advance()
+
+    def _make_advance(self):
+        eng = self.eng
+        idx_t, coef_t, delta_t, _ = eng._tensors_base
+        cfg = eng.cfg
+
+        if cfg.use_kernel:
+            from repro.kernels.ops import fused_window
+
+            def advance(pool_slice, rates, horizon):
+                # host-driven chunk loop (pallas_call inside is jit'd);
+                # must NOT be wrapped in jax.jit itself
+                return fused_window(pool_slice, (idx_t, coef_t, delta_t,
+                                                 rates), horizon)
+
+            return advance
+
+        max_steps = cfg.max_steps_per_window
+
+        def advance(pool_slice: LaneState, rates, horizon):
+            tensors = (idx_t, coef_t, delta_t, rates)
+
+            def cond(s):
+                return jnp.any((s.t < horizon) & ~s.dead)
+
+            def body(s):
+                return ssa_step(s, tensors, horizon)
+
+            if max_steps is None:
+                out = jax.lax.while_loop(cond, body, pool_slice)
+            else:
+                out = jax.lax.fori_loop(
+                    0, max_steps,
+                    lambda _, s: jax.lax.cond(
+                        cond(s), body, lambda s_: s_, s),
+                    pool_slice)
+            return out._replace(
+                t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
+
+        return jax.jit(advance, donate_argnums=(0,))
+
+    def _gather(self, idx) -> tuple[LaneState, jax.Array]:
+        p = self.eng._pool
+        sl = LaneState(x=p.x[idx], t=p.t[idx], key=p.key[idx],
+                       steps=p.steps[idx], dead=p.dead[idx])
+        # index the cached device rates — no per-window host re-upload
+        return sl, self.eng._rates_dev[idx]
+
+    def _scatter(self, idx, sl: LaneState) -> None:
+        p = self.eng._pool
+        # guard duplicate padding indices: later writes win (same data)
+        self.eng._pool = LaneState(
+            x=p.x.at[idx].set(sl.x), t=p.t.at[idx].set(sl.t),
+            key=p.key.at[idx].set(sl.key),
+            steps=p.steps.at[idx].set(sl.steps),
+            dead=p.dead.at[idx].set(sl.dead))
+
+    def advance(self, horizon) -> WindowResult:
+        eng = self.eng
+        use_kernel = eng.cfg.use_kernel
+        predictive = eng.scheduler.policy == "predictive"
+        steps_before = None
+        if predictive:
+            steps_before = np.asarray(eng._pool.steps)
+            eng.n_host_syncs += 1
+        for idx in eng.scheduler.groups():
+            sl, rates = self._gather(idx)
+            out = self._advance_fn(sl, rates, horizon)
+            if use_kernel:
+                # threaded chunk-loop telemetry (satellite: the per-
+                # chunk bool() pulls used to go uncounted)
+                eng.n_dispatches += out.n_dispatches
+                eng.n_host_syncs += out.n_host_syncs
+                sl = out.state
+            else:
+                sl = out
+                eng.n_dispatches += 1
+            self._scatter(idx, sl)
+        steps_delta = None
+        if predictive:
+            steps_delta = np.asarray(eng._pool.steps) - steps_before
+            eng.n_host_syncs += 1
+        return WindowResult(eng._observe(), steps_delta, None, None)
+
+
+class FusedDispatch(_Dispatch):
+    """One jitted, donated window_step for the whole pool — one device
+    dispatch per window (DESIGN.md §3)."""
+
+    name = "fused"
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        idx_t, coef_t, delta_t, _ = engine._tensors_base
+        body = make_window_body((idx_t, coef_t, delta_t),
+                                engine.scheduler.n_lanes, engine.obs_idx,
+                                engine.cfg.max_steps_per_window)
+        self._step = jax.jit(body, donate_argnums=(0,))
+
+    def advance(self, horizon) -> WindowResult:
+        eng = self.eng
+        eng._pool, obs, steps_delta = self._step(
+            eng._pool, eng._rates_dev, eng._permutation(), horizon)
+        eng.n_dispatches += 1
+        return WindowResult(obs, steps_delta, None, None)
+
+
+class ShardedDispatch(_Dispatch):
+    """The fused window body sharded over a mesh data axis.
+
+    Pool, rates, and the scheduler permutation are sharded per device
+    (in_specs P(axis)); each shard advances its own lane slices with
+    shard-local indices; per-window statistic partials cross shards
+    through `reduction.gather_blocks_over_axis` (one psum) and come
+    back replicated, so the host sees one dispatch and O(1) pulls per
+    window regardless of shard count.
+    """
+
+    name = "sharded"
+
+    def __init__(self, engine, mesh, partitioning: Partitioning):
+        super().__init__(engine)
+        part = partitioning
+        if engine.cfg.n_instances % part.n_shards:
+            raise ValueError(
+                f"n_instances={engine.cfg.n_instances} not divisible by "
+                f"n_shards={part.n_shards}")
+        if part.axis not in mesh.shape:
+            raise ValueError(
+                f"mesh has no axis {part.axis!r} (axes: "
+                f"{tuple(mesh.axis_names)})")
+        if mesh.shape[part.axis] != part.n_shards:
+            raise ValueError(
+                f"mesh axis {part.axis!r} has size "
+                f"{mesh.shape[part.axis]}, but Partitioning.n_shards is "
+                f"{part.n_shards}")
+        self.mesh = mesh
+        self.part = part
+        self._sharding = NamedSharding(mesh, P(part.axis))
+        self._step = None
+        # cache key: (grouped?, n_groups) — the jitted step closes over
+        # both, so a set_groups() with a new group count must rebuild
+        self._step_key: Optional[tuple] = None
+
+    def place(self, tree):
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, self._sharding), tree)
+
+    def _build(self, grouped: bool):
+        eng = self.eng
+        part = self.part
+        axis, n_shards = part.axis, part.n_shards
+        per_shard = eng.cfg.n_instances // n_shards
+        v_loc = part.blocks // n_shards
+        n_groups = eng._n_groups if grouped else 0
+        idx_t, coef_t, delta_t, _ = eng._tensors_base
+        body = make_window_body((idx_t, coef_t, delta_t),
+                                eng.scheduler.n_lanes, eng.obs_idx,
+                                eng.cfg.max_steps_per_window)
+
+        def local(pool, rates, perm, gids, horizon):
+            k = jax.lax.axis_index(axis)
+            perm_loc = perm - k * per_shard  # global -> shard-local
+            new_pool, obs, steps_delta = body(pool, rates, perm_loc,
+                                              horizon)
+            # psum-gather the per-block partial accumulators; the final
+            # O(V) fold runs eagerly host-side (advance() below) with
+            # the exact op sequence the unsharded path uses, so records
+            # stay bitwise independent of the mesh shape
+            acc = reduction.blocked_welford(obs, v_loc)
+            stack = reduction.gather_blocks_over_axis(acc, axis,
+                                                      n_shards)
+            outs = (new_pool, obs, steps_delta, stack)
+            if grouped:
+                gacc = reduction.blocked_grouped_welford(
+                    obs, gids, n_groups, v_loc)
+                gstack = reduction.gather_blocks_over_axis(gacc, axis,
+                                                           n_shards)
+                outs = outs + (gstack,)
+            return outs
+
+        sh = P(axis)
+        in_specs = (sh, sh, sh, sh, P())
+        out_specs = (sh, sh, sh, P()) + ((P(),) if grouped else ())
+        if not grouped:
+            def local_nogids(pool, rates, perm, horizon):
+                return local(pool, rates, perm, None, horizon)
+
+            fn = compat.shard_map(local_nogids, mesh=self.mesh,
+                                  in_specs=(sh, sh, sh, P()),
+                                  out_specs=out_specs, check_vma=False)
+        else:
+            fn = compat.shard_map(local, mesh=self.mesh,
+                                  in_specs=in_specs,
+                                  out_specs=out_specs, check_vma=False)
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def advance(self, horizon) -> WindowResult:
+        eng = self.eng
+        grouped = eng._group_ids_dev is not None
+        key = (grouped, eng._n_groups if grouped else 0)
+        if self._step is None or self._step_key != key:
+            self._step = self._build(grouped)
+            self._step_key = key
+        if grouped:
+            eng._pool, obs, steps_delta, stack, gstack = self._step(
+                eng._pool, eng._rates_dev, eng._permutation(),
+                eng._group_ids_dev, horizon)
+            gstats = reduction.finalize(reduction.merge_blocks(gstack))
+        else:
+            eng._pool, obs, steps_delta, stack = self._step(
+                eng._pool, eng._rates_dev, eng._permutation(), horizon)
+            gstats = None
+        stats = reduction.finalize(reduction.merge_blocks(stack))
+        eng.n_dispatches += 1
+        return WindowResult(obs, steps_delta, stats, gstats)
+
+
+def select_dispatch(engine, mesh):
+    """Resolve the engine's (cfg, partitioning, mesh) to one strategy.
+
+    Returns (dispatch, mesh): the mesh is built here (via
+    `compat.make_mesh`) when a multi-shard Partitioning arrives without
+    one.
+    """
+    cfg = engine.cfg
+    part = engine.partitioning
+    if part is not None and part.n_shards > 1:
+        if cfg.use_kernel:
+            raise ValueError(
+                "sharded dispatch is incompatible with use_kernel=True "
+                "(the Pallas chunk loop is host-driven); drop one")
+        if cfg.host_loop:
+            raise ValueError(
+                "sharded dispatch is incompatible with host_loop=True; "
+                "the host loop is a single-device baseline")
+        part.validate(cfg.n_instances)
+        if mesh is None:
+            n_dev = len(jax.devices())
+            if part.n_shards > n_dev:
+                raise ValueError(
+                    f"Partitioning.n_shards={part.n_shards} but only "
+                    f"{n_dev} device(s) are visible (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N to farm "
+                    "over forced host devices)")
+            mesh = compat.make_mesh((part.n_shards,), (part.axis,))
+        return ShardedDispatch(engine, mesh, part), mesh
+    if cfg.host_loop or cfg.use_kernel:
+        return HostLoopDispatch(engine), mesh
+    return FusedDispatch(engine), mesh

@@ -17,13 +17,18 @@ kept behind `SimConfig.host_loop` (and for the Pallas fused kernel,
 whose chunk loop must stay host-driven) as the benchmark baseline; both
 paths are bit-identical because every per-lane operation is unchanged.
 
-Distribution: the instance pool is sharded over the mesh's data axes
-(each shard = a farm worker); per-window statistics are reduced with a
-single psum tree (`reduction.merge_over_axis`) so only O(species)
-floats ever cross pods. Fault tolerance: `checkpoint()`/`restore()`
-serialise the pool + scheduler + accumulators + emitted records;
+Distribution: with a `Partitioning` (or a mesh), the instance pool is
+sharded over the mesh's data axis (each shard = a farm worker); the
+same window body runs per shard under `compat.shard_map`, and
+per-window statistics are reduced with a single psum tree
+(`reduction.gather_blocks_over_axis` + `merge_blocks`) so only
+O(stat_blocks x species) floats ever cross pods. Dispatch-path selection (host loop / fused /
+sharded) lives in `core/dispatch.py` as one explicit strategy seam.
+Fault tolerance: `checkpoint()`/`restore()` serialise the pool +
+scheduler + accumulators + emitted records (gather-on-save); restore
+re-places the pool on the current mesh (reshard-on-restore), and
 trajectories are deterministic per-instance (keyed RNG), so a restart —
-even with a different mesh — resumes bit-identically.
+even with a different mesh shape — resumes bit-identically.
 
 NOTE: constructing `SimulationEngine` directly is deprecated — use the
 declarative front-end, `repro.api.simulate(Experiment(...))` (see
@@ -45,7 +50,8 @@ import numpy as np
 from repro.core import reduction
 from repro.core.cwc.compile import compile_model
 from repro.core.cwc.rules import CWCModel
-from repro.core.gillespie import LaneState, init_lanes, ssa_step, system_tensors
+from repro.core.dispatch import Partitioning, select_dispatch
+from repro.core.gillespie import LaneState, init_lanes, system_tensors
 from repro.core.reactions import ReactionSystem
 from repro.core.scheduler import Scheduler
 from repro.core.stream import StatsRecord, StatsStream
@@ -84,6 +90,7 @@ class SimulationEngine:
     def __init__(self, model: CWCModel | ReactionSystem, cfg: SimConfig,
                  rates=None, mesh=None, observables: Optional[list] = None,
                  group_ids=None, record_trajectories: bool = False,
+                 partitioning: Optional[Partitioning] = None,
                  _deprecated: bool = True):
         if _deprecated:
             warnings.warn(
@@ -93,7 +100,18 @@ class SimulationEngine:
         self.system, self.obs_names, self.obs_idx = resolve_observables(
             model)
         self.cfg = cfg
-        self.mesh = mesh
+        # a bare mesh (the historically inert `mesh=` kwarg) now means
+        # "shard the pool over the mesh's first axis" — see DESIGN.md's
+        # migration note; pass `partitioning=` for explicit control
+        if partitioning is None and mesh is not None:
+            axis = mesh.axis_names[0]
+            partitioning = Partitioning(n_shards=mesh.shape[axis],
+                                        axis=axis)
+        self.partitioning = partitioning
+        n_shards = partitioning.n_shards if partitioning else 1
+        if partitioning is not None:
+            partitioning.validate(cfg.n_instances)
+        self._stats_blocks = partitioning.blocks if partitioning else 1
         # per-instance rates (parameter sweep) or shared
         if rates is None:
             self.rates = np.broadcast_to(
@@ -106,11 +124,11 @@ class SimulationEngine:
                                 cfg.n_windows)
         self.stream = StatsStream()
         self.scheduler = Scheduler(
-            cfg.n_instances, min(cfg.n_lanes, cfg.n_instances),
-            policy=("static_rr" if cfg.schema == "i" else cfg.policy))
+            cfg.n_instances,
+            min(cfg.n_lanes, cfg.n_instances // n_shards),
+            policy=("static_rr" if cfg.schema == "i" else cfg.policy),
+            n_shards=n_shards)
         self._tensors_base = system_tensors(self.system)
-        self._pool = init_lanes(self.system, cfg.n_instances, cfg.seed)
-        self._rates_dev = jnp.asarray(self.rates)
         self._window = 0
         # schemas i/ii always buffer raw per-window samples; schema iii
         # only on explicit opt-in (it forfeits the memory bound)
@@ -125,20 +143,17 @@ class SimulationEngine:
         self._group_ids = None
         self._group_ids_dev = None
         self._grouped_fn = None
+        self._n_groups = 0
         self._grouped: list[reduction.Stats] = []
         if group_ids is not None:
             self.set_groups(group_ids)
-        # dispatch path: one fused window_step by default; host-driven
-        # per-group loop for the Pallas kernel (its chunk loop cannot be
-        # jitted whole) or when explicitly requested as a baseline
-        self._use_host_loop = cfg.host_loop or cfg.use_kernel
+        # dispatch-path selection: one explicit strategy seam
+        # (core/dispatch.py) — host loop / fused / sharded
         self._perm_cache: Optional[jax.Array] = None
-        if self._use_host_loop:
-            self._advance = self._make_advance()
-            self._window_step = None
-        else:
-            self._advance = None
-            self._window_step = self._make_window_step()
+        self._dispatch, self.mesh = select_dispatch(self, mesh)
+        self._pool = self._dispatch.place(
+            init_lanes(self.system, cfg.n_instances, cfg.seed))
+        self._rates_dev = self._dispatch.place(jnp.asarray(self.rates))
 
     # -------------------------------------------------------- re-spec
     def set_rates(self, rates) -> None:
@@ -148,7 +163,7 @@ class SimulationEngine:
         rates = np.asarray(rates, np.float32)
         assert rates.shape == (self.cfg.n_instances, self.system.n_reactions)
         self.rates = rates
-        self._rates_dev = jnp.asarray(rates)
+        self._rates_dev = self._dispatch.place(jnp.asarray(rates))
 
     def set_groups(self, group_ids) -> None:
         """Enable grouped reduction: group_ids (I,) maps each instance
@@ -157,109 +172,26 @@ class SimulationEngine:
         assert ids.shape == (self.cfg.n_instances,)
         self._group_ids = ids
         self._group_ids_dev = jnp.asarray(ids)
-        self._grouped_fn = jax.jit(partial(
-            reduction.grouped_stats, n_groups=int(ids.max()) + 1))
+        self._n_groups = int(ids.max()) + 1
+        if self._stats_blocks == 1:
+            # legacy single-fold form (bit-identical historical records)
+            self._grouped_fn = jax.jit(partial(
+                reduction.grouped_stats, n_groups=self._n_groups))
+        else:
+            # jit the per-block partials; fold the (V, G, n_obs) stack
+            # eagerly — the same op sequence the sharded dispatch uses,
+            # so grouped stats stay bitwise mesh-shape-independent
+            stack_fn = jax.jit(partial(
+                reduction.blocked_grouped_welford,
+                n_groups=self._n_groups, n_blocks=self._stats_blocks))
+
+            def grouped_fn(obs, gids):
+                return reduction.finalize(
+                    reduction.merge_blocks(stack_fn(obs, gids)))
+
+            self._grouped_fn = grouped_fn
 
     # ------------------------------------------------------------------
-    def _make_advance(self):
-        """Legacy per-group advance (host dispatch loop baseline)."""
-        idx_t, coef_t, delta_t, _ = self._tensors_base
-        cfg = self.cfg
-
-        if cfg.use_kernel:
-            from repro.kernels.ops import fused_window
-
-            def advance(pool_slice, rates, horizon):
-                # host-driven chunk loop (pallas_call inside is jit'd);
-                # must NOT be wrapped in jax.jit itself
-                return fused_window(pool_slice, (idx_t, coef_t, delta_t,
-                                                 rates), horizon)
-
-            return advance
-        else:
-            max_steps = cfg.max_steps_per_window
-
-            def advance(pool_slice: LaneState, rates, horizon):
-                tensors = (idx_t, coef_t, delta_t, rates)
-
-                def cond(s):
-                    return jnp.any((s.t < horizon) & ~s.dead)
-
-                def body(s):
-                    return ssa_step(s, tensors, horizon)
-
-                if max_steps is None:
-                    out = jax.lax.while_loop(cond, body, pool_slice)
-                else:
-                    out = jax.lax.fori_loop(
-                        0, max_steps,
-                        lambda _, s: jax.lax.cond(
-                            cond(s), body, lambda s_: s_, s),
-                        pool_slice)
-                return out._replace(
-                    t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
-
-        return jax.jit(advance, donate_argnums=(0,))
-
-    def _make_window_step(self):
-        """One jitted, donated step advancing the WHOLE pool a window.
-
-        The scheduler's lane groups become a device-side permutation;
-        `lax.scan` walks the fixed-size lane slices (the SIMD groups)
-        sequentially on device, so the host dispatches once per window
-        instead of once per group, and no pool state ever round-trips.
-        Per-lane operations are identical to the host path — the two are
-        bit-identical.
-        """
-        idx_t, coef_t, delta_t, _ = self._tensors_base
-        n_lanes = self.scheduler.n_lanes
-        obs_idx = tuple(tuple(int(i) for i in ii) for ii in self.obs_idx)
-        max_steps = self.cfg.max_steps_per_window
-
-        def window_step(pool: LaneState, rates, perm, horizon):
-            n_groups = perm.shape[0] // n_lanes
-
-            def take(a):
-                return a[perm].reshape((n_groups, n_lanes) + a.shape[1:])
-
-            lanes = LaneState(*(take(a) for a in pool))
-            rates_g = take(rates)
-
-            def advance_group(carry, grp):
-                sl, r = grp
-                tensors = (idx_t, coef_t, delta_t, r)
-
-                def cond(s):
-                    return jnp.any((s.t < horizon) & ~s.dead)
-
-                def body(s):
-                    return ssa_step(s, tensors, horizon)
-
-                if max_steps is None:
-                    out = jax.lax.while_loop(cond, body, sl)
-                else:
-                    out = jax.lax.fori_loop(
-                        0, max_steps,
-                        lambda _, s: jax.lax.cond(
-                            cond(s), body, lambda s_: s_, s),
-                        sl)
-                out = out._replace(
-                    t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
-                return carry, out
-
-            _, advanced = jax.lax.scan(advance_group, 0, (lanes, rates_g))
-            flat = jax.tree_util.tree_map(
-                lambda a: a.reshape((n_groups * n_lanes,) + a.shape[2:]),
-                advanced)
-            # duplicate padding indices write identical data — safe
-            new_pool = LaneState(*(
-                p.at[perm].set(v) for p, v in zip(pool, flat)))
-            cols = [new_pool.x[:, list(ii)].sum(axis=1) for ii in obs_idx]
-            obs = jnp.stack(cols, axis=1)
-            return new_pool, obs, new_pool.steps - pool.steps
-
-        return jax.jit(window_step, donate_argnums=(0,))
-
     def _permutation(self) -> jax.Array:
         """Concatenated, padded scheduler groups as a device index map."""
         if self.scheduler.policy != "predictive" and \
@@ -271,55 +203,20 @@ class SimulationEngine:
             self._perm_cache = perm
         return perm
 
-    def _gather(self, idx) -> tuple[LaneState, jax.Array]:
-        p = self._pool
-        sl = LaneState(x=p.x[idx], t=p.t[idx], key=p.key[idx],
-                       steps=p.steps[idx], dead=p.dead[idx])
-        return sl, jnp.asarray(self.rates[idx])
-
-    def _scatter(self, idx, sl: LaneState) -> None:
-        p = self._pool
-        # guard duplicate padding indices: later writes win (identical data)
-        self._pool = LaneState(
-            x=p.x.at[idx].set(sl.x), t=p.t.at[idx].set(sl.t),
-            key=p.key.at[idx].set(sl.key), steps=p.steps.at[idx].set(sl.steps),
-            dead=p.dead.at[idx].set(sl.dead))
-
-    def _advance_window_host(self, horizon: float):
-        """Legacy baseline: per-group gather → advance → scatter."""
-        predictive = self.scheduler.policy == "predictive"
-        steps_before = None
-        if predictive:
-            steps_before = np.asarray(self._pool.steps)
-            self.n_host_syncs += 1
-        for idx in self.scheduler.groups():
-            sl, rates = self._gather(idx)
-            sl = self._advance(sl, rates, horizon)
-            self._scatter(idx, sl)
-            self.n_dispatches += 1
-        steps_delta = None
-        if predictive:
-            steps_delta = np.asarray(self._pool.steps) - steps_before
-            self.n_host_syncs += 1
-        return self._observe(), steps_delta
-
     # ------------------------------------------------------------------
     def run_window(self) -> StatsRecord:
         """Advance every instance to the next grid point. All three
         schemas share this window loop — they differ in grouping policy
         (schema i: static_rr) and in what is buffered (i/ii: raw
         samples for post-hoc use; iii: nothing beyond the running
-        accumulator)."""
+        accumulator). HOW the pool advances (host loop / fused /
+        sharded) is the dispatch strategy's concern."""
         cfg = self.cfg
         horizon = float(self.grid[self._window])
         t0 = time.perf_counter()
-        if self._use_host_loop:
-            obs, steps_delta = self._advance_window_host(horizon)
-        else:
-            self._pool, obs, steps_delta = self._window_step(
-                self._pool, self._rates_dev, self._permutation(), horizon)
-            self.n_dispatches += 1
+        res = self._dispatch.advance(horizon)
         if self.scheduler.policy == "predictive":
+            steps_delta = res.steps_delta
             if steps_delta is not None and not isinstance(
                     steps_delta, np.ndarray):
                 steps_delta = np.asarray(steps_delta)
@@ -328,6 +225,7 @@ class SimulationEngine:
                 np.arange(cfg.n_instances), steps_delta)
         self.wall_times.append(time.perf_counter() - t0)
 
+        obs = res.obs
         if cfg.schema in ("i", "ii") or self._record_trajectories:
             self._samples.append(np.asarray(obs))
             self.n_host_syncs += 1
@@ -336,11 +234,11 @@ class SimulationEngine:
                 sum(s.nbytes for s in self._samples))
         else:  # schema iii: on-line reduction, window dropped immediately
             self._peak_buffered = max(self._peak_buffered, obs.nbytes)
-        acc = reduction.init_welford(obs.shape[1:])
-        acc = reduction.update_batch(acc, obs)
-        stats = reduction.finalize(acc)
+        stats = (res.stats if res.stats is not None
+                 else reduction.blocked_stats(obs, self._stats_blocks))
         if self._grouped_fn is not None:
-            g = self._grouped_fn(obs, self._group_ids_dev)
+            g = (res.grouped if res.grouped is not None
+                 else self._grouped_fn(obs, self._group_ids_dev))
             self._grouped.append(
                 reduction.Stats(*(np.asarray(v) for v in g)))
             self.n_host_syncs += 1
@@ -368,7 +266,11 @@ class SimulationEngine:
         buffered samples/grouped stats). Cost is O(pool + buffered
         state): constant per call under schema iii (nothing is
         buffered), but grows with the sample buffer under schemas
-        i/ii — prefer schema iii for per-window checkpointing."""
+        i/ii — prefer schema iii for per-window checkpointing.
+
+        Gather-on-save: `np.asarray` on a sharded pool gathers the
+        global arrays, so the file never depends on the mesh shape —
+        any engine (any shard count) can restore it."""
         p = self._pool
         extra = {}
         recs = self.stream.records()
@@ -394,15 +296,18 @@ class SimulationEngine:
 
     def restore(self, path: str) -> None:
         z = np.load(path if path.endswith(".npz") else path + ".npz")
-        self._pool = LaneState(
+        # reshard-on-restore: checkpoints hold the gathered global pool
+        # (mesh-shape-agnostic); the current dispatch re-places it on
+        # whatever mesh THIS engine runs on
+        self._pool = self._dispatch.place(LaneState(
             x=jnp.asarray(z["x"]), t=jnp.asarray(z["t"]),
             key=jnp.asarray(z["key"]), steps=jnp.asarray(z["steps"]),
-            dead=jnp.asarray(z["dead"]))
+            dead=jnp.asarray(z["dead"])))
         self._window = int(z["window"])
         self.scheduler._cost = z["cost"]
         if "rates" in z:
             self.rates = np.asarray(z["rates"], np.float32)
-            self._rates_dev = jnp.asarray(self.rates)
+            self._rates_dev = self._dispatch.place(jnp.asarray(self.rates))
         # re-populate already-emitted records (buffer only — sinks are
         # not replayed so a resumed CSV does not double-write)
         self.stream.buffer.clear()

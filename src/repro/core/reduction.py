@@ -71,6 +71,67 @@ def merge_over_axis(acc: Welford, axis: str) -> Welford:
                    m2=jnp.maximum(m2, 0.0))
 
 
+# ---------------------------------------------------------------- blocks
+# The sharded farm pins the statistics merge tree to a fixed number of
+# *virtual blocks* (Partitioning.stat_blocks) so the reduced records
+# depend only on the block partition — never on how many physical
+# shards computed them. Each block is a contiguous run of instances;
+# a shard owns blocks/n_shards of them; the cross-shard wire format is
+# ONE psum of the (blocks, ...) partial-accumulator stack (zeros are
+# exact additive identities, so the gathered stack is bitwise identical
+# to the unsharded one), and the final merge over the block axis is the
+# same fixed-shape reduce everywhere.
+
+
+def blocked_welford(obs, n_blocks: int) -> Welford:
+    """Per-block Welford partials: obs (I, ...) -> leaves (V, ...).
+
+    Block b covers the contiguous instance rows [b*I/V, (b+1)*I/V)."""
+    xb = obs.reshape((n_blocks, obs.shape[0] // n_blocks) + obs.shape[1:])
+    return jax.vmap(
+        lambda x: update_batch(init_welford(x.shape[1:]), x))(xb)
+
+
+def merge_blocks(acc: Welford) -> Welford:
+    """Canonical merge of a (V, ...) stack of block accumulators.
+
+    Same psum identities as `merge_over_axis`, but as a fixed (V,)-shape
+    reduce over the leading block axis, so every path (sharded or not)
+    folds the identical stack with the identical tree. V == 1 returns
+    the single block unchanged (bitwise — the unblocked legacy path)."""
+    if acc.n.shape[0] == 1:
+        return Welford(*(a[0] for a in acc))
+    n = acc.n.sum(axis=0)
+    s1 = (acc.n * acc.mean).sum(axis=0)
+    s2 = (acc.m2 + acc.n * acc.mean * acc.mean).sum(axis=0)
+    safe = jnp.maximum(n, 1.0)
+    mean = s1 / safe
+    m2 = s2 - n * mean * mean
+    return Welford(n=n, mean=jnp.where(n > 0, mean, 0.0),
+                   m2=jnp.maximum(m2, 0.0))
+
+
+def gather_blocks_over_axis(acc: Welford, axis: str,
+                            n_shards: int) -> Welford:
+    """Assemble the full (V, ...) block stack across a mesh axis with a
+    single psum — the sharded farm's wire format.
+
+    Each shard scatters its local (V/K, ...) partials into its rows of
+    a zeroed (3, V, ...) buffer; the psum tree then moves exactly
+    O(V x n_obs) floats per window, and because every position sums one
+    value plus K-1 exact zeros, the gathered stack is bit-identical to
+    the stack an unsharded run computes directly."""
+    v_loc = acc.n.shape[0]
+    v_total = v_loc * n_shards
+    k = jax.lax.axis_index(axis)
+    stacked = jnp.stack([acc.n, acc.mean, acc.m2])  # (3, V/K, ...)
+    buf = jnp.zeros((3, v_total) + acc.n.shape[1:], jnp.float32)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, stacked, k * v_loc,
+                                              axis=1)
+    full = jax.lax.psum(buf, axis)
+    return Welford(n=full[0], mean=full[1], m2=full[2])
+
+
 class Stats(NamedTuple):
     n: jax.Array
     mean: jax.Array
@@ -97,3 +158,32 @@ def grouped_stats(obs, group_ids, n_groups: int) -> Stats:
                             mask=group_ids == g)
 
     return finalize(jax.vmap(one)(jnp.arange(n_groups)))
+
+
+def blocked_stats(obs, n_blocks: int = 1) -> Stats:
+    """Window statistics under the fixed `n_blocks` merge tree.
+
+    n_blocks == 1 is exactly the legacy single update_batch fold (the
+    engine's historical records); n_blocks > 1 reduces per-block
+    partials with `merge_blocks` — the form whose result is invariant
+    to sharding over any shard count dividing n_blocks."""
+    if n_blocks == 1:
+        return finalize(update_batch(init_welford(obs.shape[1:]), obs))
+    return finalize(merge_blocks(blocked_welford(obs, n_blocks)))
+
+
+def blocked_grouped_welford(obs, group_ids, n_groups: int,
+                            n_blocks: int) -> Welford:
+    """Per-(block, group) masked partials: leaves (V, n_groups, ...)."""
+    bs = obs.shape[0] // n_blocks
+    xb = obs.reshape((n_blocks, bs) + obs.shape[1:])
+    gb = group_ids.reshape(n_blocks, bs)
+
+    def one_block(x, g):
+        def one_group(gid):
+            return update_batch(init_welford(x.shape[1:]), x,
+                                mask=g == gid)
+
+        return jax.vmap(one_group)(jnp.arange(n_groups))
+
+    return jax.vmap(one_block)(xb, gb)

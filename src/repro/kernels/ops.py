@@ -9,6 +9,7 @@ stream the unfused path would consume, so both paths are bit-identical.
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +56,25 @@ def _draw_uniform_stream(key, n: int):
     return new_key, us
 
 
+class FusedWindowOut(NamedTuple):
+    """fused_window result + the telemetry its host-driven chunk loop
+    accrues (threaded back into the engine's counters).
+
+    n_dispatches: device launches — two per executed chunk (the uniform
+    stream draw and the fused kernel call).
+    n_host_syncs: blocking device->host pulls — one per `bool(...)`
+    continuation check, including the final check that ends the loop.
+    """
+
+    state: LaneState
+    n_dispatches: int
+    n_host_syncs: int
+
+
 def fused_window(pool: LaneState, tensors, horizon,
                  chunk_steps: int = DEFAULT_CHUNK_STEPS,
                  interpret: bool | None = None,
-                 max_chunks: int = 64) -> LaneState:
+                 max_chunks: int = 64) -> FusedWindowOut:
     """Advance every lane to `horizon` using the fused kernel.
 
     tensors: (idx, coef, delta, rates) as in gillespie.system_tensors —
@@ -79,13 +95,17 @@ def fused_window(pool: LaneState, tensors, horizon,
     x, t, dead = pool.x, pool.t, pool.dead.astype(jnp.int32)
     key = pool.key
     steps_total = pool.steps
+    n_dispatches = 0
+    n_host_syncs = 0
     for _ in range(max_chunks):
+        n_host_syncs += 1  # the bool() below blocks on the device
         if not bool(jnp.any((t < horizon) & (dead == 0))):
             break
         key, uniforms = _draw_uniform_stream(key, chunk_steps)
         x, t, dead, steps = ssa_window_call(
             x, t, dead, uniforms, e, coef_k, delta_f, rates, horizon,
             n_steps=chunk_steps, interpret=interp)
+        n_dispatches += 2
         steps_total = steps_total + steps
         # NOTE on determinism: within a window the kernel consumes the
         # identical uniform stream as the unfused path (bitwise-equal
@@ -94,5 +114,7 @@ def fused_window(pool: LaneState, tensors, horizon,
         # kernel-vs-unfused parity across windows is distributional, not
         # bitwise (both exact SSA; memorylessness makes redraws valid).
     t = jnp.where(dead > 0, jnp.maximum(t, horizon), t)
-    return LaneState(x=x, t=t, key=key, steps=steps_total,
-                     dead=dead > 0)
+    return FusedWindowOut(
+        state=LaneState(x=x, t=t, key=key, steps=steps_total,
+                        dead=dead > 0),
+        n_dispatches=n_dispatches, n_host_syncs=n_host_syncs)

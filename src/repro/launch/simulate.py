@@ -17,6 +17,7 @@ from repro.api import (
     CsvSink,
     Ensemble,
     Experiment,
+    Partitioning,
     Policy,
     Reduction,
     Schedule,
@@ -60,6 +61,13 @@ def main() -> None:
                     help="use the fused Pallas SSA kernel")
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy per-group dispatch (benchmark baseline)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the instance pool over N devices (mesh "
+                    "data axis); N must divide the ensemble size")
+    ap.add_argument("--stat-blocks", type=int, default=None,
+                    help="virtual blocks the per-window statistics "
+                    "reduce over (default: --devices); pin it to keep "
+                    "records bit-identical across device counts")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint file: written per window, resumed "
                     "from when it already exists")
@@ -80,7 +88,10 @@ def main() -> None:
         seed=args.seed,
         n_lanes=args.lanes,
         use_kernel=args.kernel,
-        host_loop=args.host_loop)
+        host_loop=args.host_loop,
+        partitioning=(Partitioning(n_shards=args.devices,
+                                   stat_blocks=args.stat_blocks)
+                      if args.devices else None))
 
     if args.out:
         from repro.api.run import observable_names

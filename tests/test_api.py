@@ -11,6 +11,7 @@ from repro.api import (
     Ensemble,
     Experiment,
     ExperimentError,
+    Partitioning,
     Policy,
     Reduction,
     Schedule,
@@ -77,6 +78,52 @@ def test_sweep_unknown_rate_name_is_an_experiment_error():
         replicas=4, sweep={"not_a_reaction": [1.0, 2.0]}))
     with pytest.raises(ExperimentError, match="not_a_reaction"):
         simulate(exp)
+
+
+def test_partitioning_validation():
+    """Partitioning is pure data; its constraints surface as
+    ExperimentError before any device is touched."""
+    good = _exp()  # 24 instances
+    with pytest.raises(ExperimentError, match="n_shards"):
+        simulate(good.with_(partitioning=Partitioning(n_shards=0)))
+    with pytest.raises(ExperimentError, match="divide evenly"):
+        simulate(good.with_(partitioning=Partitioning(n_shards=5)))
+    with pytest.raises(ExperimentError, match="stat_blocks"):
+        simulate(good.with_(
+            partitioning=Partitioning(n_shards=2, stat_blocks=3)))
+    with pytest.raises(ExperimentError, match="multiple"):
+        simulate(good.with_(
+            partitioning=Partitioning(n_shards=4, stat_blocks=2)))
+    with pytest.raises(ExperimentError, match="Partitioning"):
+        simulate(good.with_(partitioning="data"))
+    with pytest.raises(ExperimentError, match="host_loop"):
+        simulate(good.with_(partitioning=Partitioning(n_shards=2),
+                            host_loop=True))
+    # more shards than visible devices: named, actionable error
+    with pytest.raises(ExperimentError, match="device"):
+        simulate(good.with_(partitioning=Partitioning(n_shards=24)))
+    # n_shards=1 is a plain fused run and needs no extra devices
+    assert Partitioning(n_shards=2).blocks == 2
+    assert Partitioning(n_shards=2, stat_blocks=8).blocks == 8
+    res = simulate(good.with_(partitioning=Partitioning(n_shards=1)))
+    assert res.completed
+
+
+def test_stat_blocks_changes_merge_tree_but_stays_close():
+    """Records are a function of stat_blocks (the pinned merge tree):
+    blocks=1 reproduces the historical records bitwise; blocks=8 agrees
+    to float tolerance (same Welford algebra, different fold order)."""
+    legacy = simulate(_exp())
+    blocked = simulate(_exp().with_(
+        partitioning=Partitioning(n_shards=1, stat_blocks=8)))
+    assert (legacy.means() == simulate(_exp()).means()).all()
+    np.testing.assert_allclose(blocked.means(), legacy.means(),
+                               rtol=1e-5, atol=1e-5)
+    var_l = np.stack([r.var for r in legacy.records])
+    var_b = np.stack([r.var for r in blocked.records])
+    # variance merges via s2 - n*mean^2, which cancels in float32 when
+    # mean >> std — hence the looser bound than the means get
+    np.testing.assert_allclose(var_b, var_l, rtol=5e-3, atol=1e-3)
 
 
 # --------------------------------------------------- shim equivalence
@@ -239,3 +286,19 @@ def test_telemetry_counts_one_dispatch_per_window():
     assert res.telemetry.dispatches == 4
     assert res.telemetry.wall_time_s > 0
     assert len(res.telemetry.window_wall_times) == 4
+
+
+def test_kernel_path_telemetry_counts_chunk_loop():
+    """The Pallas path's host-driven chunk loop is no longer invisible:
+    every continuation check is a host sync and every executed chunk
+    two dispatches (uniform draw + kernel call), so the kernel run must
+    report strictly more of both than the plain host loop."""
+    kern = simulate(_exp(windows=2, replicas=16, use_kernel=True))
+    host = simulate(_exp(windows=2, replicas=16, host_loop=True))
+    groups_x_windows = 2 * 2  # 16 instances / 8 lanes, 2 windows
+    # >= 1 executed chunk per (group x window): 2 dispatches each, plus
+    # >= 2 continuation checks (enter + terminate) counted as syncs
+    assert kern.telemetry.dispatches >= 2 * groups_x_windows
+    assert kern.telemetry.host_syncs >= \
+        host.telemetry.host_syncs + 2 * groups_x_windows
+    assert kern.telemetry.dispatches > host.telemetry.dispatches

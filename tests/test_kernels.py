@@ -86,6 +86,10 @@ def test_fused_window_first_window_bitwise_vs_unfused():
     p1 = init_lanes(sys, 64, seed=9)
     p2 = init_lanes(sys, 64, seed=9)
     a1 = jax.jit(lambda p: advance_to(p, tens, 0.1))(p1)
-    a2 = fused_window(p2, tens, 0.1, chunk_steps=128)
+    out = fused_window(p2, tens, 0.1, chunk_steps=128)
+    a2 = out.state
+    # chunk-loop telemetry is threaded back (one bool() sync per chunk
+    # check, two dispatches per executed chunk)
+    assert out.n_host_syncs >= 2 and out.n_dispatches >= 2
     assert (a1.x == a2.x).all()
     np.testing.assert_allclose(np.asarray(a1.t), np.asarray(a2.t), atol=1e-6)

@@ -1,0 +1,145 @@
+"""Sharded ensemble farm (subprocess: needs forced host devices).
+
+Each test shells out with XLA_FLAGS=--xla_force_host_platform_device_count
+so the main pytest process keeps the real 1-device platform (see
+conftest.py note). Validation-only Partitioning tests that never touch
+a device live in test_api.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_EXP = """
+import numpy as np
+from repro.api import (Ensemble, Experiment, Partitioning, Reduction,
+                       Schedule, simulate)
+from repro.core.cwc.models import lotka_volterra
+
+def make_exp(n_shards, stat_blocks=8, policy="on_demand", **kw):
+    kw.setdefault("record_trajectories", True)
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=16, sweep={"die": [0.3, 1.2]}),
+        schedule=Schedule(t_end=1.0, n_windows=4, schema="iii",
+                          policy=policy),
+        reduction=Reduction.PER_POINT,
+        n_lanes=8, seed=11,
+        partitioning=Partitioning(n_shards=n_shards,
+                                  stat_blocks=stat_blocks), **kw)
+"""
+
+
+def _run(snippet: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_sharded_bit_identical_to_fused_single_device():
+    """The acceptance bar: on 8 forced host devices the sharded path
+    reproduces the single-device fused path bit-identically — records,
+    grouped per-point stats, and trajectories — with one device
+    dispatch per window (O(1) in shard count)."""
+    _run(_EXP + """
+    base = simulate(make_exp(n_shards=1))
+    for K in (2, 4, 8):
+        shard = simulate(make_exp(n_shards=K))
+        for a, b in zip(base.records, shard.records):
+            assert a.t == b.t and a.n == b.n
+            assert (a.mean == b.mean).all()
+            assert (a.var == b.var).all()
+            assert (a.ci90 == b.ci90).all()
+        pb, ps = base.per_point(), shard.per_point()
+        for k in ("n", "mean", "var", "ci90"):
+            assert (pb[k] == ps[k]).all(), (K, k)
+        assert (base.trajectories() == shard.trajectories()).all()
+        assert shard.telemetry.dispatches == 4  # one per window, any K
+    """)
+
+
+def test_sharded_records_invariant_to_shard_count_without_pinning():
+    """stat_blocks defaults to n_shards, so two different shard counts
+    only compare bitwise when stat_blocks is pinned — which the default
+    does NOT do across meshes. Pinning blocks=4 must equalise K=2/K=4."""
+    _run(_EXP + """
+    a = simulate(make_exp(n_shards=2, stat_blocks=4))
+    b = simulate(make_exp(n_shards=4, stat_blocks=4))
+    for ra, rb in zip(a.records, b.records):
+        assert (ra.mean == rb.mean).all() and (ra.var == rb.var).all()
+    """, devices=4)
+
+
+def test_predictive_groups_stay_within_shards():
+    """The predictive policy must form cost-homogeneous groups WITHIN
+    shard blocks (no cross-shard gathers), and still reproduce the
+    on_demand results bitwise (keyed per-lane RNG)."""
+    _run(_EXP + """
+    from repro.api.run import build_engine
+    pred = make_exp(n_shards=4, policy="predictive")
+    eng = build_engine(pred)
+    res_p = simulate(pred)
+    res_o = simulate(make_exp(n_shards=4, policy="on_demand"))
+    for a, b in zip(res_p.records, res_o.records):
+        assert (a.mean == b.mean).all()
+    # drive a couple of windows so EMA costs are non-trivial, then
+    # check every group is contained in one shard block
+    eng.run_window(); eng.run_window()
+    per = eng.cfg.n_instances // 4
+    for g in eng.scheduler.groups():
+        shards = set(int(i) // per for i in g)
+        assert len(shards) == 1, (g, shards)
+    """, devices=4)
+
+
+def test_sharded_checkpoint_is_mesh_shape_agnostic_artifact():
+    """checkpoint() gathers to plain global npz arrays — restorable by
+    any mesh — and a same-process 8-shard resume is bit-identical."""
+    _run(_EXP + """
+    import tempfile, os
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    clean = simulate(make_exp(n_shards=8))
+    part = simulate(make_exp(n_shards=8), max_windows=2,
+                    checkpoint_path=ck)
+    z = np.load(ck + ".npz")
+    assert z["x"].shape[0] == 32  # global pool, not a shard
+    resumed = simulate(make_exp(n_shards=8), checkpoint_path=ck,
+                       resume=True)
+    assert (np.stack([r.mean for r in resumed.records])
+            == np.stack([r.mean for r in clean.records])).all()
+    """)
+
+
+def test_sharded_step_rebuilds_when_group_count_changes():
+    """Re-calling set_groups with a different group count must rebuild
+    the cached sharded step (its jit closes over n_groups)."""
+    _run(_EXP + """
+    from repro.api.run import build_engine
+    eng = build_engine(make_exp(n_shards=4))
+    eng.run_window()
+    assert eng.grouped_stats()[-1].mean.shape == (2, 2)
+    eng.set_groups(np.arange(32, dtype=np.int32) % 4)
+    eng.run_window()
+    assert eng.grouped_stats()[-1].mean.shape == (4, 2)
+    """, devices=4)
+
+
+def test_sharded_schema_ii_buffers_global_trajectories():
+    """Schema ii on the sharded path gathers per-window samples for
+    post-hoc use exactly like the fused path."""
+    _run(_EXP + """
+    a = simulate(make_exp(n_shards=8).with_(
+        schedule=Schedule(t_end=1.0, n_windows=3, schema="ii")))
+    b = simulate(make_exp(n_shards=1).with_(
+        schedule=Schedule(t_end=1.0, n_windows=3, schema="ii")))
+    ta, tb = a.trajectories(), b.trajectories()
+    assert ta.shape == (32, 3, 2)
+    assert (ta == tb).all()
+    """)
