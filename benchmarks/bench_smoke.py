@@ -1,0 +1,102 @@
+"""Small-scale benchmark smoke run -> BENCH_PR3.json (the perf
+trajectory's first recorded point).
+
+Runs `window_step_path` (host_loop vs window_step vs Pallas kernel,
+one in-process experiment each) and `sharded_farm` (1/2-shard
+subprocesses, kernel on and off) at CI-friendly sizes, asserts the
+bitwise-parity invariants those benchmarks encode, and writes the
+dispatch/sync/wall profile per window to BENCH_PR3.json.
+
+  PYTHONPATH=src python benchmarks/bench_smoke.py [out.json]
+
+Headline numbers recorded: the kernel path runs a full window in ONE
+device dispatch with no mid-window host syncs (no uniform-stream
+upload, no per-chunk continuation pull), and composes with the sharded
+farm bit-identically.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks import sharded_farm, window_step_path  # noqa: E402
+
+N_INSTANCES, N_LANES, N_WINDOWS = 128, 16, 4
+SHARD_INSTANCES, SHARD_LANES = 64, 8
+SHARD_COUNTS = (1, 2)
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_PR3.json")
+    paths = {}
+    results = {}
+    for path in window_step_path.PATHS:
+        result, m = window_step_path.run_path(
+            path, N_INSTANCES, N_LANES, n_windows=N_WINDOWS)
+        results[path] = result
+        paths[path] = {
+            "dispatches_per_window": m["dispatches_per_window"],
+            "host_syncs_per_window": m["host_syncs_per_window"],
+            "wall_per_window_ms": round(m["wall_per_window_ms"], 3),
+        }
+        print(f"window_step_path/{path}: {paths[path]}")
+    for p in ("host_loop", "kernel"):
+        assert (results[p].means()
+                == results["window_step"].means()).all(), (
+            f"{p} diverged from window_step")
+    assert paths["kernel"]["dispatches_per_window"] == 1.0, (
+        "kernel path must be one dispatch per window")
+
+    farm = {}
+    digests = set()
+    for kernel in (False, True):
+        for k in SHARD_COUNTS:
+            row = sharded_farm.run_point(
+                k, SHARD_INSTANCES, SHARD_LANES, N_WINDOWS, kernel=kernel)
+            shards, disp, syncs, wall_ms, wall_s, sha = row.split(",")
+            digests.add(sha)
+            farm[f"shards={k},kernel={int(kernel)}"] = {
+                "dispatches_per_window": int(disp) / N_WINDOWS,
+                "host_syncs_per_window": int(syncs) / N_WINDOWS,
+                "wall_per_window_ms": float(wall_ms),
+                "records_sha": sha,
+            }
+            print(f"sharded_farm/shards={k},kernel={int(kernel)}: "
+                  f"{farm[f'shards={k},kernel={int(kernel)}']}")
+    assert len(digests) == 1, (
+        f"records diverged across shards/window bodies: {farm}")
+
+    doc = {
+        "pr": 3,
+        "generated_by": "benchmarks/bench_smoke.py",
+        "config": {
+            "window_step_path": {
+                "instances": N_INSTANCES, "lanes": N_LANES,
+                "windows": N_WINDOWS},
+            "sharded_farm": {
+                "instances": SHARD_INSTANCES, "lanes": SHARD_LANES,
+                "windows": N_WINDOWS,
+                "stat_blocks": sharded_farm.STAT_BLOCKS},
+        },
+        "window_step_path": paths,
+        "sharded_farm": farm,
+        "invariants": {
+            "all_paths_bitwise_identical": True,
+            "kernel_single_dispatch_per_window": True,
+            "kernel_uniform_stream_operand": False,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,10 +67,14 @@ def run(n_species: int):
 
     pool = init_lanes(system, 256, seed=1)
     t0 = time.perf_counter()
-    out = fused_window(pool, tensors, HORIZON, chunk_steps=64).state
-    jax.block_until_ready(out.x)
-    fused = (time.perf_counter() - t0) / max(
-        float(np.asarray(out.steps).sum()), 1)
+    out = fused_window(pool, tensors, HORIZON, chunk_steps=64)
+    jax.block_until_ready(out.state.x)
+    wall = time.perf_counter() - t0
+    assert not bool(out.truncated), (
+        f"fig4/lv{n_species}: fused window hit its chunk budget — the "
+        "per-event number would cover a partial window; raise "
+        "chunk_steps/max_chunks")
+    fused = wall / max(float(np.asarray(out.state.steps).sum()), 1)
 
     emit(f"fig4/lv{n_species}/pure_python_per_event", py_per_step * 1e6)
     emit(f"fig4/lv{n_species}/jnp_1lane_per_event", one * 1e6,

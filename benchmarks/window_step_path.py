@@ -1,25 +1,29 @@
-"""Old-vs-new window dispatch: per-group host gather/scatter loop vs
-the single jitted, donated `window_step` (device-side permutation +
-lax.scan over lane slices).
+"""Window-dispatch paths head to head: the per-group host gather/
+scatter loop, the single jitted `window_step` (device-side permutation
++ lax.scan over lane slices), and the Pallas fused kernel (device-side
+chunk while_loop, in-VREG counter-based RNG).
 
 Measures, for identical experiments:
   * device dispatches (jit launches) per run — the host<->device round
-    trips the refactor removes;
+    trips the refactors remove (kernel: ONE per window, no per-chunk
+    uniform-stream upload or continuation pull);
   * blocking device->host pulls;
   * wall time per window (post-warmup);
-and asserts the two paths produce bit-identical records.
+and asserts all paths produce bit-identical records (counter-based
+per-lane RNG — kernel parity is bitwise for any chunk size, not just
+the first window).
 
   PYTHONPATH=src python benchmarks/window_step_path.py
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.api import Ensemble, Experiment, Schedule, simulate
 from repro.core.cwc.models import lotka_volterra
 
+PATHS = ("host_loop", "window_step", "kernel")
 
-def run_path(host_loop: bool, n_instances: int, n_lanes: int,
+
+def run_path(path: str, n_instances: int, n_lanes: int,
              n_windows: int = 8):
     exp = Experiment(
         model=lotka_volterra(2),
@@ -27,7 +31,8 @@ def run_path(host_loop: bool, n_instances: int, n_lanes: int,
         schedule=Schedule(t_end=2.0, n_windows=n_windows, schema="iii"),
         n_lanes=n_lanes,
         seed=7,
-        host_loop=host_loop)
+        host_loop=(path == "host_loop"),
+        use_kernel=(path == "kernel"))
     result = simulate(exp)
     tele = result.telemetry
     # first window includes jit compile — report steady-state median
@@ -35,6 +40,8 @@ def run_path(host_loop: bool, n_instances: int, n_lanes: int,
     return result, dict(
         dispatches=tele.dispatches,
         host_syncs=tele.host_syncs,
+        dispatches_per_window=tele.dispatches / n_windows,
+        host_syncs_per_window=tele.host_syncs / n_windows,
         wall_total_s=tele.wall_time_s,
         wall_per_window_ms=1e3 * steady[len(steady) // 2])
 
@@ -44,21 +51,24 @@ def main() -> None:
           "wall_per_window_ms,wall_total_s")
     for n_instances, n_lanes in ((256, 32), (512, 64), (1024, 128)):
         rows = {}
-        for host_loop in (True, False):
-            result, m = run_path(host_loop, n_instances, n_lanes)
-            rows[host_loop] = (result, m)
-            path = "host_loop" if host_loop else "window_step"
+        for path in PATHS:
+            result, m = run_path(path, n_instances, n_lanes)
+            rows[path] = (result, m)
             print(f"{n_instances},{n_lanes},{path},{m['dispatches']},"
                   f"{m['host_syncs']},{m['wall_per_window_ms']:.2f},"
                   f"{m['wall_total_s']:.2f}")
-        old, new = rows[True][0], rows[False][0]
-        assert (old.means() == new.means()).all(), "paths diverged!"
-        d_old = rows[True][1]["dispatches"]
-        d_new = rows[False][1]["dispatches"]
-        w_old = rows[True][1]["wall_per_window_ms"]
-        w_new = rows[False][1]["wall_per_window_ms"]
-        print(f"#  bit-identical; dispatches {d_old} -> {d_new} "
-              f"({d_old / d_new:.0f}x fewer), steady window "
+        base = rows["window_step"][0]
+        for path in ("host_loop", "kernel"):
+            assert (rows[path][0].means() == base.means()).all(), (
+                f"{path} diverged from window_step!")
+        d_old = rows["host_loop"][1]["dispatches"]
+        d_new = rows["window_step"][1]["dispatches"]
+        d_k = rows["kernel"][1]["dispatches"]
+        w_old = rows["host_loop"][1]["wall_per_window_ms"]
+        w_new = rows["window_step"][1]["wall_per_window_ms"]
+        print(f"#  all paths bit-identical; dispatches {d_old} -> "
+              f"{d_new} (window_step, {d_old / d_new:.0f}x fewer) / "
+              f"{d_k} (kernel, one per window); steady window "
               f"{w_old:.2f}ms -> {w_new:.2f}ms "
               f"({w_old / max(w_new, 1e-9):.2f}x)")
 

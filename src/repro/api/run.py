@@ -48,7 +48,9 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         seed=experiment.seed,
         max_steps_per_window=sched.max_steps_per_window,
         use_kernel=experiment.use_kernel,
-        host_loop=experiment.host_loop)
+        host_loop=experiment.host_loop,
+        kernel_chunk_steps=experiment.kernel_chunk_steps,
+        kernel_max_chunks=experiment.kernel_max_chunks)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
     try:

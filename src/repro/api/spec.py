@@ -173,8 +173,17 @@ class Experiment:
     `close()` is closed when the run completes.
     record_trajectories: buffer raw per-window samples even under
     schema ONLINE (forfeits its memory bound — opt-in).
-    host_loop / use_kernel: select the legacy per-group host dispatch
-    (benchmark baseline) or the fused Pallas kernel path.
+    host_loop: legacy per-group host dispatch (benchmark baseline).
+    use_kernel: advance windows through the Pallas fused SSA kernel
+    (one device dispatch per window, in-VREG counter-based RNG) —
+    bitwise identical to the unfused path and composable with
+    `partitioning` (per-shard kernel under shard_map).
+    kernel_chunk_steps / kernel_max_chunks: the kernel path's per-window
+    event budget — up to max_chunks chunk iterations of chunk_steps
+    fused events in one device-side while_loop; a window needing more
+    raises FusedWindowTruncated naming these knobs (never a silent
+    partial window). Changing them never changes a trajectory, only
+    where the budget cuts off.
     partitioning: shard the instance pool over a device mesh
     (`Partitioning(n_shards=..., stat_blocks=...)`); records depend on
     `stat_blocks` (the statistics merge tree), never on the physical
@@ -190,6 +199,8 @@ class Experiment:
     n_lanes: int = 128
     record_trajectories: bool = False
     use_kernel: bool = False
+    kernel_chunk_steps: int = 256
+    kernel_max_chunks: int = 64
     host_loop: bool = False
     partitioning: Optional[Partitioning] = None
 
@@ -220,6 +231,14 @@ class Experiment:
             raise ExperimentError(
                 "max_steps_per_window is not honoured by the fused "
                 "Pallas kernel path (use_kernel=True); drop one of them")
+        if self.kernel_chunk_steps < 1:
+            raise ExperimentError(
+                f"Experiment.kernel_chunk_steps must be >= 1, got "
+                f"{self.kernel_chunk_steps}")
+        if self.kernel_max_chunks < 1:
+            raise ExperimentError(
+                f"Experiment.kernel_max_chunks must be >= 1, got "
+                f"{self.kernel_max_chunks}")
         if self.partitioning is not None:
             if not isinstance(self.partitioning, Partitioning):
                 raise ExperimentError(
@@ -229,13 +248,11 @@ class Experiment:
                 self.partitioning.validate(self.ensemble.n_instances)
             except ValueError as e:
                 raise ExperimentError(str(e)) from e
-            if self.partitioning.n_shards > 1 and (
-                    self.use_kernel or self.host_loop):
+            if self.partitioning.n_shards > 1 and self.host_loop:
                 raise ExperimentError(
-                    "partitioning with n_shards > 1 requires the fused "
-                    "dispatch; it is incompatible with use_kernel / "
-                    "host_loop (both are host-driven single-device "
-                    "paths)")
+                    "partitioning with n_shards > 1 is incompatible "
+                    "with host_loop (a host-driven single-device "
+                    "baseline); use_kernel composes with sharding")
         for s in self.sinks:
             if not callable(s):
                 raise ExperimentError(f"sink {s!r} is not callable")

@@ -5,8 +5,7 @@ Three ways to advance the instance pool one window, selected by
 inside its window loop):
 
   host_loop : legacy per-group gather -> advance -> scatter round trips
-              (the benchmark baseline, and the required path for the
-              Pallas fused kernel, whose chunk loop stays host-driven);
+              (the benchmark baseline);
   fused     : one jitted, donated `window_step` over the whole pool
               (device-side permutation + lax.scan over lane slices);
   sharded   : the same window body wrapped in `compat.shard_map` over a
@@ -17,12 +16,21 @@ inside its window loop):
               so only O(stat_blocks x n_obs) floats ever cross shards;
               the tiny final fold is `reduction.merge_blocks`.
 
-All three paths are bit-identical per lane (keyed per-lane RNG;
-identical per-lane ops). The sharded path additionally pins the
-statistics merge tree to `Partitioning.blocks` virtual blocks, so its
-StatsRecords are bit-identical for ANY shard count dividing the block
-count — including the unsharded fused path configured with the same
-`stat_blocks` — which is what makes checkpoints mesh-shape-agnostic.
+`use_kernel=True` composes with ALL three: the Pallas fused-window
+chunk loop is a device-side `lax.while_loop` (kernels/ops.py), so the
+fused strategy runs it as its one-dispatch-per-window step, the
+sharded strategy runs it per shard under shard_map (the paper's two
+families — single-simulation speedup × simulation farm — composed),
+and the host loop keeps it per group as the baseline.
+
+All paths are bit-identical per lane (counter-based per-lane RNG,
+`core/stream.counter_uniforms`; identical per-lane ops — including
+kernel vs unfused, see DESIGN.md §3c). The sharded path additionally
+pins the statistics merge tree to `Partitioning.blocks` virtual
+blocks, so its StatsRecords are bit-identical for ANY shard count
+dividing the block count — including the unsharded fused path
+configured with the same `stat_blocks` — which is what makes
+checkpoints mesh-shape-agnostic.
 """
 from __future__ import annotations
 
@@ -98,12 +106,30 @@ class WindowResult(NamedTuple):
     stats / grouped: per-window Stats already reduced device-side
     (sharded strategy), or None when the engine should compute them
     from `obs`.
+    truncated: device bool/int scalar on the kernel path — nonzero iff
+    the fused window's chunk budget ran out with live lanes below the
+    horizon (the engine raises FusedWindowTruncated); None on the
+    unfused paths, whose while_loop has no chunk budget.
     """
 
     obs: Any
     steps_delta: Any
     stats: Optional[reduction.Stats]
     grouped: Optional[reduction.Stats]
+    truncated: Any = None
+
+
+def _obs_extractor(obs_idx):
+    """Normalised device-side observable extraction, shared by BOTH
+    window-body factories — a single definition is what keeps the
+    kernel and unfused paths' records bitwise comparable."""
+    obs_idx = tuple(tuple(int(i) for i in ii) for ii in obs_idx)
+
+    def extract(x):
+        cols = [x[:, list(ii)].sum(axis=1) for ii in obs_idx]
+        return jnp.stack(cols, axis=1)
+
+    return extract
 
 
 def make_window_body(tensors3, n_lanes: int, obs_idx,
@@ -117,7 +143,7 @@ def make_window_body(tensors3, n_lanes: int, obs_idx,
     is what keeps their per-lane trajectories bit-identical.
     """
     idx_t, coef_t, delta_t = tensors3
-    obs_idx = tuple(tuple(int(i) for i in ii) for ii in obs_idx)
+    extract_obs = _obs_extractor(obs_idx)
 
     def window_body(pool: LaneState, rates, perm, horizon):
         n_groups = perm.shape[0] // n_lanes
@@ -157,9 +183,8 @@ def make_window_body(tensors3, n_lanes: int, obs_idx,
         # duplicate padding indices write identical data — safe
         new_pool = LaneState(*(
             p.at[perm].set(v) for p, v in zip(pool, flat)))
-        cols = [new_pool.x[:, list(ii)].sum(axis=1) for ii in obs_idx]
-        obs = jnp.stack(cols, axis=1)
-        return new_pool, obs, new_pool.steps - pool.steps
+        return new_pool, extract_obs(new_pool.x), \
+            new_pool.steps - pool.steps
 
     return window_body
 
@@ -184,7 +209,8 @@ class _Dispatch:
 
 class HostLoopDispatch(_Dispatch):
     """Legacy baseline: per-group gather -> advance -> scatter, one
-    dispatch per (group x window). Also the Pallas-kernel path."""
+    dispatch per (group x window) — with or without the fused kernel
+    inside each group's launch."""
 
     name = "host_loop"
 
@@ -198,13 +224,16 @@ class HostLoopDispatch(_Dispatch):
         cfg = eng.cfg
 
         if cfg.use_kernel:
+            # fused_window is itself one jitted launch (device-side
+            # chunk while_loop): one dispatch per group, no mid-window
+            # host syncs
             from repro.kernels.ops import fused_window
 
             def advance(pool_slice, rates, horizon):
-                # host-driven chunk loop (pallas_call inside is jit'd);
-                # must NOT be wrapped in jax.jit itself
-                return fused_window(pool_slice, (idx_t, coef_t, delta_t,
-                                                 rates), horizon)
+                return fused_window(
+                    pool_slice, (idx_t, coef_t, delta_t, rates), horizon,
+                    chunk_steps=cfg.kernel_chunk_steps,
+                    max_chunks=cfg.kernel_max_chunks)
 
             return advance
 
@@ -235,7 +264,8 @@ class HostLoopDispatch(_Dispatch):
     def _gather(self, idx) -> tuple[LaneState, jax.Array]:
         p = self.eng._pool
         sl = LaneState(x=p.x[idx], t=p.t[idx], key=p.key[idx],
-                       steps=p.steps[idx], dead=p.dead[idx])
+                       ctr=p.ctr[idx], steps=p.steps[idx],
+                       dead=p.dead[idx])
         # index the cached device rates — no per-window host re-upload
         return sl, self.eng._rates_dev[idx]
 
@@ -245,6 +275,7 @@ class HostLoopDispatch(_Dispatch):
         self.eng._pool = LaneState(
             x=p.x.at[idx].set(sl.x), t=p.t.at[idx].set(sl.t),
             key=p.key.at[idx].set(sl.key),
+            ctr=p.ctr.at[idx].set(sl.ctr),
             steps=p.steps.at[idx].set(sl.steps),
             dead=p.dead.at[idx].set(sl.dead))
 
@@ -253,45 +284,90 @@ class HostLoopDispatch(_Dispatch):
         use_kernel = eng.cfg.use_kernel
         predictive = eng.scheduler.policy == "predictive"
         steps_before = None
+        truncated = None
         if predictive:
             steps_before = np.asarray(eng._pool.steps)
             eng.n_host_syncs += 1
         for idx in eng.scheduler.groups():
             sl, rates = self._gather(idx)
             out = self._advance_fn(sl, rates, horizon)
+            eng.n_dispatches += 1
             if use_kernel:
-                # threaded chunk-loop telemetry (satellite: the per-
-                # chunk bool() pulls used to go uncounted)
-                eng.n_dispatches += out.n_dispatches
-                eng.n_host_syncs += out.n_host_syncs
+                # device-scalar truncation flags OR together lazily —
+                # no per-group (or per-chunk) host pull
+                truncated = (out.truncated if truncated is None
+                             else truncated | out.truncated)
                 sl = out.state
             else:
                 sl = out
-                eng.n_dispatches += 1
             self._scatter(idx, sl)
         steps_delta = None
         if predictive:
             steps_delta = np.asarray(eng._pool.steps) - steps_before
             eng.n_host_syncs += 1
-        return WindowResult(eng._observe(), steps_delta, None, None)
+        return WindowResult(eng._observe(), steps_delta, None, None,
+                            truncated)
+
+
+def make_kernel_window_body(tensors3, obs_idx, chunk_steps: int,
+                            max_chunks: int):
+    """Whole-pool window advance through the Pallas fused kernel: one
+    device-side chunk while_loop + observable extraction, traceable
+    under jit (fused strategy) and shard_map (sharded strategy).
+
+    No permutation/group scan: the kernel's lane-block grid IS the
+    SIMD grouping, and every per-lane op is independent, so scheduler
+    groups would not change a single trajectory.
+
+    Returns (new_pool, obs, steps_delta, truncated)."""
+    from repro.kernels.ops import window_chunk_loop
+
+    idx_t, coef_t, delta_t = tensors3
+    extract_obs = _obs_extractor(obs_idx)
+
+    def window_body(pool: LaneState, rates, horizon):
+        out = window_chunk_loop(pool, (idx_t, coef_t, delta_t, rates),
+                                horizon, chunk_steps=chunk_steps,
+                                max_chunks=max_chunks)
+        new_pool = out.state
+        return new_pool, extract_obs(new_pool.x), \
+            new_pool.steps - pool.steps, out.truncated
+
+    return window_body
 
 
 class FusedDispatch(_Dispatch):
     """One jitted, donated window_step for the whole pool — one device
-    dispatch per window (DESIGN.md §3)."""
+    dispatch per window (DESIGN.md §3). With `use_kernel=True` the
+    step is the Pallas fused-window chunk loop instead of the
+    permutation + lax.scan body — still one dispatch per window, now
+    with the SSA inner loop resident in VMEM."""
 
     name = "fused"
 
     def __init__(self, engine):
         super().__init__(engine)
+        cfg = engine.cfg
         idx_t, coef_t, delta_t, _ = engine._tensors_base
-        body = make_window_body((idx_t, coef_t, delta_t),
-                                engine.scheduler.n_lanes, engine.obs_idx,
-                                engine.cfg.max_steps_per_window)
+        self._kernel = cfg.use_kernel
+        if self._kernel:
+            body = make_kernel_window_body(
+                (idx_t, coef_t, delta_t), engine.obs_idx,
+                cfg.kernel_chunk_steps, cfg.kernel_max_chunks)
+        else:
+            body = make_window_body((idx_t, coef_t, delta_t),
+                                    engine.scheduler.n_lanes,
+                                    engine.obs_idx,
+                                    cfg.max_steps_per_window)
         self._step = jax.jit(body, donate_argnums=(0,))
 
     def advance(self, horizon) -> WindowResult:
         eng = self.eng
+        if self._kernel:
+            eng._pool, obs, steps_delta, truncated = self._step(
+                eng._pool, eng._rates_dev, horizon)
+            eng.n_dispatches += 1
+            return WindowResult(obs, steps_delta, None, None, truncated)
         eng._pool, obs, steps_delta = self._step(
             eng._pool, eng._rates_dev, eng._permutation(), horizon)
         eng.n_dispatches += 1
@@ -346,16 +422,33 @@ class ShardedDispatch(_Dispatch):
         per_shard = eng.cfg.n_instances // n_shards
         v_loc = part.blocks // n_shards
         n_groups = eng._n_groups if grouped else 0
+        use_kernel = eng.cfg.use_kernel
         idx_t, coef_t, delta_t, _ = eng._tensors_base
-        body = make_window_body((idx_t, coef_t, delta_t),
-                                eng.scheduler.n_lanes, eng.obs_idx,
-                                eng.cfg.max_steps_per_window)
+        if use_kernel:
+            # per-shard Pallas fused window: the paper's two families
+            # (single-simulation speedup x simulation farm) composed
+            kbody = make_kernel_window_body(
+                (idx_t, coef_t, delta_t), eng.obs_idx,
+                eng.cfg.kernel_chunk_steps, eng.cfg.kernel_max_chunks)
+        else:
+            body = make_window_body((idx_t, coef_t, delta_t),
+                                    eng.scheduler.n_lanes, eng.obs_idx,
+                                    eng.cfg.max_steps_per_window)
 
         def local(pool, rates, perm, gids, horizon):
-            k = jax.lax.axis_index(axis)
-            perm_loc = perm - k * per_shard  # global -> shard-local
-            new_pool, obs, steps_delta = body(pool, rates, perm_loc,
-                                              horizon)
+            if use_kernel:
+                new_pool, obs, steps_delta, trunc = kbody(pool, rates,
+                                                          horizon)
+                # any-shard truncation, replicated so one device scalar
+                # answers for the whole farm
+                trunc = jax.lax.psum(trunc.astype(jnp.int32), axis)
+            else:
+                k = jax.lax.axis_index(axis)
+                perm_loc = perm - k * per_shard  # global -> shard-local
+                new_pool, obs, steps_delta = body(pool, rates, perm_loc,
+                                                  horizon)
+                # a constant is already replicated — no collective
+                trunc = jnp.int32(0)
             # psum-gather the per-block partial accumulators; the final
             # O(V) fold runs eagerly host-side (advance() below) with
             # the exact op sequence the unsharded path uses, so records
@@ -363,7 +456,7 @@ class ShardedDispatch(_Dispatch):
             acc = reduction.blocked_welford(obs, v_loc)
             stack = reduction.gather_blocks_over_axis(acc, axis,
                                                       n_shards)
-            outs = (new_pool, obs, steps_delta, stack)
+            outs = (new_pool, obs, steps_delta, trunc, stack)
             if grouped:
                 gacc = reduction.blocked_grouped_welford(
                     obs, gids, n_groups, v_loc)
@@ -373,19 +466,30 @@ class ShardedDispatch(_Dispatch):
             return outs
 
         sh = P(axis)
-        in_specs = (sh, sh, sh, sh, P())
-        out_specs = (sh, sh, sh, P()) + ((P(),) if grouped else ())
-        if not grouped:
-            def local_nogids(pool, rates, perm, horizon):
+        out_specs = (sh, sh, sh, P(), P()) + ((P(),) if grouped else ())
+        # the kernel body never reads the scheduler permutation (its
+        # lane-block grid IS the grouping) — drop the operand so the
+        # host neither assembles nor ships it each window
+        if use_kernel and grouped:
+            def wrapped(pool, rates, gids, horizon):
+                return local(pool, rates, None, gids, horizon)
+
+            in_specs = (sh, sh, sh, P())
+        elif use_kernel:
+            def wrapped(pool, rates, horizon):
+                return local(pool, rates, None, None, horizon)
+
+            in_specs = (sh, sh, P())
+        elif grouped:
+            wrapped = local
+            in_specs = (sh, sh, sh, sh, P())
+        else:
+            def wrapped(pool, rates, perm, horizon):
                 return local(pool, rates, perm, None, horizon)
 
-            fn = compat.shard_map(local_nogids, mesh=self.mesh,
-                                  in_specs=(sh, sh, sh, P()),
-                                  out_specs=out_specs, check_vma=False)
-        else:
-            fn = compat.shard_map(local, mesh=self.mesh,
-                                  in_specs=in_specs,
-                                  out_specs=out_specs, check_vma=False)
+            in_specs = (sh, sh, sh, P())
+        fn = compat.shard_map(wrapped, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
         return jax.jit(fn, donate_argnums=(0,))
 
     def advance(self, horizon) -> WindowResult:
@@ -395,18 +499,22 @@ class ShardedDispatch(_Dispatch):
         if self._step is None or self._step_key != key:
             self._step = self._build(grouped)
             self._step_key = key
+        step_args = [eng._pool, eng._rates_dev]
+        if not eng.cfg.use_kernel:
+            step_args.append(eng._permutation())
         if grouped:
-            eng._pool, obs, steps_delta, stack, gstack = self._step(
-                eng._pool, eng._rates_dev, eng._permutation(),
-                eng._group_ids_dev, horizon)
+            step_args.append(eng._group_ids_dev)
+            eng._pool, obs, steps_delta, trunc, stack, gstack = \
+                self._step(*step_args, horizon)
             gstats = reduction.finalize(reduction.merge_blocks(gstack))
         else:
-            eng._pool, obs, steps_delta, stack = self._step(
-                eng._pool, eng._rates_dev, eng._permutation(), horizon)
+            eng._pool, obs, steps_delta, trunc, stack = self._step(
+                *step_args, horizon)
             gstats = None
         stats = reduction.finalize(reduction.merge_blocks(stack))
         eng.n_dispatches += 1
-        return WindowResult(obs, steps_delta, stats, gstats)
+        truncated = trunc if eng.cfg.use_kernel else None
+        return WindowResult(obs, steps_delta, stats, gstats, truncated)
 
 
 def select_dispatch(engine, mesh):
@@ -419,10 +527,6 @@ def select_dispatch(engine, mesh):
     cfg = engine.cfg
     part = engine.partitioning
     if part is not None and part.n_shards > 1:
-        if cfg.use_kernel:
-            raise ValueError(
-                "sharded dispatch is incompatible with use_kernel=True "
-                "(the Pallas chunk loop is host-driven); drop one")
         if cfg.host_loop:
             raise ValueError(
                 "sharded dispatch is incompatible with host_loop=True; "
@@ -438,6 +542,6 @@ def select_dispatch(engine, mesh):
                     "over forced host devices)")
             mesh = compat.make_mesh((part.n_shards,), (part.axis,))
         return ShardedDispatch(engine, mesh, part), mesh
-    if cfg.host_loop or cfg.use_kernel:
+    if cfg.host_loop:
         return HostLoopDispatch(engine), mesh
     return FusedDispatch(engine), mesh

@@ -12,10 +12,13 @@ Hot path: the whole instance pool advances one window as ONE pytree
 through a single jitted, donated `window_step` — the scheduler's groups
 become a device-side permutation plus a `lax.scan` over fixed-size lane
 slices, so a window costs one dispatch instead of one gather/advance/
-scatter round trip per group. The legacy host-driven per-group loop is
-kept behind `SimConfig.host_loop` (and for the Pallas fused kernel,
-whose chunk loop must stay host-driven) as the benchmark baseline; both
-paths are bit-identical because every per-lane operation is unchanged.
+scatter round trip per group. With `SimConfig.use_kernel` the step is
+instead the Pallas fused SSA window (kernels/): a device-side chunk
+while_loop with in-VREG counter-based RNG — still one dispatch per
+window, zero mid-window host syncs, and bitwise identical to the
+unfused path (DESIGN.md §3c). The legacy host-driven per-group loop is
+kept behind `SimConfig.host_loop` as the benchmark baseline; all paths
+are bit-identical because every per-lane operation is unchanged.
 
 Distribution: with a `Partitioning` (or a mesh), the instance pool is
 sharded over the mesh's data axis (each shard = a farm worker); the
@@ -67,8 +70,24 @@ class SimConfig:
     policy: str = "on_demand"  # static_rr | on_demand | predictive
     seed: int = 0
     max_steps_per_window: Optional[int] = None
-    use_kernel: bool = False  # fused Pallas SSA step (see kernels/)
+    use_kernel: bool = False  # fused Pallas SSA window (see kernels/)
     host_loop: bool = False  # legacy per-group gather/scatter dispatch
+    # kernel-path chunking: each window is ONE dispatch running up to
+    # kernel_max_chunks kernel launches of kernel_chunk_steps fused
+    # events in a device-side while_loop; a window needing more raises
+    # FusedWindowTruncated (never silently truncates)
+    kernel_chunk_steps: int = 256
+    kernel_max_chunks: int = 64
+
+    def __post_init__(self):
+        if self.kernel_chunk_steps < 1:
+            raise ValueError(
+                f"SimConfig.kernel_chunk_steps must be >= 1, got "
+                f"{self.kernel_chunk_steps}")
+        if self.kernel_max_chunks < 1:
+            raise ValueError(
+                f"SimConfig.kernel_max_chunks must be >= 1, got "
+                f"{self.kernel_max_chunks}")
 
 
 def resolve_observables(model: CWCModel | ReactionSystem):
@@ -224,6 +243,23 @@ class SimulationEngine:
             self.scheduler.record_costs(
                 np.arange(cfg.n_instances), steps_delta)
         self.wall_times.append(time.perf_counter() - t0)
+        if res.truncated is not None:
+            # kernel path: one end-of-window device-scalar pull AFTER
+            # the timer, so window_wall_times stays an async-dispatch
+            # measure on every path (the pull blocks exactly where the
+            # unfused paths' record-building pulls do); a silently
+            # partial window must never become a record
+            self.n_host_syncs += 1
+            if bool(np.asarray(res.truncated)):
+                from repro.kernels.ops import FusedWindowTruncated
+
+                raise FusedWindowTruncated(
+                    f"window {self._window} (horizon {horizon:g}) "
+                    f"exhausted kernel_max_chunks="
+                    f"{cfg.kernel_max_chunks} x kernel_chunk_steps="
+                    f"{cfg.kernel_chunk_steps} events with live lanes "
+                    "still below the horizon; raise those limits or "
+                    "use more windows")
 
         obs = res.obs
         if cfg.schema in ("i", "ii") or self._record_trajectories:
@@ -290,7 +326,8 @@ class SimulationEngine:
                     [getattr(g, name) for g in self._grouped])
         np.savez(
             path, x=np.asarray(p.x), t=np.asarray(p.t),
-            key=np.asarray(p.key), steps=np.asarray(p.steps),
+            key=np.asarray(p.key), ctr=np.asarray(p.ctr),
+            steps=np.asarray(p.steps),
             dead=np.asarray(p.dead), window=self._window,
             cost=self.scheduler._cost, rates=self.rates, **extra)
 
@@ -299,9 +336,15 @@ class SimulationEngine:
         # reshard-on-restore: checkpoints hold the gathered global pool
         # (mesh-shape-agnostic); the current dispatch re-places it on
         # whatever mesh THIS engine runs on
+        # pre-counter-RNG checkpoints carry no `ctr`: restart those
+        # streams at draw 0 (still exact SSA by memorylessness, but not
+        # bitwise vs an uninterrupted pre-upgrade run)
+        n = z["t"].shape[0]
+        ctr = z["ctr"] if "ctr" in z else np.zeros((n,), np.uint32)
         self._pool = self._dispatch.place(LaneState(
             x=jnp.asarray(z["x"]), t=jnp.asarray(z["t"]),
-            key=jnp.asarray(z["key"]), steps=jnp.asarray(z["steps"]),
+            key=jnp.asarray(z["key"]), ctr=jnp.asarray(ctr),
+            steps=jnp.asarray(z["steps"]),
             dead=jnp.asarray(z["dead"])))
         self._window = int(z["window"])
         self.scheduler._cost = z["cost"]

@@ -22,12 +22,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reactions import ReactionSystem, propensities
+from repro.core.stream import counter_uniforms
 
 
 class LaneState(NamedTuple):
     x: jax.Array  # (B, S) float32 counts
     t: jax.Array  # (B,) float32 sim clocks
-    key: jax.Array  # (B, 2) uint32 per-lane RNG
+    key: jax.Array  # (B, 2) uint32 per-lane stream key (never advances)
+    ctr: jax.Array  # (B,) uint32 event counter — RNG draw index
     steps: jax.Array  # (B,) int32 events applied (diagnostics / scheduler)
     dead: jax.Array  # (B,) bool — no reaction can ever fire again
 
@@ -43,21 +45,23 @@ def init_lanes(system: ReactionSystem, n_lanes: int, seed: int,
         t=jnp.zeros((n_lanes,), jnp.float32),
         key=jax.vmap(jax.random.key_data)(keys) if keys.dtype != jnp.uint32
         else keys,
+        ctr=jnp.zeros((n_lanes,), jnp.uint32),
         steps=jnp.zeros((n_lanes,), jnp.int32),
         dead=jnp.zeros((n_lanes,), bool),
     )
 
 
-def _uniforms(key):
-    """key: (B, 2) uint32 -> (new_key, u1, u2) per lane."""
-    def one(k):
-        kk = jax.random.wrap_key_data(k, impl="threefry2x32")
-        k1, k2 = jax.random.split(kk)
-        u = jax.random.uniform(k2, (2,), jnp.float32, 1e-12, 1.0)
-        return jax.random.key_data(k1), u
+def _uniforms(state: LaneState):
+    """Counter-based draw: (u1, u2) for each lane's current event index.
 
-    new_key, u = jax.vmap(one)(key)
-    return new_key, u[:, 0], u[:, 1]
+    A draw is a pure function of (lane key, ctr) — `stream.
+    counter_uniforms` — so the fused kernel regenerates the identical
+    stream in VREGs and parity with the kernel path is bitwise for any
+    chunking (DESIGN.md §3c). The key itself never advances; only the
+    per-lane counter does (by 1 per *active* step, i.e. per consumed
+    draw).
+    """
+    return counter_uniforms(state.key[:, 0], state.key[:, 1], state.ctr)
 
 
 def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
@@ -71,7 +75,7 @@ def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
     a = propensities(state.x, idx, coef, rates)  # (B, R)
     a0 = a.sum(axis=1)
     dead = a0 <= 0.0
-    key, u1, u2 = _uniforms(state.key)
+    u1, u2 = _uniforms(state)
     tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
     t_next = state.t + tau
     fire = active & ~dead & (t_next <= horizon)
@@ -90,7 +94,8 @@ def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
     return LaneState(
         x=x,
         t=t,
-        key=jnp.where(active[:, None], key, state.key),
+        key=state.key,
+        ctr=state.ctr + active.astype(jnp.uint32),
         steps=state.steps + fire.astype(jnp.int32),
         dead=state.dead | (active & dead),
     )

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 MAX_REACTANTS = 4  # max distinct species on a rule LHS (CWC rules are small)
+# C(n, c) evaluation (`propensities` / kernels `_comb_factors`) is
+# unrolled to c <= MAX_COEF; larger multiplicities MUST be rejected at
+# construction — they would yield silently wrong propensities
+MAX_COEF = 4
 
 
 @dataclass(frozen=True)
@@ -29,6 +33,7 @@ class ReactionSystem:
 
     reactant_idx:  (R, MAX_REACTANTS) int32 — species index, S = padding
     reactant_coef: (R, MAX_REACTANTS) int32 — multiplicity, 0 = padding
+                   (each entry <= MAX_COEF, enforced at construction)
     delta:         (R, S) int32 — product-minus-reactant stoichiometry
     rates:         (R,) float32 — kinetic constants
     species_names / reaction_names: labels for reporting
@@ -42,6 +47,19 @@ class ReactionSystem:
     x0: np.ndarray
     species_names: tuple[str, ...]
     reaction_names: tuple[str, ...]
+
+    def __post_init__(self):
+        bad = np.argwhere(np.asarray(self.reactant_coef) > MAX_COEF)
+        if bad.size:
+            j, m = (int(v) for v in bad[0])
+            name = (self.reaction_names[j]
+                    if j < len(self.reaction_names) else f"r{j}")
+            raise ValueError(
+                f"reaction {name!r} has stoichiometric coefficient "
+                f"{int(self.reactant_coef[j, m])} > MAX_COEF={MAX_COEF}: "
+                "the combination factors C(n, c) are unrolled to "
+                f"c <= {MAX_COEF}, so this system would evaluate to "
+                "silently wrong propensities")
 
     @property
     def n_species(self) -> int:
@@ -123,8 +141,9 @@ def propensities(x, sys_idx, sys_coef, rates):
     xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)  # pad slot
     pops = xp[:, sys_idx]  # (B, R, M)
     coef = sys_coef[None, :, :]  # (1, R, M)
-    # C(n, c) = prod_{i=0..c-1} (n - i) / c!   (c <= MAX_COEF, unrolled)
-    max_c = 4
+    # C(n, c) = prod_{i=0..c-1} (n - i) / c!   (c <= MAX_COEF, unrolled;
+    # ReactionSystem.__post_init__ rejects larger coefficients)
+    max_c = MAX_COEF
     ff = jnp.ones_like(pops)
     fact = jnp.ones_like(pops)
     for i in range(max_c):

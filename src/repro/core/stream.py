@@ -1,6 +1,7 @@
-"""First-class data streams (paper guideline G1).
+"""First-class streams (paper guideline G1): random numbers in,
+statistics out.
 
-Trajectory statistics flow out of the engine as a stream of
+OUT: trajectory statistics flow out of the engine as a stream of
 (sim-time, Stats) records. Sinks attach as callbacks; the CSV sink
 writes incrementally (no trajectory is ever fully buffered — schema
 iii's memory bound). A bounded in-memory buffer with drop-oldest
@@ -10,6 +11,18 @@ Sinks have an explicit lifecycle: anything exposing `close()` is closed
 by `StatsStream.close()`, which `repro.api.simulate()` and the CLI call
 when a run completes. `CsvSink` holds its file handle open for the whole
 run and flushes once on close (not per row).
+
+IN: every lane consumes a counter-based random-number stream
+(`counter_uniforms`): draw n of lane (k0, k1) is threefry2x32 applied
+to the counter block (n, 0) under key (k0, k1). Because a draw is a
+pure function of (lane key, event index) — no chained key splitting —
+the fused Pallas kernel, the unfused jnp path, resume-from-checkpoint,
+and any chunk size all consume the *identical* stream, and the kernel
+can generate its uniforms in VREGs with zero HBM traffic
+(DESIGN.md §3c). The block cipher below is the standard 20-round
+threefry2x32 (Salmon et al., SC'11), written in plain `jnp` uint32 ops
+so the same code runs inside a Pallas kernel body and in host-traced
+jit code, bitwise identically.
 """
 from __future__ import annotations
 
@@ -18,7 +31,70 @@ import csv
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+# ------------------------------------------------------------------ RNG
+#: uniforms are clamped to [U_MIN, 1) so -log(u) stays finite
+U_MIN = 1e-12
+
+_ROT = (13, 15, 26, 6, 17, 29, 16, 24)
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """One threefry2x32 block: counter (c0, c1) under key (k0, k1).
+
+    All arguments are uint32 arrays of one broadcastable shape; returns
+    two uint32 arrays of random bits. Elementwise, so it vectorises over
+    the lane axis and runs unchanged inside a Pallas kernel (VREG ops
+    only: add/xor/rotate).
+    """
+
+    def rotl(x, r):
+        return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(0x1BD11BDA))
+    x0 = c0 + ks[0]
+    x1 = c1 + ks[1]
+    for block in range(5):
+        rots = _ROT[:4] if block % 2 == 0 else _ROT[4:]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = rotl(x1, r) ^ x0
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + jnp.uint32(block + 1)
+    return x0, x1
+
+
+def bits_to_uniform(bits):
+    """uint32 random bits -> float32 uniform on [U_MIN, 1).
+
+    Standard mantissa trick: the top 23 bits become the mantissa of a
+    float in [1, 2), shifted down to [0, 1) — exact, division-free, and
+    expressible in a kernel (bitcast + subtract).
+    """
+    f = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000), jnp.float32)
+    return jnp.maximum(f - 1.0, U_MIN)
+
+
+def counter_uniforms(k0, k1, ctr):
+    """(u1, u2) for event index `ctr` of the lane streams keyed (k0, k1).
+
+    k0/k1/ctr: uint32 arrays (any matching shape; typically (B,)).
+    One threefry block yields both uniforms an SSA event consumes
+    (tau and the reaction choice).
+
+    The counter is uint32 with the cipher's second counter word pinned
+    to 0, so a single lane's stream period is 2^32 events — far beyond
+    any window schedule here, but a lane that somehow exceeds it would
+    replay its stream from draw 0. Widening to the spare `c1` word
+    needs a second LaneState/checkpoint counter field; do that before
+    pushing individual lanes past ~4e9 events.
+    """
+    b0, b1 = threefry2x32(k0, k1, ctr, jnp.zeros_like(ctr))
+    return bits_to_uniform(b0), bits_to_uniform(b1)
 
 
 @dataclass

@@ -2,9 +2,16 @@
 
 `interpret=True` on CPU (this container) executes the kernel bodies in
 Python for correctness validation; on TPU the same `pallas_call`s
-compile to Mosaic. `fused_window` integrates the fused SSA kernel with
-the engine's LaneState, generating the SAME per-lane threefry uniform
-stream the unfused path would consume, so both paths are bit-identical.
+compile to Mosaic. `fused_window` advances a lane pool one whole
+sim-time window as ONE device dispatch: a device-side `lax.while_loop`
+runs back-to-back `chunk_steps`-event kernel launches until every lane
+crosses the horizon, with the continuation predicate computed on
+device. There is no uniform-stream operand and no host round trip —
+the kernel draws its randomness in VREGs from the counter-based
+per-lane stream (`core/stream.counter_uniforms`), the SAME stream the
+unfused `gillespie.ssa_step` consumes, so kernel↔unfused trajectories
+are bitwise identical for any `chunk_steps`, across window boundaries,
+and across shard counts.
 """
 from __future__ import annotations
 
@@ -13,7 +20,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.gillespie import LaneState
 from repro.core.reactions import ReactionSystem
@@ -22,6 +28,15 @@ from repro.kernels.ssa_step import ssa_window_call
 
 ON_TPU = jax.default_backend() == "tpu"
 DEFAULT_CHUNK_STEPS = 256
+DEFAULT_MAX_CHUNKS = 64
+
+
+class FusedWindowTruncated(RuntimeError):
+    """A fused window hit its chunk budget with live lanes still below
+    the horizon — results past the truncation point would silently be a
+    partial window. Raise `max_chunks`/`chunk_steps` (engine:
+    `SimConfig.kernel_max_chunks`/`kernel_chunk_steps`) or shrink the
+    window."""
 
 
 def system_kernel_tensors(system: ReactionSystem):
@@ -38,48 +53,39 @@ def propensity(x, system_tensors_k, rates, interpret: bool | None = None):
     return propensity_call(x, e, coef, rates, interpret=interp)
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _draw_uniform_stream(key, n: int):
-    """(B,2) uint32 keys -> (new_keys, uniforms (B, n, 2)) matching the
-    unfused gillespie._uniforms consumption order."""
-
-    def one_lane(k):
-        def body(k, _):
-            kk = jax.random.wrap_key_data(k, impl="threefry2x32")
-            k1, k2 = jax.random.split(kk)
-            u = jax.random.uniform(k2, (2,), jnp.float32, 1e-12, 1.0)
-            return jax.random.key_data(k1), u
-
-        return jax.lax.scan(body, k, None, length=n)
-
-    new_key, us = jax.vmap(one_lane)(key)
-    return new_key, us
-
-
 class FusedWindowOut(NamedTuple):
-    """fused_window result + the telemetry its host-driven chunk loop
-    accrues (threaded back into the engine's counters).
+    """fused_window result + single-launch telemetry.
 
-    n_dispatches: device launches — two per executed chunk (the uniform
-    stream draw and the fused kernel call).
-    n_host_syncs: blocking device->host pulls — one per `bool(...)`
-    continuation check, including the final check that ends the loop.
+    The chunk loop runs on device, so there are no host-side dispatch/
+    sync counters any more — a window is ONE dispatch and ZERO
+    mid-window host syncs by construction. What remains:
+
+    n_chunks: int32 scalar (device) — kernel chunk iterations the
+    while_loop executed.
+    truncated: bool scalar (device) — True iff the `max_chunks` budget
+    ran out with live lanes still below the horizon, i.e. the returned
+    state is a PARTIAL window. Callers must surface this (the engine
+    raises `FusedWindowTruncated`); it was previously silent.
     """
 
     state: LaneState
-    n_dispatches: int
-    n_host_syncs: int
+    n_chunks: jax.Array
+    truncated: jax.Array
 
 
-def fused_window(pool: LaneState, tensors, horizon,
-                 chunk_steps: int = DEFAULT_CHUNK_STEPS,
-                 interpret: bool | None = None,
-                 max_chunks: int = 64) -> FusedWindowOut:
-    """Advance every lane to `horizon` using the fused kernel.
+def window_chunk_loop(pool: LaneState, tensors, horizon,
+                      chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                      interpret: bool | None = None,
+                      max_chunks: int = DEFAULT_MAX_CHUNKS
+                      ) -> FusedWindowOut:
+    """Traceable core of `fused_window` (no jit wrapper of its own).
+
+    Exposed separately so the sharded dispatch can run it per shard
+    inside `shard_map` and the engine's fused dispatch can fuse it with
+    device-side observable extraction in one jitted step.
 
     tensors: (idx, coef, delta, rates) as in gillespie.system_tensors —
-    converted to kernel form here. Chunks of `chunk_steps` fused events
-    run back-to-back until all lanes cross the horizon.
+    converted to kernel form here (traced, so it compiles away).
     """
     idx, coef_rm, delta_f, rates = tensors
     s = pool.x.shape[1]
@@ -91,30 +97,49 @@ def fused_window(pool: LaneState, tensors, horizon,
         (coef_rm.T > 0).astype(jnp.float32))[:, :s, :]
     coef_k = jnp.asarray(coef_rm.T, jnp.float32)
     interp = (not ON_TPU) if interpret is None else interpret
-
-    x, t, dead = pool.x, pool.t, pool.dead.astype(jnp.int32)
+    horizon = jnp.asarray(horizon, jnp.float32)
     key = pool.key
-    steps_total = pool.steps
-    n_dispatches = 0
-    n_host_syncs = 0
-    for _ in range(max_chunks):
-        n_host_syncs += 1  # the bool() below blocks on the device
-        if not bool(jnp.any((t < horizon) & (dead == 0))):
-            break
-        key, uniforms = _draw_uniform_stream(key, chunk_steps)
-        x, t, dead, steps = ssa_window_call(
-            x, t, dead, uniforms, e, coef_k, delta_f, rates, horizon,
+
+    def live(t, dead):
+        return (t < horizon) & (dead == 0)
+
+    def cond(carry):
+        x, t, dead, ctr, steps, n = carry
+        return (n < max_chunks) & jnp.any(live(t, dead))
+
+    def body(carry):
+        x, t, dead, ctr, steps, n = carry
+        x, t, dead, steps_d, ctr = ssa_window_call(
+            x, t, dead, key, ctr, e, coef_k, delta_f, rates, horizon,
             n_steps=chunk_steps, interpret=interp)
-        n_dispatches += 2
-        steps_total = steps_total + steps
-        # NOTE on determinism: within a window the kernel consumes the
-        # identical uniform stream as the unfused path (bitwise-equal
-        # trajectories, tested). Across windows the key advances by
-        # chunk_steps splits regardless of how many draws were used, so
-        # kernel-vs-unfused parity across windows is distributional, not
-        # bitwise (both exact SSA; memorylessness makes redraws valid).
+        return x, t, dead, ctr, steps + steps_d, n + 1
+
+    x, t, dead, ctr, steps, n_chunks = jax.lax.while_loop(
+        cond, body, (pool.x, pool.t, pool.dead.astype(jnp.int32),
+                     pool.ctr, pool.steps, jnp.int32(0)))
+    truncated = jnp.any(live(t, dead))
     t = jnp.where(dead > 0, jnp.maximum(t, horizon), t)
-    return FusedWindowOut(
-        state=LaneState(x=x, t=t, key=key, steps=steps_total,
-                        dead=dead > 0),
-        n_dispatches=n_dispatches, n_host_syncs=n_host_syncs)
+    state = LaneState(x=x, t=t, key=key, ctr=ctr, steps=steps,
+                      dead=dead > 0)
+    return FusedWindowOut(state=state, n_chunks=n_chunks,
+                          truncated=truncated)
+
+
+@partial(jax.jit,
+         static_argnames=("chunk_steps", "interpret", "max_chunks"),
+         donate_argnums=(0,))
+def fused_window(pool: LaneState, tensors, horizon,
+                 chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                 interpret: bool | None = None,
+                 max_chunks: int = DEFAULT_MAX_CHUNKS) -> FusedWindowOut:
+    """Advance every lane to `horizon` using the fused kernel — one
+    device dispatch for the whole window.
+
+    The chunk loop is a device-side `lax.while_loop`; nothing is pulled
+    to the host mid-window (check `.truncated` after the fact — a
+    device scalar — to learn whether the `max_chunks` iteration bound
+    cut a window short).
+    """
+    return window_chunk_loop(pool, tensors, horizon,
+                             chunk_steps=chunk_steps, interpret=interpret,
+                             max_chunks=max_chunks)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.reactions import MAX_REACTANTS, ReactionSystem
+from repro.core.reactions import MAX_COEF, MAX_REACTANTS, ReactionSystem
 
 LANE_BLK = 256
 R_BLK = 256
@@ -41,8 +41,10 @@ def reactant_onehots(system: ReactionSystem) -> np.ndarray:
     return e
 
 
-def _comb_factors(pops, coef, max_c: int = 4):
-    """C(pops, coef) unrolled: pops (B, R) f32, coef (R,) or (B, R)."""
+def _comb_factors(pops, coef, max_c: int = MAX_COEF):
+    """C(pops, coef) unrolled to coef <= max_c: pops (B, R) f32, coef
+    (R,) or (B, R). Coefficients beyond MAX_COEF are rejected at
+    `ReactionSystem` construction, so the unroll bound is safe."""
     ff = jnp.ones_like(pops)
     fact = jnp.ones_like(pops)
     for i in range(max_c):

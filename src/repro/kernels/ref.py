@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reactions import MAX_REACTANTS, propensities
+from repro.core.stream import counter_uniforms
 
 
 def propensity_ref(x, idx, coef, rates):
@@ -14,24 +15,25 @@ def propensity_ref(x, idx, coef, rates):
     return propensities(x, idx, coef, rates)
 
 
-def ssa_window_ref(x, t, dead, uniforms, idx, coef, delta, rates, horizon,
+def ssa_window_ref(x, t, dead, key, ctr, idx, coef, delta, rates, horizon,
                    n_steps: int):
-    """Consume the same uniform stream as the fused kernel — oracle for
-    kernels/ssa_step.py. Returns (x, t, dead, steps)."""
+    """Consume the same counter-based (key, ctr) stream as the fused
+    kernel — oracle for kernels/ssa_step.py.
+    Returns (x, t, dead, steps, ctr)."""
     b = x.shape[0]
     if rates.ndim == 1:
         rates = jnp.broadcast_to(rates, (b, rates.shape[0]))
     dead = dead.astype(bool)
     steps = jnp.zeros((b,), jnp.int32)
+    k0, k1 = key[:, 0], key[:, 1]
 
     def step(i, carry):
-        x, t, dead, steps = carry
+        x, t, dead, steps, ctr = carry
         active = (t < horizon) & ~dead
         a = propensities(x, idx, coef, rates)
         a0 = a.sum(axis=1)
         now_dead = a0 <= 0.0
-        u1 = uniforms[:, i, 0]
-        u2 = uniforms[:, i, 1]
+        u1, u2 = counter_uniforms(k0, k1, ctr)
         tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
         t_next = t + tau
         fire = active & ~now_dead & (t_next <= horizon)
@@ -41,8 +43,9 @@ def ssa_window_ref(x, t, dead, uniforms, idx, coef, delta, rates, horizon,
         t = jnp.where(fire, t_next, jnp.where(active, horizon, t))
         dead = dead | (active & now_dead)
         steps = steps + fire.astype(jnp.int32)
-        return x, t, dead, steps
+        ctr = ctr + active.astype(jnp.uint32)
+        return x, t, dead, steps, ctr
 
-    x, t, dead, steps = jax.lax.fori_loop(0, n_steps, step,
-                                          (x, t, dead, steps))
-    return x, t, dead.astype(jnp.int32), steps
+    x, t, dead, steps, ctr = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, steps, ctr))
+    return x, t, dead.astype(jnp.int32), steps, ctr

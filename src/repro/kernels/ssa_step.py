@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused multi-step SSA window.
+"""Pallas TPU kernel: fused multi-step SSA window, RNG in VREGs.
 
 The flagship hardware adaptation (DESIGN.md §2/§4): the paper found the
 single SSA step too fine-grained for any inter-core parallelism and
@@ -8,16 +8,20 @@ in VMEM across `n_steps` iterations:
 
   per step (all in VMEM / VREGs):
     Match   — A = k · Π C(X@E_m, coef)        (MXU matmuls)
-    Resolve — tau = -ln(u1)/a0;  one-hot(j) from inverse-CDF on cumsum
+    Resolve — u1, u2 = threefry2x32(key, ctr) (VREG counter-based draw)
+              tau = -ln(u1)/a0;  one-hot(j) from inverse-CDF on cumsum
     Update  — X += onehot(j) @ delta          (MXU matmul)
 
-HBM traffic per window: X/t/flags once each way + the uniform stream,
-instead of O(state × steps) — the memory-wall guideline (§3.2.3/3.1.2)
-applied to the HBM↔VMEM boundary.
+HBM traffic per window: X/t/flags/key/ctr once each way — nothing that
+scales with the step count. There is NO uniform-stream operand: the
+uniforms are generated in-register from the per-lane (key, ctr) stream
+(`core/stream.counter_uniforms`), which is the memory-wall guideline
+(§3.2.3/3.1.2) applied to the HBM↔VMEM boundary.
 
-Uniforms are precomputed from the SAME per-lane threefry sequence as
-the unfused `gillespie.ssa_step`, so kernel and jnp paths produce
-bit-identical trajectories (tested).
+Because the draw is a pure function of (lane key, event counter), the
+kernel consumes the IDENTICAL stream as the unfused
+`gillespie.ssa_step` — trajectories are bitwise equal for ANY chunk
+size, across window boundaries, and across shard counts (tested).
 
 Grid: lane blocks only (reactions stay whole in VMEM — CWC systems are
 small-R; an R-tiled variant would add a cross-tile argmin, not needed
@@ -32,22 +36,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.reactions import MAX_REACTANTS
+from repro.core.stream import counter_uniforms
 from repro.kernels.propensity import _comb_factors
 
 LANE_BLK = 256
 
 
-def _window_kernel(x_ref, t_ref, dead_ref, u_ref, e_ref, coef_ref,
-                   delta_ref, rates_ref, horizon_ref,
-                   x_out, t_out, dead_out, steps_out, n_steps: int):
+def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, e_ref,
+                   coef_ref, delta_ref, rates_ref, horizon_ref,
+                   x_out, t_out, dead_out, steps_out, ctr_out,
+                   n_steps: int):
     x = x_ref[...].astype(jnp.float32)  # (BL, S)
     t = t_ref[...]  # (BL,)
     dead = dead_ref[...] > 0  # (BL,)
+    k0 = key_ref[:, 0]  # (BL,) uint32 — stream key, read once
+    k1 = key_ref[:, 1]
+    ctr = ctr_ref[...]  # (BL,) uint32 — event counter, lives in VREGs
     horizon = horizon_ref[0]
     steps = jnp.zeros_like(t, jnp.float32)
 
     def step(i, carry):
-        x, t, dead, steps = carry
+        x, t, dead, steps, ctr = carry
         active = (t < horizon) & ~dead
         # --- Match (MXU) ---
         a = rates_ref[...]
@@ -57,9 +66,8 @@ def _window_kernel(x_ref, t_ref, dead_ref, u_ref, e_ref, coef_ref,
             a = a * _comb_factors(pops, coef_ref[m][None, :])
         a0 = a.sum(axis=1)
         now_dead = a0 <= 0.0
-        # --- Resolve ---
-        u1 = u_ref[:, i, 0]
-        u2 = u_ref[:, i, 1]
+        # --- Resolve (counter-based draw, VREGs only) ---
+        u1, u2 = counter_uniforms(k0, k1, ctr)
         tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
         t_next = t + tau
         fire = active & ~now_dead & (t_next <= horizon)
@@ -77,24 +85,27 @@ def _window_kernel(x_ref, t_ref, dead_ref, u_ref, e_ref, coef_ref,
                       jnp.where(active, horizon, t))
         dead = dead | (active & now_dead)
         steps = steps + fire.astype(jnp.float32)
-        return x, t, dead, steps
+        ctr = ctr + active.astype(jnp.uint32)
+        return x, t, dead, steps, ctr
 
-    x, t, dead, steps = jax.lax.fori_loop(
-        0, n_steps, step, (x, t, dead, steps))
+    x, t, dead, steps, ctr = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, steps, ctr))
     x_out[...] = x
     t_out[...] = t
     dead_out[...] = dead.astype(jnp.int32)
     steps_out[...] = steps.astype(jnp.int32)
+    ctr_out[...] = ctr
 
 
 @partial(jax.jit, static_argnames=("n_steps", "interpret"))
-def ssa_window_call(x, t, dead, uniforms, e, coef, delta, rates, horizon,
+def ssa_window_call(x, t, dead, key, ctr, e, coef, delta, rates, horizon,
                     *, n_steps: int, interpret: bool = True):
     """Run up to n_steps fused SSA events per lane toward `horizon`.
 
-    x: (B,S) f32; t: (B,) f32; dead: (B,) int32; uniforms: (B, n_steps, 2);
-    e: (M,S,R); coef: (M,R) f32; delta: (R,S) f32; rates: (B,R) or (R,).
-    Returns (x, t, dead, steps_taken).
+    x: (B,S) f32; t: (B,) f32; dead: (B,) int32; key: (B,2) uint32;
+    ctr: (B,) uint32; e: (M,S,R); coef: (M,R) f32; delta: (R,S) f32;
+    rates: (B,R) or (R,).
+    Returns (x, t, dead, steps_taken, ctr).
     """
     b, s = x.shape
     r = delta.shape[0]
@@ -111,7 +122,8 @@ def ssa_window_call(x, t, dead, uniforms, e, coef, delta, rates, horizon,
             pl.BlockSpec((bl, s), lambda i: (i, 0)),
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
-            pl.BlockSpec((bl, n_steps, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bl, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((MAX_REACTANTS, s, r), lambda i: (0, 0, 0)),
             pl.BlockSpec((MAX_REACTANTS, r), lambda i: (0, 0)),
             pl.BlockSpec((r, s), lambda i: (0, 0)),
@@ -123,12 +135,14 @@ def ssa_window_call(x, t, dead, uniforms, e, coef, delta, rates, horizon,
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, s), jnp.float32),
             jax.ShapeDtypeStruct((b,), jnp.float32),
             jax.ShapeDtypeStruct((b,), jnp.int32),
             jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
         ],
         interpret=interpret,
-    )(x, t, dead, uniforms, e, coef, delta, rates, horizon_arr)
+    )(x, t, dead, key, ctr, e, coef, delta, rates, horizon_arr)

@@ -288,17 +288,45 @@ def test_telemetry_counts_one_dispatch_per_window():
     assert len(res.telemetry.window_wall_times) == 4
 
 
-def test_kernel_path_telemetry_counts_chunk_loop():
-    """The Pallas path's host-driven chunk loop is no longer invisible:
-    every continuation check is a host sync and every executed chunk
-    two dispatches (uniform draw + kernel call), so the kernel run must
-    report strictly more of both than the plain host loop."""
+def test_kernel_path_is_one_dispatch_per_window():
+    """The Pallas chunk loop now runs device-side: a kernel window is
+    ONE dispatch (vs one per group for the host loop), there are no
+    per-chunk host syncs (only the end-of-window truncation check),
+    and the records are BITWISE equal to both the fused jnp path and
+    the host-loop baseline — parity the counter-based RNG guarantees
+    for any chunk size."""
     kern = simulate(_exp(windows=2, replicas=16, use_kernel=True))
+    fused = simulate(_exp(windows=2, replicas=16))
     host = simulate(_exp(windows=2, replicas=16, host_loop=True))
-    groups_x_windows = 2 * 2  # 16 instances / 8 lanes, 2 windows
-    # >= 1 executed chunk per (group x window): 2 dispatches each, plus
-    # >= 2 continuation checks (enter + terminate) counted as syncs
-    assert kern.telemetry.dispatches >= 2 * groups_x_windows
-    assert kern.telemetry.host_syncs >= \
-        host.telemetry.host_syncs + 2 * groups_x_windows
-    assert kern.telemetry.dispatches > host.telemetry.dispatches
+    assert kern.telemetry.dispatches == 2  # one launch per window
+    assert (kern.means() == fused.means()).all()
+    assert (kern.means() == host.means()).all()
+    # exactly one extra pull per window vs the fused jnp path: the
+    # device-scalar truncation flag
+    assert kern.telemetry.host_syncs == fused.telemetry.host_syncs + 2
+    # host_loop+use_kernel stays the per-group baseline: one fused
+    # launch per (group x window), still no chunk-loop sync storm
+    both = simulate(_exp(windows=2, replicas=16, host_loop=True,
+                         use_kernel=True))
+    assert both.telemetry.dispatches == 2 * 2  # 16 inst / 8 lanes
+    assert (both.means() == kern.means()).all()
+
+
+def test_kernel_budget_knobs_exposed_on_experiment():
+    """The FusedWindowTruncated remedy ("raise kernel_max_chunks /
+    kernel_chunk_steps") must be applicable through the declarative
+    API, and the chunking must never change a trajectory."""
+    from repro.kernels.ops import FusedWindowTruncated
+
+    tight = _exp(windows=2, replicas=16, use_kernel=True,
+                 kernel_chunk_steps=2, kernel_max_chunks=1)
+    with pytest.raises(FusedWindowTruncated, match="kernel_max_chunks"):
+        simulate(tight)
+    odd = simulate(_exp(windows=2, replicas=16, use_kernel=True,
+                        kernel_chunk_steps=7, kernel_max_chunks=512))
+    default = simulate(_exp(windows=2, replicas=16, use_kernel=True))
+    assert (odd.means() == default.means()).all()
+    with pytest.raises(ExperimentError, match="kernel_chunk_steps"):
+        simulate(_exp(use_kernel=True, kernel_chunk_steps=0))
+    with pytest.raises(ExperimentError, match="kernel_max_chunks"):
+        simulate(_exp(use_kernel=True, kernel_max_chunks=-1))

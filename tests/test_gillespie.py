@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.gillespie import advance_to, init_lanes, system_tensors
-from repro.core.reactions import make_system
+from repro.core.reactions import MAX_COEF, make_system
 
 
 def _run(system, n, t, seed):
@@ -73,3 +73,30 @@ def test_dead_lanes_stay_dead():
     st = _run(sys, 16, 100.0, seed=6)
     assert bool(st.dead.all())
     assert (np.asarray(st.x) == 0).all()
+
+
+def test_coefficient_beyond_unroll_cap_rejected_at_construction():
+    """C(n, c) is unrolled to c <= MAX_COEF; a larger stoichiometric
+    coefficient used to yield silently WRONG propensities — it must now
+    be rejected when the system is built, naming the reaction."""
+    with pytest.raises(ValueError, match="pentamer.*5 > MAX_COEF"):
+        make_system(["A", "P"],
+                    [({"A": 1}, {}, 1.0),
+                     ({"A": MAX_COEF + 1}, {"P": 1}, 0.1)],
+                    {"A": 50}, names=["decay", "pentamer"])
+    # the cap itself is fine
+    make_system(["A", "P"], [({"A": MAX_COEF}, {"P": 1}, 0.1)], {"A": 50})
+
+
+def test_rng_stream_is_counter_based_and_key_stable():
+    """Draws are a pure function of (lane key, event counter): the key
+    never advances, the counter counts consumed draws per lane —
+    which is what makes chunked/fused/resumed replay bitwise."""
+    sys = make_system(["A"], [({}, {"A": 1}, 5.0), ({"A": 1}, {}, 0.5)],
+                      {"A": 10})
+    st0 = init_lanes(sys, 8, seed=1)
+    st = _run(sys, 8, 3.0, seed=1)
+    assert (np.asarray(st.key) == np.asarray(st0.key)).all()
+    assert st.ctr.dtype == jnp.uint32
+    assert (np.asarray(st.ctr) >= np.asarray(st.steps)).all()
+    assert int(st.ctr.max()) > 0

@@ -11,7 +11,7 @@ from repro.core.cwc.models import (
     membrane_transport,
 )
 from repro.core.gillespie import advance_to, init_lanes, system_tensors
-from repro.kernels.ops import _draw_uniform_stream, fused_window
+from repro.kernels.ops import FusedWindowOut, fused_window
 from repro.kernels.propensity import propensity_call, reactant_onehots
 from repro.kernels.ref import propensity_ref, ssa_window_ref
 from repro.kernels.ssa_step import ssa_window_call
@@ -59,37 +59,100 @@ def test_propensity_kernel_per_lane_rates(name, rng):
 @pytest.mark.parametrize("name", ["lv2", "ecoli", "transport"])
 @pytest.mark.parametrize("batch,n_steps", [(8, 16), (33, 64), (128, 32)])
 def test_fused_window_bitwise_vs_ref(name, batch, n_steps, rng):
+    """The kernel's in-VREG counter-based draws match the jnp oracle
+    consuming the same (key, ctr) stream — bitwise."""
     sys, _ = compile_model(SYSTEMS[name])
     pool = init_lanes(sys, batch, seed=batch + n_steps)
-    _, uniforms = _draw_uniform_stream(pool.key, n_steps)
     e = jnp.asarray(reactant_onehots(sys))
     coef = jnp.asarray(sys.reactant_coef.T, jnp.float32)
     delta = jnp.asarray(sys.delta, jnp.float32)
     rates = jnp.asarray(sys.rates)
     horizon = 0.1
     out_k = ssa_window_call(pool.x, pool.t, pool.dead.astype(jnp.int32),
-                            uniforms, e, coef, delta, rates, horizon,
-                            n_steps=n_steps, interpret=True)
+                            pool.key, pool.ctr, e, coef, delta, rates,
+                            horizon, n_steps=n_steps, interpret=True)
     out_r = ssa_window_ref(pool.x, pool.t, pool.dead.astype(jnp.int32),
-                           uniforms, jnp.asarray(sys.reactant_idx),
+                           pool.key, pool.ctr,
+                           jnp.asarray(sys.reactant_idx),
                            jnp.asarray(sys.reactant_coef), delta, rates,
                            horizon, n_steps=n_steps)
     assert (out_k[0] == out_r[0]).all(), "state mismatch"
     np.testing.assert_allclose(np.asarray(out_k[1]), np.asarray(out_r[1]),
                                rtol=1e-5, atol=1e-6)
     assert (out_k[3] == out_r[3]).all(), "step counts mismatch"
+    assert (out_k[4] == out_r[4]).all(), "draw counters mismatch"
 
 
-def test_fused_window_first_window_bitwise_vs_unfused():
+@pytest.mark.parametrize("chunk_steps,max_chunks",
+                         [(1, 2048), (7, 512), (256, 64)])
+def test_fused_window_bitwise_vs_unfused_any_chunk(chunk_steps, max_chunks):
+    """Counter-based RNG makes kernel<->unfused parity bitwise for ANY
+    chunk size, INCLUDING across a window boundary (previously only the
+    first window was bitwise; across windows it was distributional)."""
     sys, _ = compile_model(lotka_volterra(2))
     tens = system_tensors(sys)
     p1 = init_lanes(sys, 64, seed=9)
     p2 = init_lanes(sys, 64, seed=9)
-    a1 = jax.jit(lambda p: advance_to(p, tens, 0.1))(p1)
-    out = fused_window(p2, tens, 0.1, chunk_steps=128)
-    a2 = out.state
-    # chunk-loop telemetry is threaded back (one bool() sync per chunk
-    # check, two dispatches per executed chunk)
-    assert out.n_host_syncs >= 2 and out.n_dispatches >= 2
-    assert (a1.x == a2.x).all()
-    np.testing.assert_allclose(np.asarray(a1.t), np.asarray(a2.t), atol=1e-6)
+    adv = jax.jit(lambda p, h: advance_to(p, tens, h))
+    a = adv(adv(p1, 0.1), 0.2)  # two windows, unfused
+    out = fused_window(p2, tens, 0.1, chunk_steps=chunk_steps,
+                       max_chunks=max_chunks)
+    out = fused_window(out.state, tens, 0.2, chunk_steps=chunk_steps,
+                       max_chunks=max_chunks)
+    b = out.state
+    assert not bool(out.truncated)
+    assert (a.x == b.x).all()
+    assert (a.t == b.t).all()
+    assert (a.ctr == b.ctr).all()
+    assert (a.steps == b.steps).all()
+    assert (a.dead == b.dead).all()
+
+
+def test_fused_window_single_launch_telemetry():
+    """FusedWindowOut carries single-launch telemetry only: a device
+    chunk count and a truncation flag — the host-driven per-chunk
+    dispatch/sync counters are gone along with the loop itself."""
+    sys, _ = compile_model(lotka_volterra(2))
+    tens = system_tensors(sys)
+    out = fused_window(init_lanes(sys, 64, seed=9), tens, 0.1,
+                       chunk_steps=128)
+    assert set(FusedWindowOut._fields) == {"state", "n_chunks",
+                                           "truncated"}
+    assert int(out.n_chunks) >= 1
+    assert not bool(out.truncated)
+
+
+def test_fused_window_truncation_is_flagged_not_silent():
+    """A window that exhausts max_chunks with live lanes below the
+    horizon must say so — previously it returned a partial window as if
+    complete."""
+    sys, _ = compile_model(lotka_volterra(2))
+    tens = system_tensors(sys)
+    out = fused_window(init_lanes(sys, 16, seed=3), tens, 5.0,
+                       chunk_steps=2, max_chunks=1)
+    assert bool(out.truncated)
+    assert int(out.n_chunks) == 1
+    # the partial state is still below the horizon on some live lane
+    live = (np.asarray(out.state.t) < 5.0) & ~np.asarray(out.state.dead)
+    assert live.any()
+    # a generous budget on the same start completes and clears the flag
+    out2 = fused_window(init_lanes(sys, 16, seed=3), tens, 5.0,
+                        chunk_steps=256, max_chunks=64)
+    assert not bool(out2.truncated)
+
+
+def test_engine_raises_on_truncated_kernel_window():
+    import warnings
+
+    from repro.core.engine import SimConfig, SimulationEngine
+    from repro.kernels.ops import FusedWindowTruncated
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = SimulationEngine(
+            lotka_volterra(2),
+            SimConfig(n_instances=16, t_end=2.0, n_windows=2, n_lanes=16,
+                      schema="iii", seed=5, use_kernel=True,
+                      kernel_chunk_steps=2, kernel_max_chunks=1))
+    with pytest.raises(FusedWindowTruncated, match="kernel_max_chunks"):
+        eng.run()

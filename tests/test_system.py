@@ -81,11 +81,14 @@ def test_sweep_end_to_end_separates_points():
 
     model = lotka_volterra(2)
     system, _ = compile_model(model)
-    spec = SweepSpec.make({"reproduce": [0.5, 2.0]}, replicas=16)
+    # 64 replicas per point: prey is near extinction by t_end, so the
+    # 16-replica original separated only by seed luck (too tight for a
+    # one-sided mean comparison)
+    spec = SweepSpec.make({"reproduce": [0.5, 2.0]}, replicas=64)
     cfg = SimConfig(n_instances=spec.n_instances(), t_end=1.5, n_windows=3,
                     n_lanes=32, schema="iii", seed=4)
     eng = SimulationEngine(model, cfg, rates=sweep_rates(system, spec))
     eng.run()
     x = np.asarray(eng._pool.x)
-    prey_low, prey_high = x[:16, 0].mean(), x[16:, 0].mean()
+    prey_low, prey_high = x[:64, 0].mean(), x[64:, 0].mean()
     assert prey_high > prey_low  # higher birth rate -> more prey
