@@ -52,6 +52,13 @@ def main() -> None:
             f"{p} diverged from window_step")
     assert paths["kernel"]["dispatches_per_window"] == 1.0, (
         "kernel path must be one dispatch per window")
+    # the truncation flag rides the per-window record pull: EVERY path
+    # is exactly one blocking host sync per window (the kernel path
+    # used to pay a second one — BENCH_PR3 recorded 2.0 here)
+    for p, row in paths.items():
+        assert row["host_syncs_per_window"] == 1.0, (
+            f"{p}: {row['host_syncs_per_window']} host syncs/window "
+            "(expected exactly 1.0 — the combined record pull)")
 
     farm = {}
     digests = set()
@@ -71,6 +78,10 @@ def main() -> None:
                   f"{farm[f'shards={k},kernel={int(kernel)}']}")
     assert len(digests) == 1, (
         f"records diverged across shards/window bodies: {farm}")
+    for key, row in farm.items():
+        assert row["host_syncs_per_window"] == 1.0, (
+            f"sharded_farm/{key}: {row['host_syncs_per_window']} host "
+            "syncs/window (expected exactly 1.0)")
 
     doc = {
         "pr": 3,
@@ -90,6 +101,7 @@ def main() -> None:
             "all_paths_bitwise_identical": True,
             "kernel_single_dispatch_per_window": True,
             "kernel_uniform_stream_operand": False,
+            "host_syncs_per_window_all_paths": 1.0,
         },
     }
     with open(out_path, "w") as f:

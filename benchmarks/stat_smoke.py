@@ -1,0 +1,140 @@
+"""Statistical benchmark smoke -> BENCH_PR4.json (tau-leaping's
+entry in the perf trajectory).
+
+Two sections, CI-sized, all seeded/deterministic:
+
+* fig4 model (the 2-species Lotka-Volterra of the paper's Fig. 4,
+  windows at the fig4 horizon scale): exact SSA vs Method.TAU_LEAP —
+  solver steps per window, wall per window, the steps-per-unit-sim-time
+  ratio (asserted >= 5x), leap share, and the tau-vs-exact ensemble
+  moment agreement in z-units (asserted <= 3);
+* birth-death with ANALYTIC ground truth (X(t) ~ Poisson(m(t))): both
+  methods' mean/variance errors in sigma units of the analytic value
+  (asserted <= 3).
+
+  PYTHONPATH=src python benchmarks/stat_smoke.py [out.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.api import Ensemble, Experiment, Method, Schedule, simulate  # noqa: E402
+from repro.core.cwc.models import lotka_volterra  # noqa: E402
+from repro.core.reactions import make_system  # noqa: E402
+
+REPLICAS, N_LANES, N_WINDOWS = 128, 32, 4
+FIG4_T_END = 0.2  # 4 windows at the fig4 per-event benchmark horizon
+TAU_EPS = 0.05
+BD_LAM, BD_MU, BD_T_END = 400.0, 1.0, 2.0
+
+
+def _run(model, method, t_end, **kw):
+    res = simulate(Experiment(
+        model=model, ensemble=Ensemble.make(replicas=REPLICAS),
+        schedule=Schedule(t_end=t_end, n_windows=N_WINDOWS),
+        n_lanes=N_LANES, seed=7, method=method, **kw))
+    tele = res.telemetry
+    steady = sorted(tele.window_wall_times[1:])
+    return res, {
+        "steps_per_window": list(tele.steps_per_window),
+        "leaps_per_window": list(tele.leaps_per_window),
+        "wall_per_window_ms": round(
+            1e3 * steady[len(steady) // 2], 3),
+        "dispatches_per_window": tele.dispatches / N_WINDOWS,
+        "host_syncs_per_window": tele.host_syncs / N_WINDOWS,
+    }
+
+
+def fig4_section():
+    model = lotka_volterra(2)
+    ex, m_ex = _run(model, Method.EXACT, FIG4_T_END)
+    tl, m_tl = _run(model, Method.TAU_LEAP, FIG4_T_END, tau_eps=TAU_EPS)
+    s_ex = sum(m_ex["steps_per_window"])
+    s_tl = sum(m_tl["steps_per_window"])
+    ratio = s_ex / max(s_tl, 1)
+    # moment agreement at the final grid point, in z-units of the
+    # two-sample standard error
+    me, mt = ex.means()[-1], tl.means()[-1]
+    se = np.sqrt(ex.records[-1].var / REPLICAS
+                 + tl.records[-1].var / REPLICAS)
+    z = np.abs(mt - me) / se
+    out = {
+        "exact": m_ex,
+        "tau_leap": m_tl,
+        "steps_ratio_exact_over_tau": round(ratio, 2),
+        "moment_z_tau_vs_exact": [round(float(v), 3) for v in z],
+    }
+    print(f"fig4/lv2: steps {s_ex} (exact) vs {s_tl} (tau) = "
+          f"{ratio:.1f}x fewer; moment z {z}")
+    assert ratio >= 5.0, (
+        f"tau-leap step reduction {ratio:.2f}x < 5x on the fig4 model")
+    assert (z <= 3.0).all(), f"tau-vs-exact moment error beyond 3 sigma: {z}"
+    assert sum(m_tl["leaps_per_window"]) > 0
+    return out
+
+
+def birth_death_section():
+    model = make_system(
+        ["A"], [({}, {"A": 1}, BD_LAM), ({"A": 1}, {}, BD_MU)], {"A": 0})
+    out = {}
+    for method in (Method.EXACT, Method.TAU_LEAP):
+        res, m = _run(model, method, BD_T_END)
+        errs = []
+        for rec in res.records:
+            an = BD_LAM / BD_MU * (1 - np.exp(-BD_MU * rec.t))
+            z_mean = float((rec.mean[0] - an) / np.sqrt(an / REPLICAS))
+            z_var = float((rec.var[0] - an)
+                          / (an * np.sqrt(2.0 / (REPLICAS - 1))))
+            errs.append({"t": round(rec.t, 4),
+                         "analytic_mean": round(an, 3),
+                         "mean_z": round(z_mean, 3),
+                         "var_z": round(z_var, 3)})
+        worst = max(max(abs(e["mean_z"]), abs(e["var_z"])) for e in errs)
+        print(f"birth_death/{method.value}: worst |z| = {worst:.2f}")
+        assert worst <= 3.0, (
+            f"{method.value} moment error beyond 3 sigma of the "
+            f"analytic value: {errs}")
+        out[method.value] = {**m, "moment_errors": errs}
+    return out
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_PR4.json")
+    fig4 = fig4_section()
+    bd = birth_death_section()
+    doc = {
+        "pr": 4,
+        "generated_by": "benchmarks/stat_smoke.py",
+        "config": {
+            "replicas": REPLICAS, "lanes": N_LANES,
+            "windows": N_WINDOWS, "fig4_t_end": FIG4_T_END,
+            "tau_eps": TAU_EPS,
+            "birth_death": {"lam": BD_LAM, "mu": BD_MU,
+                            "t_end": BD_T_END},
+        },
+        "fig4_lv2": fig4,
+        "birth_death": bd,
+        "invariants": {
+            "tau_leap_steps_ratio_ge_5x": True,
+            "moment_errors_within_3_sigma": True,
+            "tau_leap_records_bitwise_across_paths":
+                "asserted in tests/test_tau_leap.py + tests/test_sharded.py",
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ from repro.api.spec import (
     Ensemble,
     Experiment,
     ExperimentError,
+    Method,
     Partitioning,
     Policy,
     Reduction,
@@ -37,6 +38,7 @@ __all__ = [
     "Ensemble",
     "Experiment",
     "ExperimentError",
+    "Method",
     "Partitioning",
     "Policy",
     "Reduction",

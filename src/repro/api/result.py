@@ -29,6 +29,11 @@ class Telemetry:
     mark (schema iii's memory bound).
     peak_rss_bytes: process high-water RSS where the platform reports
     it (None otherwise).
+    steps_per_window: pool-total solver iterations per window (exact:
+    events fired; tau-leap: accepted leaps + exact-fallback events) —
+    the per-method work metric the tau-leap speedup claim is measured
+    in. leaps_per_window: accepted tau-leaps per window (all zero on
+    Method.EXACT); steps - leaps is the exact-fallback share.
     """
 
     wall_time_s: float
@@ -37,6 +42,8 @@ class Telemetry:
     dispatches: int
     host_syncs: int
     peak_rss_bytes: Optional[int]
+    steps_per_window: tuple = ()
+    leaps_per_window: tuple = ()
 
 
 def _peak_rss_bytes() -> Optional[int]:
@@ -147,7 +154,9 @@ class SimulationResult:
             peak_buffered_bytes=eng.peak_buffered_bytes,
             dispatches=eng.n_dispatches,
             host_syncs=eng.n_host_syncs,
-            peak_rss_bytes=_peak_rss_bytes())
+            peak_rss_bytes=_peak_rss_bytes(),
+            steps_per_window=tuple(eng.window_steps),
+            leaps_per_window=tuple(eng.window_leaps))
 
     def __repr__(self) -> str:
         state = "completed" if self.completed else (

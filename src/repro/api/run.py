@@ -50,7 +50,10 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         use_kernel=experiment.use_kernel,
         host_loop=experiment.host_loop,
         kernel_chunk_steps=experiment.kernel_chunk_steps,
-        kernel_max_chunks=experiment.kernel_max_chunks)
+        kernel_max_chunks=experiment.kernel_max_chunks,
+        method=experiment.method.value,
+        tau_eps=experiment.tau_eps,
+        tau_fallback=experiment.tau_fallback)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
     try:

@@ -24,8 +24,8 @@ from repro.core.reactions import ReactionSystem
 from repro.core.sweep import SweepSpec
 
 __all__ = [
-    "Ensemble", "Experiment", "ExperimentError", "Partitioning",
-    "Policy", "Reduction", "Schedule", "Schema",
+    "Ensemble", "Experiment", "ExperimentError", "Method",
+    "Partitioning", "Policy", "Reduction", "Schedule", "Schema",
 ]
 
 
@@ -68,6 +68,32 @@ class Policy(Enum):
                 return member
         raise ExperimentError(
             f"unknown policy {v!r}; expected one of "
+            f"{[m.value for m in cls]}")
+
+
+class Method(Enum):
+    """The per-lane simulation algorithm (DESIGN.md §3d).
+
+    EXACT is Gillespie's direct SSA — one Resolve/Update per reaction
+    event. TAU_LEAP fires Poisson bundles of events over an adaptive
+    Cao-bounded leap, falling back per lane to exact SSA wherever a
+    leap would cover fewer than `tau_fallback` events — approximate in
+    distribution, exact in reproducibility (same counter-based stream,
+    bitwise identical across fused/kernel/sharded paths and
+    checkpoint/resume)."""
+
+    EXACT = "exact"
+    TAU_LEAP = "tau_leap"
+
+    @classmethod
+    def coerce(cls, v: Union["Method", str]) -> "Method":
+        if isinstance(v, cls):
+            return v
+        for member in cls:
+            if v in (member.value, member.name, member.name.lower()):
+                return member
+        raise ExperimentError(
+            f"unknown method {v!r}; expected one of "
             f"{[m.value for m in cls]}")
 
 
@@ -188,6 +214,11 @@ class Experiment:
     (`Partitioning(n_shards=..., stat_blocks=...)`); records depend on
     `stat_blocks` (the statistics merge tree), never on the physical
     shard count, so pin it when comparing runs across mesh shapes.
+    method: the per-lane algorithm — Method.EXACT (default) or
+    Method.TAU_LEAP (adaptive tau-leaping, §3d); composes with every
+    dispatch path. tau_eps: Cao drift bound (leap sizes scale with it);
+    tau_fallback: minimum expected events per leap before a lane falls
+    back to exact SSA for that step. Neither changes EXACT runs.
     """
 
     model: Union[CWCModel, ReactionSystem]
@@ -203,6 +234,12 @@ class Experiment:
     kernel_max_chunks: int = 64
     host_loop: bool = False
     partitioning: Optional[Partitioning] = None
+    method: Method = Method.EXACT
+    tau_eps: float = 0.03
+    tau_fallback: float = 10.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "method", Method.coerce(self.method))
 
     def validate(self) -> None:
         if not isinstance(self.model, (CWCModel, ReactionSystem)):
@@ -239,6 +276,15 @@ class Experiment:
             raise ExperimentError(
                 f"Experiment.kernel_max_chunks must be >= 1, got "
                 f"{self.kernel_max_chunks}")
+        # method itself needs no check here: __post_init__ coerced it
+        # (or raised ExperimentError) at construction
+        if not self.tau_eps > 0:
+            raise ExperimentError(
+                f"Experiment.tau_eps must be > 0, got {self.tau_eps}")
+        if self.tau_fallback < 0:
+            raise ExperimentError(
+                f"Experiment.tau_fallback must be >= 0, got "
+                f"{self.tau_fallback}")
         if self.partitioning is not None:
             if not isinstance(self.partitioning, Partitioning):
                 raise ExperimentError(

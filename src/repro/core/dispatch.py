@@ -23,6 +23,13 @@ sharded strategy runs it per shard under shard_map (the paper's two
 families — single-simulation speedup × simulation farm — composed),
 and the host loop keeps it per group as the baseline.
 
+The per-lane ALGORITHM is a second, orthogonal seam
+(`SimConfig.method`): the unfused bodies take any
+`step_fn(state, tensors, horizon)` (exact `gillespie.ssa_step` or
+`tau_leap.make_tau_step`), the kernel bodies take the engine-built
+chunk loop (exact or tau — `engine._make_chunk_loop`); every
+strategy × method pairing stays bit-identical per lane.
+
 All paths are bit-identical per lane (counter-based per-lane RNG,
 `core/stream.counter_uniforms`; identical per-lane ops — including
 kernel vs unfused, see DESIGN.md §3c). The sharded path additionally
@@ -133,10 +140,16 @@ def _obs_extractor(obs_idx):
 
 
 def make_window_body(tensors3, n_lanes: int, obs_idx,
-                     max_steps: Optional[int]):
+                     max_steps: Optional[int], step_fn=ssa_step):
     """The shared whole-pool window advance: permutation gather,
-    lax.scan over fixed-size lane slices (each running the masked SSA
-    loop to the horizon), inverse scatter, device-side observables.
+    lax.scan over fixed-size lane slices (each running the masked
+    per-lane step loop to the horizon), inverse scatter, device-side
+    observables.
+
+    `step_fn(state, (idx, coef, delta, rates), horizon) -> state` is
+    the per-lane algorithm — `gillespie.ssa_step` (exact, the default)
+    or `tau_leap.make_tau_step(...)` (Method.TAU_LEAP); the window
+    machinery is method-agnostic.
 
     Used verbatim by BOTH the fused and the sharded strategies (the
     sharded one applies it per shard with shard-local indices), which
@@ -162,7 +175,7 @@ def make_window_body(tensors3, n_lanes: int, obs_idx,
                 return jnp.any((s.t < horizon) & ~s.dead)
 
             def body(s):
-                return ssa_step(s, tensors, horizon)
+                return step_fn(s, tensors, horizon)
 
             if max_steps is None:
                 out = jax.lax.while_loop(cond, body, sl)
@@ -224,20 +237,19 @@ class HostLoopDispatch(_Dispatch):
         cfg = eng.cfg
 
         if cfg.use_kernel:
-            # fused_window is itself one jitted launch (device-side
-            # chunk while_loop): one dispatch per group, no mid-window
-            # host syncs
-            from repro.kernels.ops import fused_window
+            # the chunk loop is one jitted launch (device-side
+            # while_loop): one dispatch per group, no mid-window host
+            # syncs — exact or tau-leap per the engine's method
+            chunk_loop = eng._make_chunk_loop()
 
             def advance(pool_slice, rates, horizon):
-                return fused_window(
-                    pool_slice, (idx_t, coef_t, delta_t, rates), horizon,
-                    chunk_steps=cfg.kernel_chunk_steps,
-                    max_chunks=cfg.kernel_max_chunks)
+                return chunk_loop(
+                    pool_slice, (idx_t, coef_t, delta_t, rates), horizon)
 
-            return advance
+            return jax.jit(advance, donate_argnums=(0,))
 
         max_steps = cfg.max_steps_per_window
+        step_fn = eng._lane_step
 
         def advance(pool_slice: LaneState, rates, horizon):
             tensors = (idx_t, coef_t, delta_t, rates)
@@ -246,7 +258,7 @@ class HostLoopDispatch(_Dispatch):
                 return jnp.any((s.t < horizon) & ~s.dead)
 
             def body(s):
-                return ssa_step(s, tensors, horizon)
+                return step_fn(s, tensors, horizon)
 
             if max_steps is None:
                 out = jax.lax.while_loop(cond, body, pool_slice)
@@ -263,9 +275,7 @@ class HostLoopDispatch(_Dispatch):
 
     def _gather(self, idx) -> tuple[LaneState, jax.Array]:
         p = self.eng._pool
-        sl = LaneState(x=p.x[idx], t=p.t[idx], key=p.key[idx],
-                       ctr=p.ctr[idx], steps=p.steps[idx],
-                       dead=p.dead[idx])
+        sl = LaneState(*(a[idx] for a in p))
         # index the cached device rates — no per-window host re-upload
         return sl, self.eng._rates_dev[idx]
 
@@ -273,11 +283,7 @@ class HostLoopDispatch(_Dispatch):
         p = self.eng._pool
         # guard duplicate padding indices: later writes win (same data)
         self.eng._pool = LaneState(
-            x=p.x.at[idx].set(sl.x), t=p.t.at[idx].set(sl.t),
-            key=p.key.at[idx].set(sl.key),
-            ctr=p.ctr.at[idx].set(sl.ctr),
-            steps=p.steps.at[idx].set(sl.steps),
-            dead=p.dead.at[idx].set(sl.dead))
+            *(a.at[idx].set(v) for a, v in zip(p, sl)))
 
     def advance(self, horizon) -> WindowResult:
         eng = self.eng
@@ -309,26 +315,27 @@ class HostLoopDispatch(_Dispatch):
                             truncated)
 
 
-def make_kernel_window_body(tensors3, obs_idx, chunk_steps: int,
-                            max_chunks: int):
-    """Whole-pool window advance through the Pallas fused kernel: one
-    device-side chunk while_loop + observable extraction, traceable
+def make_kernel_window_body(tensors3, obs_idx, chunk_loop_fn):
+    """Whole-pool window advance through a Pallas fused kernel chunk
+    loop: one device-side while_loop + observable extraction, traceable
     under jit (fused strategy) and shard_map (sharded strategy).
+
+    `chunk_loop_fn(pool, (idx, coef, delta, rates), horizon) ->
+    FusedWindowOut` is the engine-built loop (`_make_chunk_loop`) —
+    exact SSA (`ops.window_chunk_loop`) or tau-leap
+    (`ops.tau_window_chunk_loop`) with the chunk budget bound in.
 
     No permutation/group scan: the kernel's lane-block grid IS the
     SIMD grouping, and every per-lane op is independent, so scheduler
     groups would not change a single trajectory.
 
     Returns (new_pool, obs, steps_delta, truncated)."""
-    from repro.kernels.ops import window_chunk_loop
-
     idx_t, coef_t, delta_t = tensors3
     extract_obs = _obs_extractor(obs_idx)
 
     def window_body(pool: LaneState, rates, horizon):
-        out = window_chunk_loop(pool, (idx_t, coef_t, delta_t, rates),
-                                horizon, chunk_steps=chunk_steps,
-                                max_chunks=max_chunks)
+        out = chunk_loop_fn(pool, (idx_t, coef_t, delta_t, rates),
+                            horizon)
         new_pool = out.state
         return new_pool, extract_obs(new_pool.x), \
             new_pool.steps - pool.steps, out.truncated
@@ -353,12 +360,13 @@ class FusedDispatch(_Dispatch):
         if self._kernel:
             body = make_kernel_window_body(
                 (idx_t, coef_t, delta_t), engine.obs_idx,
-                cfg.kernel_chunk_steps, cfg.kernel_max_chunks)
+                engine._make_chunk_loop())
         else:
             body = make_window_body((idx_t, coef_t, delta_t),
                                     engine.scheduler.n_lanes,
                                     engine.obs_idx,
-                                    cfg.max_steps_per_window)
+                                    cfg.max_steps_per_window,
+                                    step_fn=engine._lane_step)
         self._step = jax.jit(body, donate_argnums=(0,))
 
     def advance(self, horizon) -> WindowResult:
@@ -429,11 +437,12 @@ class ShardedDispatch(_Dispatch):
             # (single-simulation speedup x simulation farm) composed
             kbody = make_kernel_window_body(
                 (idx_t, coef_t, delta_t), eng.obs_idx,
-                eng.cfg.kernel_chunk_steps, eng.cfg.kernel_max_chunks)
+                eng._make_chunk_loop())
         else:
             body = make_window_body((idx_t, coef_t, delta_t),
                                     eng.scheduler.n_lanes, eng.obs_idx,
-                                    eng.cfg.max_steps_per_window)
+                                    eng.cfg.max_steps_per_window,
+                                    step_fn=eng._lane_step)
 
         def local(pool, rates, perm, gids, horizon):
             if use_kernel:

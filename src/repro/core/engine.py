@@ -54,7 +54,12 @@ from repro.core import reduction
 from repro.core.cwc.compile import compile_model
 from repro.core.cwc.rules import CWCModel
 from repro.core.dispatch import Partitioning, select_dispatch
-from repro.core.gillespie import LaneState, init_lanes, system_tensors
+from repro.core.gillespie import (
+    LaneState,
+    init_lanes,
+    ssa_step,
+    system_tensors,
+)
 from repro.core.reactions import ReactionSystem
 from repro.core.scheduler import Scheduler
 from repro.core.stream import StatsRecord, StatsStream
@@ -70,7 +75,7 @@ class SimConfig:
     policy: str = "on_demand"  # static_rr | on_demand | predictive
     seed: int = 0
     max_steps_per_window: Optional[int] = None
-    use_kernel: bool = False  # fused Pallas SSA window (see kernels/)
+    use_kernel: bool = False  # fused Pallas window (see kernels/)
     host_loop: bool = False  # legacy per-group gather/scatter dispatch
     # kernel-path chunking: each window is ONE dispatch running up to
     # kernel_max_chunks kernel launches of kernel_chunk_steps fused
@@ -78,6 +83,14 @@ class SimConfig:
     # FusedWindowTruncated (never silently truncates)
     kernel_chunk_steps: int = 256
     kernel_max_chunks: int = 64
+    # simulation algorithm: "exact" (Gillespie direct SSA) or
+    # "tau_leap" (adaptive Cao tau selection + Poisson reaction counts,
+    # per-lane exact fallback — core/tau_leap.py). Composes with every
+    # dispatch path (host_loop | fused | sharded, x use_kernel).
+    method: str = "exact"
+    tau_eps: float = 0.03  # Cao bound: max relative propensity drift
+    tau_fallback: float = 10.0  # leap only when tau covers >= this
+    #   many expected SSA events (else per-lane exact SSA step)
 
     def __post_init__(self):
         if self.kernel_chunk_steps < 1:
@@ -88,6 +101,17 @@ class SimConfig:
             raise ValueError(
                 f"SimConfig.kernel_max_chunks must be >= 1, got "
                 f"{self.kernel_max_chunks}")
+        if self.method not in ("exact", "tau_leap"):
+            raise ValueError(
+                f"SimConfig.method must be 'exact' or 'tau_leap', got "
+                f"{self.method!r}")
+        if not self.tau_eps > 0:
+            raise ValueError(
+                f"SimConfig.tau_eps must be > 0, got {self.tau_eps}")
+        if self.tau_fallback < 0:
+            raise ValueError(
+                f"SimConfig.tau_fallback must be >= 0, got "
+                f"{self.tau_fallback}")
 
 
 def resolve_observables(model: CWCModel | ReactionSystem):
@@ -149,6 +173,18 @@ class SimulationEngine:
             n_shards=n_shards)
         self._tensors_base = system_tensors(self.system)
         self._window = 0
+        # per-lane algorithm (the method seam): exact SSA or tau-leap —
+        # the dispatch strategies consume `_lane_step` (unfused bodies)
+        # and `_make_chunk_loop` (Pallas kernel bodies)
+        if cfg.method == "tau_leap":
+            from repro.core import tau_leap
+
+            self._gi_tab = jnp.asarray(tau_leap.gi_tables(self.system))
+            self._rmask = jnp.asarray(tau_leap.reactant_mask(self.system))
+            self._lane_step = tau_leap.make_tau_step(
+                self._gi_tab, self._rmask, cfg.tau_eps, cfg.tau_fallback)
+        else:
+            self._lane_step = ssa_step
         # schemas i/ii always buffer raw per-window samples; schema iii
         # only on explicit opt-in (it forfeits the memory bound)
         self._record_trajectories = record_trajectories
@@ -158,6 +194,13 @@ class SimulationEngine:
         # telemetry: device dispatches and blocking device->host pulls
         self.n_dispatches = 0
         self.n_host_syncs = 0
+        # per-window method telemetry (from the same single record
+        # pull): solver iterations and accepted tau-leaps — their
+        # difference is the exact-fallback share
+        self.window_steps: list[int] = []
+        self.window_leaps: list[int] = []
+        self._cum_steps = 0
+        self._cum_leaps = 0
         # optional grouped (per-sweep-point) reduction
         self._group_ids = None
         self._group_ids_dev = None
@@ -211,6 +254,24 @@ class SimulationEngine:
             self._grouped_fn = grouped_fn
 
     # ------------------------------------------------------------------
+    def _make_chunk_loop(self):
+        """Pallas chunk loop for the kernel paths, method-resolved and
+        chunk-budget-bound: (pool, tensors4, horizon) -> FusedWindowOut.
+        Built lazily so kernel modules only import when use_kernel."""
+        from repro.kernels import ops
+
+        cfg = self.cfg
+        if cfg.method == "tau_leap":
+            return partial(ops.tau_window_chunk_loop,
+                           gi=self._gi_tab, rmask=self._rmask,
+                           eps=cfg.tau_eps, fallback=cfg.tau_fallback,
+                           chunk_steps=cfg.kernel_chunk_steps,
+                           max_chunks=cfg.kernel_max_chunks)
+        return partial(ops.window_chunk_loop,
+                       chunk_steps=cfg.kernel_chunk_steps,
+                       max_chunks=cfg.kernel_max_chunks)
+
+    # ------------------------------------------------------------------
     def _permutation(self) -> jax.Array:
         """Concatenated, padded scheduler groups as a device index map."""
         if self.scheduler.policy != "predictive" and \
@@ -243,25 +304,43 @@ class SimulationEngine:
             self.scheduler.record_costs(
                 np.arange(cfg.n_instances), steps_delta)
         self.wall_times.append(time.perf_counter() - t0)
-        if res.truncated is not None:
-            # kernel path: one end-of-window device-scalar pull AFTER
-            # the timer, so window_wall_times stays an async-dispatch
-            # measure on every path (the pull blocks exactly where the
-            # unfused paths' record-building pulls do); a silently
-            # partial window must never become a record
-            self.n_host_syncs += 1
-            if bool(np.asarray(res.truncated)):
-                from repro.kernels.ops import FusedWindowTruncated
-
-                raise FusedWindowTruncated(
-                    f"window {self._window} (horizon {horizon:g}) "
-                    f"exhausted kernel_max_chunks="
-                    f"{cfg.kernel_max_chunks} x kernel_chunk_steps="
-                    f"{cfg.kernel_chunk_steps} events with live lanes "
-                    "still below the horizon; raise those limits or "
-                    "use more windows")
-
         obs = res.obs
+        stats = (res.stats if res.stats is not None
+                 else reduction.blocked_stats(obs, self._stats_blocks))
+        # ONE combined blocking pull per window, AFTER the timer (so
+        # window_wall_times stays an async-dispatch measure on every
+        # path): record stats + per-method step/leap telemetry + (on
+        # the kernel path) the truncation scalar — the flag used to be
+        # its own pull, costing the kernel path a second host sync per
+        # window (BENCH_PR3 `host_syncs_per_window: 2.0`)
+        pulled = jax.device_get(dict(
+            mean=stats.mean, var=stats.var, ci90=stats.ci90, n=stats.n,
+            steps=self._pool.steps.sum(), leaps=self._pool.leaps.sum(),
+            **({} if res.truncated is None
+               else {"truncated": res.truncated})))
+        self.n_host_syncs += 1
+        if bool(pulled.get("truncated", False)):
+            # a silently partial window must never become a record
+            from repro.kernels.ops import FusedWindowTruncated
+
+            raise FusedWindowTruncated(
+                f"window {self._window} (horizon {horizon:g}) "
+                f"exhausted kernel_max_chunks="
+                f"{cfg.kernel_max_chunks} x kernel_chunk_steps="
+                f"{cfg.kernel_chunk_steps} events with live lanes "
+                "still below the horizon; raise those limits or "
+                "use more windows")
+        # the device sums are int32 and wrap once pool-wide cumulative
+        # counts pass 2^31; tracking residues mod 2^32 and taking
+        # modular deltas keeps every per-window value exact (a single
+        # window's work is far below 2^31)
+        steps_cum = int(pulled["steps"]) & 0xFFFFFFFF
+        leaps_cum = int(pulled["leaps"]) & 0xFFFFFFFF
+        self.window_steps.append(
+            (steps_cum - self._cum_steps) & 0xFFFFFFFF)
+        self.window_leaps.append(
+            (leaps_cum - self._cum_leaps) & 0xFFFFFFFF)
+        self._cum_steps, self._cum_leaps = steps_cum, leaps_cum
         if cfg.schema in ("i", "ii") or self._record_trajectories:
             self._samples.append(np.asarray(obs))
             self.n_host_syncs += 1
@@ -270,8 +349,6 @@ class SimulationEngine:
                 sum(s.nbytes for s in self._samples))
         else:  # schema iii: on-line reduction, window dropped immediately
             self._peak_buffered = max(self._peak_buffered, obs.nbytes)
-        stats = (res.stats if res.stats is not None
-                 else reduction.blocked_stats(obs, self._stats_blocks))
         if self._grouped_fn is not None:
             g = (res.grouped if res.grouped is not None
                  else self._grouped_fn(obs, self._group_ids_dev))
@@ -280,9 +357,8 @@ class SimulationEngine:
             self.n_host_syncs += 1
         rec = StatsRecord(
             t=horizon, window=self._window,
-            mean=np.asarray(stats.mean), var=np.asarray(stats.var),
-            ci90=np.asarray(stats.ci90), n=float(np.asarray(stats.n).max()))
-        self.n_host_syncs += 1
+            mean=pulled["mean"], var=pulled["var"],
+            ci90=pulled["ci90"], n=float(pulled["n"].max()))
         self.stream.emit(rec)
         self._window += 1
         return rec
@@ -327,7 +403,8 @@ class SimulationEngine:
         np.savez(
             path, x=np.asarray(p.x), t=np.asarray(p.t),
             key=np.asarray(p.key), ctr=np.asarray(p.ctr),
-            steps=np.asarray(p.steps),
+            ctr_hi=np.asarray(p.ctr_hi),
+            steps=np.asarray(p.steps), leaps=np.asarray(p.leaps),
             dead=np.asarray(p.dead), window=self._window,
             cost=self.scheduler._cost, rates=self.rates, **extra)
 
@@ -338,15 +415,29 @@ class SimulationEngine:
         # whatever mesh THIS engine runs on
         # pre-counter-RNG checkpoints carry no `ctr`: restart those
         # streams at draw 0 (still exact SSA by memorylessness, but not
-        # bitwise vs an uninterrupted pre-upgrade run)
+        # bitwise vs an uninterrupted pre-upgrade run); pre-widening
+        # checkpoints carry no `ctr_hi`/`leaps`: restore with the high
+        # word (and leap count) 0 — bitwise, since every stream below
+        # 2^32 draws has hi = 0 by construction
         n = z["t"].shape[0]
         ctr = z["ctr"] if "ctr" in z else np.zeros((n,), np.uint32)
+        ctr_hi = z["ctr_hi"] if "ctr_hi" in z else np.zeros((n,), np.uint32)
+        leaps = z["leaps"] if "leaps" in z else np.zeros((n,), np.int32)
         self._pool = self._dispatch.place(LaneState(
             x=jnp.asarray(z["x"]), t=jnp.asarray(z["t"]),
             key=jnp.asarray(z["key"]), ctr=jnp.asarray(ctr),
-            steps=jnp.asarray(z["steps"]),
+            ctr_hi=jnp.asarray(ctr_hi),
+            steps=jnp.asarray(z["steps"]), leaps=jnp.asarray(leaps),
             dead=jnp.asarray(z["dead"])))
         self._window = int(z["window"])
+        # per-window telemetry restarts from the restored cumulative
+        # counts (deltas stay per-window, not since-process-start);
+        # same mod-2^32 residue the wrapping device int32 sums produce
+        self.window_steps, self.window_leaps = [], []
+        self._cum_steps = int(
+            np.asarray(z["steps"], np.int64).sum()) & 0xFFFFFFFF
+        self._cum_leaps = int(
+            np.asarray(leaps, np.int64).sum()) & 0xFFFFFFFF
         self.scheduler._cost = z["cost"]
         if "rates" in z:
             self.rates = np.asarray(z["rates"], np.float32)

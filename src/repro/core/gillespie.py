@@ -22,15 +22,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reactions import ReactionSystem, propensities
-from repro.core.stream import counter_uniforms
+from repro.core.stream import counter_uniforms, ctr_add
 
 
 class LaneState(NamedTuple):
     x: jax.Array  # (B, S) float32 counts
     t: jax.Array  # (B,) float32 sim clocks
     key: jax.Array  # (B, 2) uint32 per-lane stream key (never advances)
-    ctr: jax.Array  # (B,) uint32 event counter — RNG draw index
-    steps: jax.Array  # (B,) int32 events applied (diagnostics / scheduler)
+    ctr: jax.Array  # (B,) uint32 RNG draw counter, low word
+    ctr_hi: jax.Array  # (B,) uint32 RNG draw counter, high word (carry)
+    steps: jax.Array  # (B,) int32 solver iterations that advanced the lane
+    #   (exact SSA: events fired; tau-leap: accepted leaps + fallback
+    #   events — the per-method work metric)
+    leaps: jax.Array  # (B,) int32 accepted tau-leaps (0 on exact paths)
     dead: jax.Array  # (B,) bool — no reaction can ever fire again
 
 
@@ -46,7 +50,9 @@ def init_lanes(system: ReactionSystem, n_lanes: int, seed: int,
         key=jax.vmap(jax.random.key_data)(keys) if keys.dtype != jnp.uint32
         else keys,
         ctr=jnp.zeros((n_lanes,), jnp.uint32),
+        ctr_hi=jnp.zeros((n_lanes,), jnp.uint32),
         steps=jnp.zeros((n_lanes,), jnp.int32),
+        leaps=jnp.zeros((n_lanes,), jnp.int32),
         dead=jnp.zeros((n_lanes,), bool),
     )
 
@@ -61,7 +67,8 @@ def _uniforms(state: LaneState):
     per-lane counter does (by 1 per *active* step, i.e. per consumed
     draw).
     """
-    return counter_uniforms(state.key[:, 0], state.key[:, 1], state.ctr)
+    return counter_uniforms(state.key[:, 0], state.key[:, 1], state.ctr,
+                            state.ctr_hi)
 
 
 def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
@@ -91,12 +98,15 @@ def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
                   jnp.where(active, jnp.minimum(horizon, state.t + tau),
                             state.t))
     t = jnp.where(active & (dead | (t_next > horizon)), horizon, t)
+    lo, hi = ctr_add(state.ctr, state.ctr_hi, active.astype(jnp.uint32))
     return LaneState(
         x=x,
         t=t,
         key=state.key,
-        ctr=state.ctr + active.astype(jnp.uint32),
+        ctr=lo,
+        ctr_hi=hi,
         steps=state.steps + fire.astype(jnp.int32),
+        leaps=state.leaps,
         dead=state.dead | (active & dead),
     )
 

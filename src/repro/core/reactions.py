@@ -130,28 +130,46 @@ def _comb_table(max_coef: int = 8):
     return None  # computed inline; kept for documentation
 
 
-def propensities(x, sys_idx, sys_coef, rates):
-    """Batched mass-action propensities.
-
-    x: (B, S) float32 counts; sys_idx (R, M); sys_coef (R, M);
-    rates (R,) or (B, R) for per-instance parameter sweeps.
-    Returns (B, R) float32.
-    """
-    b, s = x.shape
-    xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)  # pad slot
-    pops = xp[:, sys_idx]  # (B, R, M)
-    coef = sys_coef[None, :, :]  # (1, R, M)
-    # C(n, c) = prod_{i=0..c-1} (n - i) / c!   (c <= MAX_COEF, unrolled;
-    # ReactionSystem.__post_init__ rejects larger coefficients)
-    max_c = MAX_COEF
+def comb_factors(pops, coef, max_c: int = MAX_COEF):
+    """C(pops, coef) unrolled to coef <= max_c: pops (B, R) f32, coef
+    (R,) or (B, R). Coefficients beyond MAX_COEF are rejected at
+    `ReactionSystem` construction, so the unroll bound is safe. Plain
+    jnp ops — shared by the Pallas kernel bodies (kernels/propensity.py
+    re-exports it) and the MXU-form host propensities (core/tau_leap)."""
     ff = jnp.ones_like(pops)
     fact = jnp.ones_like(pops)
     for i in range(max_c):
         active = coef > i
         ff = jnp.where(active, ff * jnp.maximum(pops - i, 0.0), ff)
         fact = jnp.where(active, fact * (i + 1), fact)
-    terms = ff / fact
-    a = jnp.prod(terms, axis=2) * rates  # rates broadcasts (R,) or (B,R)
+    return ff / fact
+
+
+def propensities(x, sys_idx, sys_coef, rates):
+    """Batched mass-action propensities.
+
+    x: (B, S) float32 counts; sys_idx (R, M); sys_coef (R, M);
+    rates (R,) or (B, R) for per-instance parameter sweeps.
+    Returns (B, R) float32.
+
+    The product accumulates in the SAME association order as the Pallas
+    kernel bodies (rates first, then one `comb_factors` factor per
+    reactant slot): the slot factors are bitwise equal on both paths
+    (combination counts of integer populations), so pinning the
+    multiply order is what makes kernel <-> unfused trajectories
+    bitwise identical for EVERY system — the old
+    `prod(factors) * rates` order could differ in the last ulp once a
+    rate times a factor rounded.
+    """
+    b, s = x.shape
+    xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)  # pad slot
+    pops = xp[:, sys_idx]  # (B, R, M)
+    a = jnp.broadcast_to(jnp.asarray(rates, x.dtype),
+                         (b, sys_idx.shape[0]))
+    for m in range(sys_idx.shape[1]):
+        # C(n, c) per slot (c <= MAX_COEF, unrolled; larger rejected at
+        # ReactionSystem construction)
+        a = a * comb_factors(pops[:, :, m], sys_coef[None, :, m])
     return a
 
 

@@ -14,7 +14,10 @@ run and flushes once on close (not per row).
 
 IN: every lane consumes a counter-based random-number stream
 (`counter_uniforms`): draw n of lane (k0, k1) is threefry2x32 applied
-to the counter block (n, 0) under key (k0, k1). Because a draw is a
+to the 64-bit counter block (n_lo, n_hi) under key (k0, k1) — both
+cipher counter words are live, so the per-lane period is 2^64 draws
+(the low word wraps with a carry into the high word, `ctr_add`).
+Because a draw is a
 pure function of (lane key, event index) — no chained key splitting —
 the fused Pallas kernel, the unfused jnp path, resume-from-checkpoint,
 and any chunk size all consume the *identical* stream, and the kernel
@@ -79,22 +82,34 @@ def bits_to_uniform(bits):
     return jnp.maximum(f - 1.0, U_MIN)
 
 
-def counter_uniforms(k0, k1, ctr):
+def counter_uniforms(k0, k1, ctr, ctr_hi=None):
     """(u1, u2) for event index `ctr` of the lane streams keyed (k0, k1).
 
-    k0/k1/ctr: uint32 arrays (any matching shape; typically (B,)).
-    One threefry block yields both uniforms an SSA event consumes
-    (tau and the reaction choice).
+    k0/k1/ctr: uint32 arrays (any matching shape; typically (B,));
+    ctr_hi: optional uint32 high counter word (defaults to 0 — bitwise
+    identical to the historical single-word stream). One threefry block
+    yields both uniforms an SSA event consumes (tau and the reaction
+    choice); tau-leaping consumes several blocks per leap.
 
-    The counter is uint32 with the cipher's second counter word pinned
-    to 0, so a single lane's stream period is 2^32 events — far beyond
-    any window schedule here, but a lane that somehow exceeds it would
-    replay its stream from draw 0. Widening to the spare `c1` word
-    needs a second LaneState/checkpoint counter field; do that before
-    pushing individual lanes past ~4e9 events.
+    The draw index is the 64-bit (ctr_hi, ctr) pair fed to the cipher's
+    two counter words, so a single lane's stream period is 2^64 draws —
+    unreachable. `ctr_add` is the one carry implementation every path
+    (host-traced, Pallas kernel, checkpoint restore) shares, which is
+    what keeps the low-word wrap bitwise reproducible too.
     """
-    b0, b1 = threefry2x32(k0, k1, ctr, jnp.zeros_like(ctr))
+    if ctr_hi is None:
+        ctr_hi = jnp.zeros_like(ctr)
+    b0, b1 = threefry2x32(k0, k1, ctr, ctr_hi)
     return bits_to_uniform(b0), bits_to_uniform(b1)
+
+
+def ctr_add(ctr, ctr_hi, inc):
+    """64-bit counter bump as two uint32 words: (lo, hi) after lo += inc
+    with carry into hi. `inc` is uint32 (< 2^32), so the wrap test is a
+    single unsigned compare. Plain jnp ops — runs unchanged inside a
+    Pallas kernel body and in host-traced code, bitwise identically."""
+    lo = ctr + inc
+    return lo, ctr_hi + (lo < ctr).astype(jnp.uint32)
 
 
 @dataclass

@@ -1,0 +1,321 @@
+"""Adaptive tau-leaping — the second simulation algorithm (DESIGN.md §3d).
+
+Exact SSA pays one Resolve/Update per reaction event, so stiff or
+large-population models (propensity sums in the thousands) burn tens of
+thousands of steps per window. Tau-leaping (Gillespie 2001; the
+adaptive step-size selection of Cao, Gillespie & Petzold 2006) trades
+exactness for order-of-magnitude fewer steps while keeping the ensemble
+statistics: pick a leap `tau` over which no propensity changes by more
+than a fraction `eps`, fire each reaction `K_j ~ Poisson(a_j tau)`
+times at once, and fall back to exact SSA wherever a leap would be no
+cheaper than a few exact steps.
+
+Everything here is written as ONE vectorised step (`tau_step_core`) in
+plain jnp elementwise + `lax.dot` ops over the lane axis — the SAME
+function is traced by the host/fused window bodies and called inside
+the Pallas kernel body (`kernels/ssa_step.tau_window_call`), which is
+what makes fused / unfused / kernel / sharded tau-leap trajectories
+bitwise identical, exactly like the exact-SSA paths.
+
+Randomness comes from the per-lane counter stream
+(`core/stream.counter_uniforms`): a leap consumes `ceil(R/2)` counter
+blocks (one uniform per reaction, inverse-transform Poisson), an exact
+fallback step consumes one block (tau + choice) — a pure function of
+(lane key, 64-bit counter), so any chunking, shard count, or
+checkpoint/resume replays the identical stream.
+
+Per-lane algorithm for one step (all lanes in lock-step, masked):
+
+  1. propensities a_j (MXU one-hot matmuls, identical op sequence to
+     the exact kernel) and the Cao g_i-bounded candidate tau;
+  2. if tau * a0 < `fallback` (a leap would cover fewer than a few SSA
+     steps), do ONE exact SSA step instead (identical math and stream
+     consumption as `gillespie.ssa_step`);
+  3. otherwise draw K_j ~ Poisson(a_j tau) by inverse transform; if
+     any population would go negative, REJECT, halve tau and retry
+     with fresh draws; a second rejection falls back to one exact SSA
+     step (which cannot go negative) — bounded work, guaranteed
+     progress, deterministic stream accounting;
+  4. leap lanes land at min(t + tau, horizon) (tau is pre-clamped to
+     the window horizon, so the frozen state is the window sample);
+     exact-fallback lanes keep `ssa_step`'s freeze-at-horizon
+     semantics.
+
+`steps` counts solver iterations that advanced a lane (leaps + fired
+fallback events) — the work metric the engine's per-window telemetry
+reports against exact SSA; `leaps` counts accepted leaps only, so
+`steps - leaps` is the exact-fallback share.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gillespie import LaneState
+from repro.core.reactions import MAX_COEF, ReactionSystem, comb_factors
+from repro.core.stream import counter_uniforms, ctr_add
+
+#: default fraction by which a leap may change any propensity (Cao'06)
+DEFAULT_EPS = 0.03
+#: leap only when tau covers at least this many expected SSA events
+DEFAULT_FALLBACK = 10.0
+#: cap on any single Poisson mean a_j*tau, so the inverse-transform
+#: unroll below never truncates: P(X > POISSON_KMAX | lam <= LAM_MAX)
+#: < 1e-18 — beyond f32 resolution
+LAM_MAX = 16.0
+POISSON_KMAX = 64
+
+
+# ------------------------------------------------------------ host prep
+def gi_tables(system: ReactionSystem) -> np.ndarray:
+    """(MAX_COEF, S) float32 coefficient table for the Cao g_i bound.
+
+    g_i(x) = T[0,i] + sum_{k>=1} T[k,i] / max(x_i - k, 1), from the
+    highest-order reaction (HOR) consuming species i: for an order-o
+    HOR taking c copies of i,
+
+        g = o + (o/c) * sum_{k=1}^{c-1} k / (x - k)
+
+    which reproduces the standard cases (o=1: 1; o=2,c=2: 2 + 1/(x-1);
+    o=3,c=3: 3 + 1/(x-1) + 2/(x-2); o=3,c=2: (3/2)(2 + 1/(x-1))).
+    Ties on o prefer the larger c (the more conservative bound).
+    Species never consumed get g = 1 (masked out of the tau min by
+    `reactant_mask` anyway)."""
+    s = system.n_species
+    tab = np.zeros((MAX_COEF, s), np.float32)
+    tab[0] = 1.0
+    best = np.zeros((2, s), np.int64)  # (o, c) of the HOR per species
+    for j in range(system.n_reactions):
+        order = int(system.reactant_coef[j].sum())
+        for i, c in zip(system.reactant_idx[j], system.reactant_coef[j]):
+            if c <= 0 or i >= s:
+                continue
+            o_old, c_old = best[0, i], best[1, i]
+            if (order, c) > (o_old, c_old):
+                best[0, i], best[1, i] = order, c
+    for i in range(s):
+        o, c = int(best[0, i]), int(best[1, i])
+        if o == 0:
+            continue
+        tab[0, i] = float(o)
+        for k in range(1, c):
+            tab[k, i] = o / c * k
+    return tab
+
+
+def reactant_mask(system: ReactionSystem) -> np.ndarray:
+    """(S,) float32: 1 where the species is consumed by some reaction —
+    only those populations bound the Cao tau."""
+    s = system.n_species
+    mask = np.zeros((s,), np.float32)
+    for j in range(system.n_reactions):
+        for i, c in zip(system.reactant_idx[j], system.reactant_coef[j]):
+            if c > 0 and i < s:
+                mask[i] = 1.0
+    return mask
+
+
+def onehot_tensors(idx, coef_rm, n_species: int):
+    """(e (M, S+pad stripped, R), coef_k (M, R)) in MXU one-hot form,
+    built from the gather-form (idx, coef) tensors at trace time (so it
+    compiles away). Shared by the kernel chunk loops (kernels/ops.py)
+    and the host-traced tau-leap step."""
+    r, m = idx.shape[0], idx.shape[1]
+    s = n_species
+    e = jnp.zeros((m, s + 1, r), jnp.float32).at[
+        jnp.arange(m)[:, None], idx.T, jnp.arange(r)[None, :]].set(
+        (coef_rm.T > 0).astype(jnp.float32))[:, :s, :]
+    return e, jnp.asarray(coef_rm.T, jnp.float32)
+
+
+# ------------------------------------------------------- step primitives
+def poisson_from_uniform(u, lam, kmax: int = POISSON_KMAX):
+    """Inverse-transform Poisson: smallest k with CDF(k) >= u, as f32.
+
+    Exactly ONE uniform per variate (fixed stream consumption), a
+    fori_loop of `kmax` pmf recurrence terms (VREG-only ops — runs
+    unchanged inside the Pallas kernel body). `lam` must be <= LAM_MAX
+    (callers clamp tau), so the truncation tail is ~0."""
+    pmf = jnp.exp(-lam)
+    cdf = pmf
+    k = (cdf < u).astype(jnp.float32)
+
+    def body(i, carry):
+        pmf, cdf, k = carry
+        pmf = pmf * (lam / i)
+        cdf = cdf + pmf
+        return pmf, cdf, k + (cdf < u).astype(jnp.float32)
+
+    _, _, k = jax.lax.fori_loop(1, kmax, body, (pmf, cdf, k))
+    return k
+
+
+def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
+                  e, coef, delta, rates, gi, rmask, horizon, *,
+                  eps: float, fallback: float,
+                  lam_max: float = LAM_MAX, kmax: int = POISSON_KMAX):
+    """One vectorised tau-leap-or-fallback step over the lane axis.
+
+    x (B,S) f32; t (B,) f32; dead (B,) bool; k0/k1/ctr/ctr_hi (B,) u32;
+    steps/leaps (B,) i32; e (M,S,R) f32 one-hots; coef (M,R) f32;
+    delta (R,S) f32; rates (B,R) or (R,) f32; gi (MAX_COEF,S) f32
+    (`gi_tables`); rmask (S,) f32 (`reactant_mask`); horizon scalar.
+
+    Returns (x, t, dead, ctr, ctr_hi, steps, leaps). Pure jnp — traced
+    by host jit AND the Pallas kernel body, bitwise identically.
+    """
+    b, s = x.shape
+    r = delta.shape[0]
+    n_pairs = (r + 1) // 2  # counter blocks per leap attempt
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, r))
+
+    active = (t < horizon) & ~dead
+    # --- Match (identical op sequence to the exact kernel) ---
+    a = rates
+    for m in range(e.shape[0]):
+        pops = jax.lax.dot(x, e[m], preferred_element_type=jnp.float32)
+        a = a * comb_factors(pops, coef[m][None, :])
+    a0 = a.sum(axis=1)
+    now_dead = a0 <= 0.0
+    alive = active & ~now_dead
+
+    # --- Cao tau candidate: bound the relative propensity drift ---
+    mu = jax.lax.dot(a, delta, preferred_element_type=jnp.float32)
+    sig2 = jax.lax.dot(a, delta * delta,
+                       preferred_element_type=jnp.float32)
+    g = jnp.broadcast_to(gi[0][None, :], x.shape)
+    for k in range(1, gi.shape[0]):
+        g = g + gi[k][None, :] / jnp.maximum(x - k, 1.0)
+    bnd = jnp.maximum(eps * x / g, 1.0)
+    consuming = rmask[None, :] > 0.0
+    r1 = jnp.where(consuming & (jnp.abs(mu) > 0.0),
+                   bnd / jnp.maximum(jnp.abs(mu), 1e-30), jnp.inf)
+    r2 = jnp.where(consuming & (sig2 > 0.0),
+                   (bnd * bnd) / jnp.maximum(sig2, 1e-30), jnp.inf)
+    tau_c = jnp.minimum(r1, r2).min(axis=1)  # (B,)
+
+    # clamp the leap to the window horizon and the Poisson-unroll
+    # bound; per-lane method choice on the CLAMPED tau (always finite
+    # for live lanes — tau_c is inf when no consumed species bounds the
+    # drift, and an unclamped gate would then leap past any
+    # `fallback`, breaking the fallback=inf == exact-SSA degeneration)
+    a_max = a.max(axis=1)
+    tau_l = jnp.minimum(jnp.minimum(tau_c, horizon - t),
+                        lam_max / jnp.maximum(a_max, 1e-30))
+    do_leap = alive & (tau_l * a0 >= fallback)
+    tau_h = 0.5 * tau_l
+
+    def slab(off):
+        """R uniforms per lane from the n_pairs counter blocks at
+        ctr + off (off: uint32 scalar or (B,) array)."""
+        us = []
+        for p in range(n_pairs):
+            lo, hi = ctr_add(ctr, ctr_hi, jnp.uint32(p) + off)
+            u1, u2 = counter_uniforms(k0, k1, lo, hi)
+            us.extend([u1, u2])
+        return jnp.stack(us[:r], axis=-1)  # (B, R)
+
+    # --- leap attempt 1, then a halved-tau retry on rejection ---
+    kc1 = poisson_from_uniform(slab(jnp.uint32(0)), a * tau_l[:, None],
+                               kmax)
+    dx1 = jax.lax.dot(kc1, delta, preferred_element_type=jnp.float32)
+    ok1 = ((x + dx1) >= 0.0).all(axis=1)
+    kc2 = poisson_from_uniform(slab(jnp.uint32(n_pairs)),
+                               a * tau_h[:, None], kmax)
+    dx2 = jax.lax.dot(kc2, delta, preferred_element_type=jnp.float32)
+    ok2 = ((x + dx2) >= 0.0).all(axis=1)
+    leap1 = do_leap & ok1
+    leap2 = do_leap & ~ok1 & ok2
+    leaped = leap1 | leap2
+
+    # --- exact SSA sub-step: non-leaping lanes, double-rejects, and
+    # (for stream parity with ssa_step) lanes that just went dead ---
+    exact_lane = active & ~leaped
+    e_off = jnp.where(do_leap & ~leaped,
+                      jnp.uint32(2 * n_pairs), jnp.uint32(0))
+    lo_e, hi_e = ctr_add(ctr, ctr_hi, e_off)
+    u1, u2 = counter_uniforms(k0, k1, lo_e, hi_e)
+    tau_e = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
+    t_next = t + tau_e
+    fire = exact_lane & ~now_dead & (t_next <= horizon)
+    cum = jnp.cumsum(a, axis=1)
+    ge = cum >= (u2 * a0)[:, None]
+    first = ge & ~jnp.concatenate(
+        [jnp.zeros_like(ge[:, :1]), ge[:, :-1]], axis=1)
+    onehot = jnp.where(fire[:, None], first.astype(jnp.float32), 0.0)
+    dx_e = jax.lax.dot(onehot, delta, preferred_element_type=jnp.float32)
+
+    # --- apply ---
+    dx = jnp.where(leap1[:, None], dx1,
+                   jnp.where(leap2[:, None], dx2, dx_e))
+    x_new = x + dx
+    t_new = jnp.where(leap1, jnp.minimum(t + tau_l, horizon),
+                      jnp.where(leap2, jnp.minimum(t + tau_h, horizon),
+                                jnp.where(fire, t_next,
+                                          jnp.where(exact_lane, horizon,
+                                                    t))))
+    dead_new = dead | (active & now_dead)
+    # deterministic stream accounting: ok1 leap = n_pairs blocks,
+    # retried leap = 2*n_pairs, exact sub-step = +1, idle = 0
+    consumed = (jnp.where(do_leap,
+                          jnp.where(ok1, jnp.uint32(n_pairs),
+                                    jnp.uint32(2 * n_pairs)),
+                          jnp.uint32(0))
+                + exact_lane.astype(jnp.uint32))
+    lo_n, hi_n = ctr_add(ctr, ctr_hi, consumed)
+    steps_new = steps + (leaped | fire).astype(jnp.int32)
+    leaps_new = leaps + leaped.astype(jnp.int32)
+    return x_new, t_new, dead_new, lo_n, hi_n, steps_new, leaps_new
+
+
+# --------------------------------------------------------- host wrapper
+def make_tau_step(gi, rmask, eps: float, fallback: float):
+    """`ssa_step`-shaped per-lane step for the dispatch seam: returns
+    step(state: LaneState, system_tensors, horizon) -> LaneState, where
+    system_tensors is the gather-form (idx, coef, delta, rates) tuple —
+    converted to the kernel's one-hot form at trace time so the host
+    paths run the exact op sequence the Pallas body runs."""
+    gi = jnp.asarray(gi, jnp.float32)
+    rmask = jnp.asarray(rmask, jnp.float32)
+
+    def tau_step(state: LaneState, system_tensors, horizon) -> LaneState:
+        idx, coef_rm, delta_f, rates = system_tensors
+        e, coef_k = onehot_tensors(idx, coef_rm, state.x.shape[1])
+        x, t, dead, lo, hi, steps, leaps = tau_step_core(
+            state.x, state.t, state.dead,
+            state.key[:, 0], state.key[:, 1], state.ctr, state.ctr_hi,
+            state.steps, state.leaps,
+            e, coef_k, jnp.asarray(delta_f, jnp.float32),
+            jnp.asarray(rates, jnp.float32), gi, rmask,
+            jnp.asarray(horizon, jnp.float32),
+            eps=eps, fallback=fallback)
+        return LaneState(x=x, t=t, key=state.key, ctr=lo, ctr_hi=hi,
+                         steps=steps, leaps=leaps, dead=dead)
+
+    return tau_step
+
+
+def advance_to(state: LaneState, system, horizon, gi=None, rmask=None,
+               eps: float = DEFAULT_EPS, fallback: float = DEFAULT_FALLBACK
+               ) -> LaneState:
+    """Standalone tau-leap window advance (tests / notebooks — the
+    engine goes through the dispatch seam instead)."""
+    from repro.core.gillespie import system_tensors
+
+    tensors = system_tensors(system)
+    step = make_tau_step(gi_tables(system) if gi is None else gi,
+                         reactant_mask(system) if rmask is None else rmask,
+                         eps, fallback)
+    horizon = jnp.asarray(horizon, jnp.float32)
+
+    def cond(s):
+        return jnp.any((s.t < horizon) & ~s.dead)
+
+    out = jax.lax.while_loop(cond, partial(step, system_tensors=tensors,
+                                           horizon=horizon), state)
+    t = jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t)
+    return out._replace(t=t)

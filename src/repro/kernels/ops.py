@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.gillespie import LaneState
 from repro.core.reactions import ReactionSystem
+from repro.core.tau_leap import onehot_tensors
 from repro.kernels.propensity import propensity_call, reactant_onehots
 from repro.kernels.ssa_step import ssa_window_call
 
@@ -88,39 +89,79 @@ def window_chunk_loop(pool: LaneState, tensors, horizon,
     converted to kernel form here (traced, so it compiles away).
     """
     idx, coef_rm, delta_f, rates = tensors
-    s = pool.x.shape[1]
-    r = delta_f.shape[0]
     # build one-hots from (idx, coef) — same info, MXU layout
-    m = idx.shape[1]
-    e = jnp.zeros((m, s + 1, r), jnp.float32).at[
-        jnp.arange(m)[:, None], idx.T, jnp.arange(r)[None, :]].set(
-        (coef_rm.T > 0).astype(jnp.float32))[:, :s, :]
-    coef_k = jnp.asarray(coef_rm.T, jnp.float32)
+    e, coef_k = onehot_tensors(idx, coef_rm, pool.x.shape[1])
     interp = (not ON_TPU) if interpret is None else interpret
-    horizon = jnp.asarray(horizon, jnp.float32)
     key = pool.key
+
+    def chunk(x, t, dead, ctr, ctr_hi, horizon):
+        x, t, dead, steps_d, ctr, ctr_hi = ssa_window_call(
+            x, t, dead, key, ctr, ctr_hi, e, coef_k, delta_f, rates,
+            horizon, n_steps=chunk_steps, interpret=interp)
+        return x, t, dead, steps_d, jnp.zeros_like(steps_d), ctr, ctr_hi
+
+    return _chunk_while(pool, horizon, chunk, max_chunks)
+
+
+def tau_window_chunk_loop(pool: LaneState, tensors, horizon, gi, rmask,
+                          eps: float, fallback: float,
+                          chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                          interpret: bool | None = None,
+                          max_chunks: int = DEFAULT_MAX_CHUNKS
+                          ) -> FusedWindowOut:
+    """`window_chunk_loop`, but each chunk is the fused tau-leap kernel
+    (`tau_window_call`) — up to chunk_steps leap-or-fallback iterations
+    per launch, the whole window still ONE device dispatch. gi/rmask:
+    device tensors from `core.tau_leap.gi_tables`/`reactant_mask`.
+    Same chunk budget + truncation flag semantics as the exact loop."""
+    from repro.kernels.ssa_step import tau_window_call
+
+    idx, coef_rm, delta_f, rates = tensors
+    e, coef_k = onehot_tensors(idx, coef_rm, pool.x.shape[1])
+    interp = (not ON_TPU) if interpret is None else interpret
+    key = pool.key
+
+    def chunk(x, t, dead, ctr, ctr_hi, horizon):
+        return tau_window_call(
+            x, t, dead, key, ctr, ctr_hi, e, coef_k, delta_f, rates,
+            gi, rmask, horizon, n_steps=chunk_steps, eps=eps,
+            fallback=fallback, interpret=interp)
+
+    return _chunk_while(pool, horizon, chunk, max_chunks)
+
+
+def _chunk_while(pool: LaneState, horizon, chunk, max_chunks: int
+                 ) -> FusedWindowOut:
+    """Shared device-side chunk loop: run `chunk` kernel launches
+    back-to-back in a `lax.while_loop` until every lane crosses the
+    horizon or the budget runs out. `chunk(x, t, dead, ctr, ctr_hi,
+    horizon) -> (x, t, dead, steps_delta, leaps_delta, ctr, ctr_hi)`
+    is the per-method fused kernel call (exact or tau-leap — the one
+    place their chunk-budget/truncation semantics are defined)."""
+    horizon = jnp.asarray(horizon, jnp.float32)
 
     def live(t, dead):
         return (t < horizon) & (dead == 0)
 
     def cond(carry):
-        x, t, dead, ctr, steps, n = carry
+        x, t, dead, ctr, ctr_hi, steps, leaps, n = carry
         return (n < max_chunks) & jnp.any(live(t, dead))
 
     def body(carry):
-        x, t, dead, ctr, steps, n = carry
-        x, t, dead, steps_d, ctr = ssa_window_call(
-            x, t, dead, key, ctr, e, coef_k, delta_f, rates, horizon,
-            n_steps=chunk_steps, interpret=interp)
-        return x, t, dead, ctr, steps + steps_d, n + 1
+        x, t, dead, ctr, ctr_hi, steps, leaps, n = carry
+        x, t, dead, steps_d, leaps_d, ctr, ctr_hi = chunk(
+            x, t, dead, ctr, ctr_hi, horizon)
+        return (x, t, dead, ctr, ctr_hi, steps + steps_d,
+                leaps + leaps_d, n + 1)
 
-    x, t, dead, ctr, steps, n_chunks = jax.lax.while_loop(
+    x, t, dead, ctr, ctr_hi, steps, leaps, n_chunks = jax.lax.while_loop(
         cond, body, (pool.x, pool.t, pool.dead.astype(jnp.int32),
-                     pool.ctr, pool.steps, jnp.int32(0)))
+                     pool.ctr, pool.ctr_hi, pool.steps, pool.leaps,
+                     jnp.int32(0)))
     truncated = jnp.any(live(t, dead))
     t = jnp.where(dead > 0, jnp.maximum(t, horizon), t)
-    state = LaneState(x=x, t=t, key=key, ctr=ctr, steps=steps,
-                      dead=dead > 0)
+    state = LaneState(x=x, t=t, key=pool.key, ctr=ctr, ctr_hi=ctr_hi,
+                      steps=steps, leaps=leaps, dead=dead > 0)
     return FusedWindowOut(state=state, n_chunks=n_chunks,
                           truncated=truncated)
 

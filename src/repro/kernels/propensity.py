@@ -22,10 +22,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.reactions import MAX_COEF, MAX_REACTANTS, ReactionSystem
+from repro.core.reactions import (
+    MAX_COEF,
+    MAX_REACTANTS,
+    ReactionSystem,
+    comb_factors,
+)
 
 LANE_BLK = 256
 R_BLK = 256
+
+# kernel bodies spell it _comb_factors; the implementation lives in
+# core.reactions so kernel-free code (core/tau_leap.py) shares it
+_comb_factors = comb_factors
 
 
 def reactant_onehots(system: ReactionSystem) -> np.ndarray:
@@ -39,19 +48,6 @@ def reactant_onehots(system: ReactionSystem) -> np.ndarray:
             if system.reactant_coef[j, mm] > 0 and idx < s:
                 e[mm, idx, j] = 1.0
     return e
-
-
-def _comb_factors(pops, coef, max_c: int = MAX_COEF):
-    """C(pops, coef) unrolled to coef <= max_c: pops (B, R) f32, coef
-    (R,) or (B, R). Coefficients beyond MAX_COEF are rejected at
-    `ReactionSystem` construction, so the unroll bound is safe."""
-    ff = jnp.ones_like(pops)
-    fact = jnp.ones_like(pops)
-    for i in range(max_c):
-        active = coef > i
-        ff = jnp.where(active, ff * jnp.maximum(pops - i, 0.0), ff)
-        fact = jnp.where(active, fact * (i + 1), fact)
-    return ff / fact
 
 
 def _propensity_kernel(x_ref, e_ref, coef_ref, rates_ref, out_ref):

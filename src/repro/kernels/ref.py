@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.reactions import MAX_REACTANTS, propensities
-from repro.core.stream import counter_uniforms
+from repro.core.stream import counter_uniforms, ctr_add
 
 
 def propensity_ref(x, idx, coef, rates):
@@ -15,11 +15,11 @@ def propensity_ref(x, idx, coef, rates):
     return propensities(x, idx, coef, rates)
 
 
-def ssa_window_ref(x, t, dead, key, ctr, idx, coef, delta, rates, horizon,
-                   n_steps: int):
+def ssa_window_ref(x, t, dead, key, ctr, ctr_hi, idx, coef, delta, rates,
+                   horizon, n_steps: int):
     """Consume the same counter-based (key, ctr) stream as the fused
     kernel — oracle for kernels/ssa_step.py.
-    Returns (x, t, dead, steps, ctr)."""
+    Returns (x, t, dead, steps, ctr, ctr_hi)."""
     b = x.shape[0]
     if rates.ndim == 1:
         rates = jnp.broadcast_to(rates, (b, rates.shape[0]))
@@ -28,12 +28,12 @@ def ssa_window_ref(x, t, dead, key, ctr, idx, coef, delta, rates, horizon,
     k0, k1 = key[:, 0], key[:, 1]
 
     def step(i, carry):
-        x, t, dead, steps, ctr = carry
+        x, t, dead, steps, ctr, ctr_hi = carry
         active = (t < horizon) & ~dead
         a = propensities(x, idx, coef, rates)
         a0 = a.sum(axis=1)
         now_dead = a0 <= 0.0
-        u1, u2 = counter_uniforms(k0, k1, ctr)
+        u1, u2 = counter_uniforms(k0, k1, ctr, ctr_hi)
         tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
         t_next = t + tau
         fire = active & ~now_dead & (t_next <= horizon)
@@ -43,9 +43,9 @@ def ssa_window_ref(x, t, dead, key, ctr, idx, coef, delta, rates, horizon,
         t = jnp.where(fire, t_next, jnp.where(active, horizon, t))
         dead = dead | (active & now_dead)
         steps = steps + fire.astype(jnp.int32)
-        ctr = ctr + active.astype(jnp.uint32)
-        return x, t, dead, steps, ctr
+        ctr, ctr_hi = ctr_add(ctr, ctr_hi, active.astype(jnp.uint32))
+        return x, t, dead, steps, ctr, ctr_hi
 
-    x, t, dead, steps, ctr = jax.lax.fori_loop(
-        0, n_steps, step, (x, t, dead, steps, ctr))
-    return x, t, dead.astype(jnp.int32), steps, ctr
+    x, t, dead, steps, ctr, ctr_hi = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, steps, ctr, ctr_hi))
+    return x, t, dead.astype(jnp.int32), steps, ctr, ctr_hi

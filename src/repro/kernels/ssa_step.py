@@ -35,28 +35,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.reactions import MAX_REACTANTS
-from repro.core.stream import counter_uniforms
+from repro.core.reactions import MAX_COEF, MAX_REACTANTS
+from repro.core.stream import counter_uniforms, ctr_add
+from repro.core.tau_leap import tau_step_core
 from repro.kernels.propensity import _comb_factors
 
 LANE_BLK = 256
 
 
-def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, e_ref,
-                   coef_ref, delta_ref, rates_ref, horizon_ref,
-                   x_out, t_out, dead_out, steps_out, ctr_out,
+def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, ctrhi_ref,
+                   e_ref, coef_ref, delta_ref, rates_ref, horizon_ref,
+                   x_out, t_out, dead_out, steps_out, ctr_out, ctrhi_out,
                    n_steps: int):
     x = x_ref[...].astype(jnp.float32)  # (BL, S)
     t = t_ref[...]  # (BL,)
     dead = dead_ref[...] > 0  # (BL,)
     k0 = key_ref[:, 0]  # (BL,) uint32 — stream key, read once
     k1 = key_ref[:, 1]
-    ctr = ctr_ref[...]  # (BL,) uint32 — event counter, lives in VREGs
+    ctr = ctr_ref[...]  # (BL,) uint32 — draw counter low word, in VREGs
+    ctr_hi = ctrhi_ref[...]  # (BL,) uint32 — high word (carry)
     horizon = horizon_ref[0]
     steps = jnp.zeros_like(t, jnp.float32)
 
     def step(i, carry):
-        x, t, dead, steps, ctr = carry
+        x, t, dead, steps, ctr, ctr_hi = carry
         active = (t < horizon) & ~dead
         # --- Match (MXU) ---
         a = rates_ref[...]
@@ -67,7 +69,7 @@ def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, e_ref,
         a0 = a.sum(axis=1)
         now_dead = a0 <= 0.0
         # --- Resolve (counter-based draw, VREGs only) ---
-        u1, u2 = counter_uniforms(k0, k1, ctr)
+        u1, u2 = counter_uniforms(k0, k1, ctr, ctr_hi)
         tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
         t_next = t + tau
         fire = active & ~now_dead & (t_next <= horizon)
@@ -85,27 +87,28 @@ def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, e_ref,
                       jnp.where(active, horizon, t))
         dead = dead | (active & now_dead)
         steps = steps + fire.astype(jnp.float32)
-        ctr = ctr + active.astype(jnp.uint32)
-        return x, t, dead, steps, ctr
+        ctr, ctr_hi = ctr_add(ctr, ctr_hi, active.astype(jnp.uint32))
+        return x, t, dead, steps, ctr, ctr_hi
 
-    x, t, dead, steps, ctr = jax.lax.fori_loop(
-        0, n_steps, step, (x, t, dead, steps, ctr))
+    x, t, dead, steps, ctr, ctr_hi = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, steps, ctr, ctr_hi))
     x_out[...] = x
     t_out[...] = t
     dead_out[...] = dead.astype(jnp.int32)
     steps_out[...] = steps.astype(jnp.int32)
     ctr_out[...] = ctr
+    ctrhi_out[...] = ctr_hi
 
 
 @partial(jax.jit, static_argnames=("n_steps", "interpret"))
-def ssa_window_call(x, t, dead, key, ctr, e, coef, delta, rates, horizon,
-                    *, n_steps: int, interpret: bool = True):
+def ssa_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
+                    horizon, *, n_steps: int, interpret: bool = True):
     """Run up to n_steps fused SSA events per lane toward `horizon`.
 
     x: (B,S) f32; t: (B,) f32; dead: (B,) int32; key: (B,2) uint32;
-    ctr: (B,) uint32; e: (M,S,R); coef: (M,R) f32; delta: (R,S) f32;
-    rates: (B,R) or (R,).
-    Returns (x, t, dead, steps_taken, ctr).
+    ctr/ctr_hi: (B,) uint32; e: (M,S,R); coef: (M,R) f32;
+    delta: (R,S) f32; rates: (B,R) or (R,).
+    Returns (x, t, dead, steps_taken, ctr, ctr_hi).
     """
     b, s = x.shape
     r = delta.shape[0]
@@ -124,6 +127,7 @@ def ssa_window_call(x, t, dead, key, ctr, e, coef, delta, rates, horizon,
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl, 2), lambda i: (i, 0)),
             pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((MAX_REACTANTS, s, r), lambda i: (0, 0, 0)),
             pl.BlockSpec((MAX_REACTANTS, r), lambda i: (0, 0)),
             pl.BlockSpec((r, s), lambda i: (0, 0)),
@@ -136,6 +140,7 @@ def ssa_window_call(x, t, dead, key, ctr, e, coef, delta, rates, horizon,
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, s), jnp.float32),
@@ -143,6 +148,107 @@ def ssa_window_call(x, t, dead, key, ctr, e, coef, delta, rates, horizon,
             jax.ShapeDtypeStruct((b,), jnp.int32),
             jax.ShapeDtypeStruct((b,), jnp.int32),
             jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
         ],
         interpret=interpret,
-    )(x, t, dead, key, ctr, e, coef, delta, rates, horizon_arr)
+    )(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates, horizon_arr)
+
+
+def _tau_window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref,
+                       ctrhi_ref, e_ref, coef_ref, delta_ref, rates_ref,
+                       gi_ref, rmask_ref, horizon_ref,
+                       x_out, t_out, dead_out, steps_out, leaps_out,
+                       ctr_out, ctrhi_out,
+                       n_steps: int, eps: float, fallback: float):
+    """Fused multi-step tau-leap window: the SAME `tau_step_core` the
+    host paths trace, iterated with the lane state resident in VMEM —
+    propensity/moment/update matmuls on the MXU, Poisson
+    inverse-transform and counter-based draws in VREGs."""
+    x = x_ref[...].astype(jnp.float32)
+    t = t_ref[...]
+    dead = dead_ref[...] > 0
+    k0 = key_ref[:, 0]
+    k1 = key_ref[:, 1]
+    ctr = ctr_ref[...]
+    ctr_hi = ctrhi_ref[...]
+    horizon = horizon_ref[0]
+    steps = jnp.zeros_like(t, jnp.int32)
+    leaps = jnp.zeros_like(t, jnp.int32)
+
+    def step(i, carry):
+        x, t, dead, ctr, ctr_hi, steps, leaps = carry
+        x, t, dead, ctr, ctr_hi, steps, leaps = tau_step_core(
+            x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
+            e_ref[...], coef_ref[...], delta_ref[...], rates_ref[...],
+            gi_ref[...], rmask_ref[...], horizon,
+            eps=eps, fallback=fallback)
+        return x, t, dead, ctr, ctr_hi, steps, leaps
+
+    x, t, dead, ctr, ctr_hi, steps, leaps = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, ctr, ctr_hi, steps, leaps))
+    x_out[...] = x
+    t_out[...] = t
+    dead_out[...] = dead.astype(jnp.int32)
+    steps_out[...] = steps
+    leaps_out[...] = leaps
+    ctr_out[...] = ctr
+    ctrhi_out[...] = ctr_hi
+
+
+@partial(jax.jit, static_argnames=("n_steps", "interpret", "eps",
+                                   "fallback"))
+def tau_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
+                    gi, rmask, horizon, *, n_steps: int, eps: float,
+                    fallback: float, interpret: bool = True):
+    """Run up to n_steps fused tau-leap iterations per lane toward
+    `horizon`. Shapes as `ssa_window_call` plus gi (MAX_COEF,S) and
+    rmask (S,) from `core.tau_leap.gi_tables`/`reactant_mask`.
+    Returns (x, t, dead, steps_delta, leaps_delta, ctr, ctr_hi)."""
+    b, s = x.shape
+    r = delta.shape[0]
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, r))
+    bl = min(LANE_BLK, b)
+    grid = (pl.cdiv(b, bl),)
+    horizon_arr = jnp.asarray([horizon], jnp.float32)
+    kernel = partial(_tau_window_kernel, n_steps=n_steps, eps=eps,
+                     fallback=fallback)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((MAX_REACTANTS, s, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((MAX_REACTANTS, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, s), lambda i: (0, 0)),
+            pl.BlockSpec((bl, r), lambda i: (i, 0)),
+            pl.BlockSpec((MAX_COEF, s), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates, gi, rmask,
+      horizon_arr)

@@ -17,6 +17,7 @@ from repro.api import (
     CsvSink,
     Ensemble,
     Experiment,
+    Method,
     Partitioning,
     Policy,
     Reduction,
@@ -57,6 +58,18 @@ def main() -> None:
     ap.add_argument("--policy", choices=["static_rr", "on_demand",
                                          "predictive"], default="on_demand")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--method", choices=["exact", "tau_leap"],
+                    default="exact",
+                    help="per-lane algorithm: exact Gillespie SSA or "
+                    "adaptive tau-leaping (Poisson bundles of events "
+                    "per Cao-bounded leap, per-lane exact fallback)")
+    ap.add_argument("--tau-eps", type=float, default=0.03,
+                    help="tau-leap Cao drift bound (bigger = longer "
+                    "leaps, coarser approximation)")
+    ap.add_argument("--tau-fallback", type=float, default=10.0,
+                    help="leap only when it covers at least this many "
+                    "expected SSA events; below it the lane takes an "
+                    "exact step")
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas SSA kernel")
     ap.add_argument("--host-loop", action="store_true",
@@ -87,6 +100,9 @@ def main() -> None:
                    else Reduction.ENSEMBLE),
         seed=args.seed,
         n_lanes=args.lanes,
+        method=Method.coerce(args.method),
+        tau_eps=args.tau_eps,
+        tau_fallback=args.tau_fallback,
         use_kernel=args.kernel,
         host_loop=args.host_loop,
         partitioning=(Partitioning(n_shards=args.devices,
@@ -107,11 +123,17 @@ def main() -> None:
 
     tele = result.telemetry
     print(f"model={model.name} schema={args.schema} "
+          f"method={args.method} "
           f"instances={experiment.ensemble.n_instances} "
           f"windows={len(result.records)} "
           f"wall={tele.wall_time_s:.2f}s "
           f"dispatches={tele.dispatches} host_syncs={tele.host_syncs} "
           f"peak_buffered={tele.peak_buffered_bytes}B")
+    if args.method == "tau_leap":
+        steps = sum(tele.steps_per_window)
+        leaps = sum(tele.leaps_per_window)
+        print(f"  tau-leap: {steps} solver steps = {leaps} leaps + "
+              f"{steps - leaps} exact-fallback events")
     last = result.records[-1]
     for name, m, v, ci in zip(result.obs_names, last.mean, last.var,
                               last.ci90):

@@ -98,5 +98,62 @@ def test_rng_stream_is_counter_based_and_key_stable():
     st = _run(sys, 8, 3.0, seed=1)
     assert (np.asarray(st.key) == np.asarray(st0.key)).all()
     assert st.ctr.dtype == jnp.uint32
+    assert st.ctr_hi.dtype == jnp.uint32
     assert (np.asarray(st.ctr) >= np.asarray(st.steps)).all()
     assert int(st.ctr.max()) > 0
+    # far from the 2^32 boundary the high word stays zero — which is
+    # also why pre-widening checkpoints restore bitwise with hi=0
+    assert (np.asarray(st.ctr_hi) == 0).all()
+
+
+def _near_wrap_pool(sys, n, seed, back: int = 2):
+    """Lanes whose low counter word sits `back` draws below the 2^32
+    boundary — the forced-small-boundary harness for wrap tests."""
+    st = init_lanes(sys, n, seed)
+    return st._replace(
+        ctr=jnp.full((n,), np.uint32(2**32 - back), jnp.uint32))
+
+
+def test_counter_wrap_carries_into_high_word_and_does_not_replay():
+    """ROADMAP RNG item, resolved: crossing the uint32 boundary must
+    carry into the spare threefry `c1` word instead of replaying the
+    stream from draw 0. Regression at a forced boundary: lanes start 2
+    draws below the wrap, consume ~tens of draws, and must (a) carry,
+    (b) KEEP the wrapped low word counting, and (c) draw different
+    uniforms than the draw-0 stream at the same low word."""
+    from repro.core.stream import counter_uniforms
+
+    sys = make_system(["A"], [({}, {"A": 1}, 1000.0)], {"A": 0})
+    tens = system_tensors(sys)
+    st = _near_wrap_pool(sys, 4, seed=2)
+    out = jax.jit(lambda s: advance_to(s, tens, 0.05))(st)
+    assert int(out.steps.min()) > 4  # every lane crossed the boundary
+    assert (np.asarray(out.ctr_hi) == 1).all()
+    assert (np.asarray(out.ctr) < 2**31).all()  # wrapped, kept counting
+    # wrapped draws differ from the pre-wrap epoch's draws at the same
+    # low word — the period is 2^64, not 2^32
+    k0, k1 = out.key[:, 0], out.key[:, 1]
+    lo = jnp.zeros_like(out.ctr)
+    u_hi1 = counter_uniforms(k0, k1, lo, jnp.ones_like(lo))
+    u_hi0 = counter_uniforms(k0, k1, lo, jnp.zeros_like(lo))
+    assert (np.asarray(u_hi1[0]) != np.asarray(u_hi0[0])).all()
+
+
+def test_counter_wrap_bitwise_across_kernel_and_unfused():
+    """The carry is computed by the shared `stream.ctr_add` in both the
+    host-traced step and the Pallas kernel body — a window that crosses
+    the boundary stays bitwise identical across paths."""
+    from repro.kernels.ops import fused_window
+
+    sys = make_system(["A"], [({}, {"A": 1}, 1000.0), ({"A": 1}, {}, 1.0)],
+                      {"A": 5})
+    tens = system_tensors(sys)
+    a = jax.jit(lambda s: advance_to(s, tens, 0.05))(
+        _near_wrap_pool(sys, 8, seed=3))
+    out = fused_window(_near_wrap_pool(sys, 8, seed=3), tens, 0.05,
+                       chunk_steps=7)
+    b = out.state
+    assert not bool(out.truncated)
+    assert (np.asarray(a.ctr_hi) == 1).all()
+    for fa, fb in zip(a, b):
+        assert (np.asarray(fa) == np.asarray(fb)).all()

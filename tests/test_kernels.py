@@ -69,10 +69,11 @@ def test_fused_window_bitwise_vs_ref(name, batch, n_steps, rng):
     rates = jnp.asarray(sys.rates)
     horizon = 0.1
     out_k = ssa_window_call(pool.x, pool.t, pool.dead.astype(jnp.int32),
-                            pool.key, pool.ctr, e, coef, delta, rates,
-                            horizon, n_steps=n_steps, interpret=True)
+                            pool.key, pool.ctr, pool.ctr_hi, e, coef,
+                            delta, rates, horizon, n_steps=n_steps,
+                            interpret=True)
     out_r = ssa_window_ref(pool.x, pool.t, pool.dead.astype(jnp.int32),
-                           pool.key, pool.ctr,
+                           pool.key, pool.ctr, pool.ctr_hi,
                            jnp.asarray(sys.reactant_idx),
                            jnp.asarray(sys.reactant_coef), delta, rates,
                            horizon, n_steps=n_steps)
@@ -81,6 +82,7 @@ def test_fused_window_bitwise_vs_ref(name, batch, n_steps, rng):
                                rtol=1e-5, atol=1e-6)
     assert (out_k[3] == out_r[3]).all(), "step counts mismatch"
     assert (out_k[4] == out_r[4]).all(), "draw counters mismatch"
+    assert (out_k[5] == out_r[5]).all(), "high counter words mismatch"
 
 
 @pytest.mark.parametrize("chunk_steps,max_chunks",

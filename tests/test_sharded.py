@@ -32,14 +32,26 @@ def make_exp(n_shards, stat_blocks=8, policy="on_demand", **kw):
 """
 
 
-def _run(snippet: str, devices: int = 8) -> str:
+def _run(body: str, devices: int = 8) -> str:
+    """Run `_EXP` + the dedented test body in a forced-device child.
+
+    The body MUST be dedented BEFORE prepending `_EXP`: `_EXP` sits at
+    the margin, so dedenting the concatenation is a no-op — and the
+    still-indented body then parses as unreachable code inside
+    `make_exp`'s def. That exact bug made every test here vacuously
+    pass (subprocesses finishing in ~1s having executed nothing); the
+    sentinel asserts the body really ran to its last line.
+    """
+    snippet = _EXP + textwrap.dedent(body) + '\nprint("SNIPPET-RAN")\n'
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+    out = subprocess.run([sys.executable, "-c", snippet],
                          capture_output=True, text=True, env=env,
                          timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
+    assert "SNIPPET-RAN" in out.stdout, (
+        "test body did not execute — harness regression")
     return out.stdout
 
 
@@ -48,7 +60,7 @@ def test_sharded_bit_identical_to_fused_single_device():
     reproduces the single-device fused path bit-identically — records,
     grouped per-point stats, and trajectories — with one device
     dispatch per window (O(1) in shard count)."""
-    _run(_EXP + """
+    _run("""
     base = simulate(make_exp(n_shards=1))
     for K in (2, 4, 8):
         shard = simulate(make_exp(n_shards=K))
@@ -69,7 +81,7 @@ def test_sharded_records_invariant_to_shard_count_without_pinning():
     """stat_blocks defaults to n_shards, so two different shard counts
     only compare bitwise when stat_blocks is pinned — which the default
     does NOT do across meshes. Pinning blocks=4 must equalise K=2/K=4."""
-    _run(_EXP + """
+    _run("""
     a = simulate(make_exp(n_shards=2, stat_blocks=4))
     b = simulate(make_exp(n_shards=4, stat_blocks=4))
     for ra, rb in zip(a.records, b.records):
@@ -81,7 +93,7 @@ def test_predictive_groups_stay_within_shards():
     """The predictive policy must form cost-homogeneous groups WITHIN
     shard blocks (no cross-shard gathers), and still reproduce the
     on_demand results bitwise (keyed per-lane RNG)."""
-    _run(_EXP + """
+    _run("""
     from repro.api.run import build_engine
     pred = make_exp(n_shards=4, policy="predictive")
     eng = build_engine(pred)
@@ -102,7 +114,7 @@ def test_predictive_groups_stay_within_shards():
 def test_sharded_checkpoint_is_mesh_shape_agnostic_artifact():
     """checkpoint() gathers to plain global npz arrays — restorable by
     any mesh — and a same-process 8-shard resume is bit-identical."""
-    _run(_EXP + """
+    _run("""
     import tempfile, os
     ck = os.path.join(tempfile.mkdtemp(), "ck")
     clean = simulate(make_exp(n_shards=8))
@@ -120,7 +132,7 @@ def test_sharded_checkpoint_is_mesh_shape_agnostic_artifact():
 def test_sharded_step_rebuilds_when_group_count_changes():
     """Re-calling set_groups with a different group count must rebuild
     the cached sharded step (its jit closes over n_groups)."""
-    _run(_EXP + """
+    _run("""
     from repro.api.run import build_engine
     eng = build_engine(make_exp(n_shards=4))
     eng.run_window()
@@ -134,7 +146,7 @@ def test_sharded_step_rebuilds_when_group_count_changes():
 def test_sharded_schema_ii_buffers_global_trajectories():
     """Schema ii on the sharded path gathers per-window samples for
     post-hoc use exactly like the fused path."""
-    _run(_EXP + """
+    _run("""
     a = simulate(make_exp(n_shards=8).with_(
         schedule=Schedule(t_end=1.0, n_windows=3, schema="ii")))
     b = simulate(make_exp(n_shards=1).with_(
@@ -151,7 +163,7 @@ def test_kernel_composes_with_sharded_dispatch():
     windows reproduce the single-device kernel run — and the UNFUSED
     jnp path — bit-identically for 1/2/4/8 shards (counter-based
     per-lane RNG; stat_blocks pinned), one device dispatch per window."""
-    _run(_EXP + """
+    _run("""
     base = simulate(make_exp(n_shards=1, use_kernel=True))
     plain = simulate(make_exp(n_shards=1))
     assert (np.stack([r.mean for r in base.records])
@@ -172,10 +184,44 @@ def test_kernel_composes_with_sharded_dispatch():
     """)
 
 
+def test_tau_leap_composes_with_sharded_dispatch():
+    """Method.TAU_LEAP under the sharded strategy: records, grouped
+    per-point stats, and trajectories bit-identical across 1/2/4/8
+    shards AND across the jnp/kernel window bodies (the same
+    `tau_step_core` runs per shard under shard_map), one dispatch per
+    window — the full exact-SSA invariant matrix, on the second
+    algorithm."""
+    _run("""
+    base = simulate(make_exp(n_shards=1, method="tau_leap"))
+    assert sum(base.telemetry.leaps_per_window) > 0  # it actually leaps
+    kern1 = simulate(make_exp(n_shards=1, method="tau_leap",
+                              use_kernel=True))
+    assert (np.stack([r.mean for r in base.records])
+            == np.stack([r.mean for r in kern1.records])).all()
+    assert (base.trajectories() == kern1.trajectories()).all()
+    for K in (2, 4, 8):
+        for kernel in (False, True):
+            shard = simulate(make_exp(n_shards=K, method="tau_leap",
+                                      use_kernel=kernel))
+            for a, b in zip(base.records, shard.records):
+                assert a.t == b.t and a.n == b.n
+                assert (a.mean == b.mean).all()
+                assert (a.var == b.var).all()
+                assert (a.ci90 == b.ci90).all()
+            pb, ps = base.per_point(), shard.per_point()
+            for k in ("n", "mean", "var", "ci90"):
+                assert (pb[k] == ps[k]).all(), (K, kernel, k)
+            assert (base.trajectories() == shard.trajectories()).all()
+            assert shard.telemetry.dispatches == 4  # one per window
+            assert (shard.telemetry.leaps_per_window
+                    == base.telemetry.leaps_per_window)
+    """)
+
+
 def test_kernel_truncation_raises_under_sharded_dispatch():
     """A chunk-budget overrun on ANY shard surfaces (psum'd flag) —
     never a silent partial window."""
-    _run(_EXP + """
+    _run("""
     import warnings
     from repro.core.dispatch import Partitioning
     from repro.core.engine import SimConfig, SimulationEngine

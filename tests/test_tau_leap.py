@@ -1,0 +1,229 @@
+"""Tau-leaping engine path: parity across every dispatch path, exact
+degeneration, invariants, checkpoint/resume, telemetry, validation."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    ExperimentError,
+    Method,
+    Schedule,
+    simulate,
+)
+from repro.core.cwc.models import ecoli_gene_regulation, lotka_volterra
+from repro.core.gillespie import init_lanes
+from repro.core.reactions import make_system
+from repro.core.tau_leap import advance_to as tau_advance_to
+from repro.core.tau_leap import gi_tables, poisson_from_uniform
+
+
+def _exp(model=None, method=Method.TAU_LEAP, replicas=16, windows=3,
+         t_end=0.5, seed=5, **kw):
+    kw.setdefault("record_trajectories", True)
+    return Experiment(
+        model=model if model is not None else lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=replicas),
+        schedule=Schedule(t_end=t_end, n_windows=windows),
+        n_lanes=8, seed=seed, method=method, **kw)
+
+
+# ------------------------------------------------------------- parity
+def test_tau_leap_bitwise_across_all_dispatch_paths():
+    """The signature invariant extends to the second algorithm: fused,
+    host-loop, Pallas-kernel, and host-loop+kernel tau-leap runs are
+    BITWISE identical (same `tau_step_core`, same counter stream)."""
+    base = simulate(_exp())
+    assert sum(base.telemetry.leaps_per_window) > 0, (
+        "config must actually leap for the parity claim to bite")
+    for kw in (dict(use_kernel=True), dict(host_loop=True),
+               dict(host_loop=True, use_kernel=True)):
+        other = simulate(_exp(**kw))
+        assert (other.means() == base.means()).all(), kw
+        assert (other.trajectories() == base.trajectories()).all(), kw
+        for a, b in zip(base.records, other.records):
+            assert (a.var == b.var).all() and (a.ci90 == b.ci90).all()
+
+
+def test_tau_leap_bitwise_invariant_to_lane_grouping():
+    a = simulate(_exp().with_(n_lanes=4))
+    b = simulate(_exp().with_(n_lanes=16))
+    assert (a.trajectories() == b.trajectories()).all()
+
+
+def test_tau_leap_with_unreachable_threshold_is_exact_ssa_bitwise():
+    """tau_fallback=inf forces the per-lane exact fallback on every
+    step — the tau-leap path must then REPRODUCE the exact engine
+    bitwise (same stream consumption, same propensity/update math), so
+    the fallback is provably the exact algorithm, not a lookalike."""
+    # pure birth consumes no species, so the Cao drift bound is vacuous
+    # (candidate tau = inf) — the leap gate must use the CLAMPED leap
+    # tau or this system leaps past any threshold
+    pure_birth = make_system(["A"], [({}, {"A": 1}, 100.0)], {"A": 0})
+    for model in (lotka_volterra(2), ecoli_gene_regulation(),
+                  pure_birth):
+        ex = simulate(_exp(model, method=Method.EXACT))
+        tl = simulate(_exp(model, method=Method.TAU_LEAP,
+                           tau_fallback=float("inf")))
+        assert sum(tl.telemetry.leaps_per_window) == 0
+        assert (ex.means() == tl.means()).all()
+        assert (ex.trajectories() == tl.trajectories()).all()
+
+
+def test_tau_leap_deterministic_same_seed():
+    a, b = simulate(_exp(seed=9)), simulate(_exp(seed=9))
+    assert (a.trajectories() == b.trajectories()).all()
+    c = simulate(_exp(seed=10))
+    assert (c.trajectories() != a.trajectories()).any()
+
+
+# --------------------------------------------------------- invariants
+def test_tau_leap_preserves_stoichiometric_conservation():
+    """2A -> B leaps fire K*(-2A, +B) at once: A + 2B is conserved by
+    every accepted leap exactly, never just approximately."""
+    sys = make_system(["A", "B"], [({"A": 2}, {"B": 1}, 0.001)],
+                      {"A": 3000, "B": 0})
+    res = simulate(_exp(sys, replicas=32, t_end=0.2, windows=2,
+                        record_trajectories=False))
+    assert sum(res.telemetry.leaps_per_window) > 0
+    x = res.final_state()
+    assert (x[:, 0] + 2 * x[:, 1] == 3000).all()
+    assert (x >= 0).all()
+
+
+def test_tau_leap_rejection_keeps_populations_nonnegative():
+    """A fast pure-death system drives leap proposals into the
+    negative-population regime: rejection/retry (then exact fallback)
+    must keep every lane count >= 0 at every window."""
+    sys = make_system(["A"], [({"A": 1}, {}, 30.0)], {"A": 400})
+    res = simulate(_exp(sys, replicas=64, t_end=0.6, windows=6,
+                        tau_eps=0.2))
+    traj = res.trajectories()
+    assert (traj >= 0).all()
+    assert (res.final_state() >= 0).all()
+
+
+def test_tau_leap_executes_fewer_steps_than_exact():
+    """The point of the method: on a large-population model the solver
+    advances in leaps — far fewer iterations than exact SSA events."""
+    lam, mu = 4000.0, 1.0
+    sys = make_system(["A"], [({}, {"A": 1}, lam), ({"A": 1}, {}, mu)],
+                      {"A": 0})
+    ex = simulate(_exp(sys, method=Method.EXACT, replicas=64, t_end=2.0,
+                       windows=4, record_trajectories=False))
+    tl = simulate(_exp(sys, method=Method.TAU_LEAP, replicas=64,
+                       t_end=2.0, windows=4, record_trajectories=False))
+    s_ex = sum(ex.telemetry.steps_per_window)
+    s_tl = sum(tl.telemetry.steps_per_window)
+    assert s_tl * 5 <= s_ex, (s_ex, s_tl)
+    assert sum(tl.telemetry.leaps_per_window) > 0
+    # and the ensembles still agree on the mean trajectory
+    m = lam / mu * (1 - np.exp(-mu * 2.0))
+    assert abs(tl.means()[-1, 0] - m) < 5 * np.sqrt(m / 64)
+
+
+def test_tau_leap_telemetry_splits_leaps_vs_fallback():
+    res = simulate(_exp())
+    tele = res.telemetry
+    assert len(tele.steps_per_window) == 3
+    assert len(tele.leaps_per_window) == 3
+    for s, l in zip(tele.steps_per_window, tele.leaps_per_window):
+        assert 0 <= l <= s  # fallback share = s - l
+    ex = simulate(_exp(method=Method.EXACT))
+    assert sum(ex.telemetry.leaps_per_window) == 0
+    assert sum(ex.telemetry.steps_per_window) > 0
+
+
+# ------------------------------------------------------- fault drills
+def test_tau_leap_checkpoint_resume_bitwise(tmp_path):
+    ck = str(tmp_path / "ck")
+    clean = simulate(_exp(windows=4))
+    simulate(_exp(windows=4), max_windows=2, checkpoint_path=ck)
+    resumed = simulate(_exp(windows=4), checkpoint_path=ck, resume=True)
+    assert (resumed.means() == clean.means()).all()
+    assert (resumed.trajectories() == clean.trajectories()).all()
+    # per-window telemetry restarts from the checkpoint, not from 0
+    assert (list(clean.telemetry.steps_per_window[2:])
+            == list(resumed.telemetry.steps_per_window))
+
+
+def test_tau_leap_checkpoint_roundtrips_new_lane_fields(tmp_path):
+    ck = str(tmp_path / "ck")
+    simulate(_exp(windows=2), max_windows=1, checkpoint_path=ck)
+    z = np.load(ck + ".npz")
+    assert z["ctr_hi"].dtype == np.uint32
+    assert z["leaps"].dtype == np.int32
+    assert int(z["leaps"].sum()) >= 0
+
+
+def test_old_checkpoint_without_new_fields_still_restores(tmp_path):
+    """Pre-widening checkpoints (no ctr_hi/leaps) restore with zeros —
+    bitwise for any stream below 2^32 draws."""
+    ck = str(tmp_path / "ck")
+    clean = simulate(_exp(windows=3, method=Method.EXACT))
+    simulate(_exp(windows=3, method=Method.EXACT), max_windows=1,
+             checkpoint_path=ck)
+    z = dict(np.load(ck + ".npz"))
+    z.pop("ctr_hi"), z.pop("leaps")
+    np.savez(ck, **z)
+    resumed = simulate(_exp(windows=3, method=Method.EXACT),
+                       checkpoint_path=ck, resume=True)
+    assert (resumed.means() == clean.means()).all()
+
+
+# -------------------------------------------------------- unit pieces
+def test_poisson_inverse_transform_moments(rng):
+    import jax.numpy as jnp
+
+    for lam in (0.3, 2.0, 9.0):
+        u = jnp.asarray(rng.uniform(1e-12, 1.0, 20000).astype(np.float32))
+        k = np.asarray(poisson_from_uniform(u, jnp.float32(lam)))
+        assert abs(k.mean() - lam) < 4 * np.sqrt(lam / 20000)
+        assert abs(k.var() - lam) < 0.1 * lam + 4 * lam * np.sqrt(2 / 20000)
+    z = np.asarray(poisson_from_uniform(
+        jnp.asarray([0.5], jnp.float32), jnp.asarray([0.0], jnp.float32)))
+    assert z[0] == 0.0  # lam=0 never fires
+
+
+def test_gi_tables_standard_cases():
+    # first order: g = 1
+    sys1 = make_system(["A"], [({"A": 1}, {}, 1.0)], {"A": 5})
+    assert gi_tables(sys1)[0, 0] == 1.0
+    # second order, two of the same: g = 2 + 1/(x-1)
+    sys2 = make_system(["A", "B"], [({"A": 2}, {"B": 1}, 1.0)],
+                       {"A": 5})
+    tab = gi_tables(sys2)
+    assert tab[0, 0] == 2.0 and tab[1, 0] == 1.0
+    # HOR wins: the dimerisation bound beats the decay's first order
+    sys3 = make_system(["A", "B"],
+                       [({"A": 1}, {}, 1.0), ({"A": 2}, {"B": 1}, 1.0)],
+                       {"A": 5})
+    assert (gi_tables(sys3)[:, 0] == tab[:, 0]).all()
+
+
+def test_tau_leap_standalone_advance_matches_engine_window():
+    """core.tau_leap.advance_to is the same per-lane algorithm the
+    engine dispatches — one window must agree bitwise."""
+    sys = make_system(["A"], [({}, {"A": 1}, 200.0), ({"A": 1}, {}, 1.0)],
+                      {"A": 0})
+    st = tau_advance_to(init_lanes(sys, 16, seed=2), sys, 0.5)
+    res = simulate(_exp(sys, replicas=16, windows=1, t_end=0.5, seed=2,
+                        record_trajectories=False))
+    assert (res.final_state() == np.asarray(st.x)).all()
+    assert (np.asarray(st.t) == 0.5).all()
+
+
+# --------------------------------------------------------- validation
+def test_method_coercion_and_validation():
+    e = _exp(method="tau_leap")  # legacy-string spelling coerces
+    assert e.method is Method.TAU_LEAP
+    with pytest.raises(ExperimentError, match="unknown method"):
+        _exp(method="leapfrog")
+    with pytest.raises(ExperimentError, match="tau_eps"):
+        _exp(tau_eps=0.0).validate()
+    with pytest.raises(ExperimentError, match="tau_fallback"):
+        _exp(tau_fallback=-1.0).validate()
+    with pytest.raises(ValueError, match="method"):
+        from repro.core.engine import SimConfig
+
+        SimConfig(method="nope")
