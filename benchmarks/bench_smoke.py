@@ -1,18 +1,28 @@
-"""Small-scale benchmark smoke run -> BENCH_PR3.json (the perf
-trajectory's first recorded point).
+"""Small-scale benchmark smoke run -> BENCH_PR5.json (the perf
+trajectory's superstep point).
 
-Runs `window_step_path` (host_loop vs window_step vs Pallas kernel,
-one in-process experiment each) and `sharded_farm` (1/2-shard
-subprocesses, kernel on and off) at CI-friendly sizes, asserts the
-bitwise-parity invariants those benchmarks encode, and writes the
-dispatch/sync/wall profile per window to BENCH_PR3.json.
+Three sections, all CI-sized and deterministic:
+
+* `window_step_path` — host_loop vs window_step vs Pallas kernel, now
+  each non-baseline path also at `window_block=4` (supersteps: 4
+  windows per dispatch, record ring pulled per block by the async
+  collector). Asserts the bitwise-parity invariants, the dispatch/sync
+  amortisation (<= 0.25 per window at window_block=4), and the
+  WALL-CLOCK GATE: the fused superstep's steady per-window wall must
+  beat the per-window (window_block=1) fused baseline run in the same
+  process — the same code path BENCH_PR3 profiled at this config.
+  Tolerance: none (ratio <= 1.0); the win is structural (3 of every 4
+  host round-trips removed), ~1.4x speedup observed (superstep/
+  baseline wall ratio ~0.7), so a flake here is a real regression.
+* `sharded_farm` — 1/2-shard subprocesses x kernel x window_block,
+  asserting ONE records digest across every combination AND that it
+  equals the digest BENCH_PR3.json recorded for this exact config —
+  supersteps (and everything since PR3) leave records bit-identical.
+* `tau_wall_clock` — the birth-death wall-clock speedup of tau-leaping
+  over exact SSA (stat_smoke's gated section; BENCH_PR4 recorded only
+  the step-count ratio).
 
   PYTHONPATH=src python benchmarks/bench_smoke.py [out.json]
-
-Headline numbers recorded: the kernel path runs a full window in ONE
-device dispatch with no mid-window host syncs (no uniform-stream
-upload, no per-chunk continuation pull), and composes with the sharded
-farm bit-identically.
 """
 from __future__ import annotations
 
@@ -23,85 +33,161 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 
-from benchmarks import sharded_farm, window_step_path  # noqa: E402
+from benchmarks import sharded_farm, stat_smoke, window_step_path  # noqa: E402
 
-N_INSTANCES, N_LANES, N_WINDOWS = 128, 16, 4
-SHARD_INSTANCES, SHARD_LANES = 64, 8
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# 12 windows: warmup eats one block (4 windows at window_block=4, 1 at
+# window_block=1) and the steady measure covers the rest end to end
+N_INSTANCES, N_LANES, N_WINDOWS = 128, 16, 12
+WINDOW_BLOCK = 4
+SHARD_INSTANCES, SHARD_LANES, SHARD_WINDOWS = 64, 8, 4
 SHARD_COUNTS = (1, 2)
+# (path, window_block) rows; host_loop stays the per-window baseline
+ROWS = (("host_loop", 1), ("window_step", 1), ("kernel", 1),
+        ("window_step", WINDOW_BLOCK), ("kernel", WINDOW_BLOCK))
 
 
-def main() -> None:
-    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_PR3.json")
-    paths = {}
-    results = {}
-    for path in window_step_path.PATHS:
+def window_section():
+    paths, results = {}, {}
+    for path, wb in ROWS:
         result, m = window_step_path.run_path(
-            path, N_INSTANCES, N_LANES, n_windows=N_WINDOWS)
-        results[path] = result
-        paths[path] = {
+            path, N_INSTANCES, N_LANES, n_windows=N_WINDOWS,
+            window_block=wb)
+        key = path if wb == 1 else f"{path},window_block={wb}"
+        results[key] = result
+        paths[key] = {
             "dispatches_per_window": m["dispatches_per_window"],
             "host_syncs_per_window": m["host_syncs_per_window"],
             "wall_per_window_ms": round(m["wall_per_window_ms"], 3),
         }
-        print(f"window_step_path/{path}: {paths[path]}")
-    for p in ("host_loop", "kernel"):
-        assert (results[p].means()
-                == results["window_step"].means()).all(), (
-            f"{p} diverged from window_step")
+        print(f"window_step_path/{key}: {paths[key]}")
+    base = results["window_step"].means()
+    for key, res in results.items():
+        assert (res.means() == base).all(), (
+            f"{key} diverged from window_step")
     assert paths["kernel"]["dispatches_per_window"] == 1.0, (
         "kernel path must be one dispatch per window")
-    # the truncation flag rides the per-window record pull: EVERY path
-    # is exactly one blocking host sync per window (the kernel path
-    # used to pay a second one — BENCH_PR3 recorded 2.0 here)
-    for p, row in paths.items():
-        assert row["host_syncs_per_window"] == 1.0, (
-            f"{p}: {row['host_syncs_per_window']} host syncs/window "
-            "(expected exactly 1.0 — the combined record pull)")
+    # per-window paths: the truncation flag rides the combined record
+    # pull, so EVERY per-window path is exactly one blocking sync per
+    # window (PR4's invariant)
+    for key, row in paths.items():
+        if "window_block" in key:
+            # supersteps amortise BOTH to 1/window_block per window
+            assert row["dispatches_per_window"] <= 1 / WINDOW_BLOCK, (
+                f"{key}: {row['dispatches_per_window']} dispatches/"
+                f"window (expected <= {1 / WINDOW_BLOCK})")
+            assert row["host_syncs_per_window"] < 1.0, (
+                f"{key}: {row['host_syncs_per_window']} host syncs/"
+                "window (expected amortised < 1.0)")
+        else:
+            assert row["host_syncs_per_window"] == 1.0, (
+                f"{key}: {row['host_syncs_per_window']} host syncs/"
+                "window (expected exactly 1.0)")
+    # the wall-clock gate (tolerance 1.0 — see module docstring)
+    wb_key = f"window_step,window_block={WINDOW_BLOCK}"
+    w_base = paths["window_step"]["wall_per_window_ms"]
+    w_block = paths[wb_key]["wall_per_window_ms"]
+    print(f"#  fused superstep wall {w_base:.2f}ms -> {w_block:.2f}ms "
+          f"per window ({w_base / max(w_block, 1e-9):.2f}x)")
+    assert w_block <= w_base, (
+        f"superstep fused path ({w_block:.3f}ms/window at window_block="
+        f"{WINDOW_BLOCK}) must beat the per-window fused baseline "
+        f"({w_base:.3f}ms/window) — the PR3-era profile at this config")
+    return paths
 
+
+def farm_section():
     farm = {}
     digests = set()
     for kernel in (False, True):
         for k in SHARD_COUNTS:
-            row = sharded_farm.run_point(
-                k, SHARD_INSTANCES, SHARD_LANES, N_WINDOWS, kernel=kernel)
-            shards, disp, syncs, wall_ms, wall_s, sha = row.split(",")
-            digests.add(sha)
-            farm[f"shards={k},kernel={int(kernel)}"] = {
-                "dispatches_per_window": int(disp) / N_WINDOWS,
-                "host_syncs_per_window": int(syncs) / N_WINDOWS,
-                "wall_per_window_ms": float(wall_ms),
-                "records_sha": sha,
-            }
-            print(f"sharded_farm/shards={k},kernel={int(kernel)}: "
-                  f"{farm[f'shards={k},kernel={int(kernel)}']}")
+            for wb in (1, WINDOW_BLOCK):
+                row = sharded_farm.run_point(
+                    k, SHARD_INSTANCES, SHARD_LANES, SHARD_WINDOWS,
+                    kernel=kernel, window_block=wb)
+                shards, disp, syncs, wall_ms, wall_s, sha = row.split(",")
+                digests.add(sha)
+                key = f"shards={k},kernel={int(kernel)},window_block={wb}"
+                farm[key] = {
+                    "dispatches_per_window": int(disp) / SHARD_WINDOWS,
+                    "host_syncs_per_window": int(syncs) / SHARD_WINDOWS,
+                    "wall_per_window_ms": float(wall_ms),
+                    "records_sha": sha,
+                }
+                print(f"sharded_farm/{key}: {farm[key]}")
     assert len(digests) == 1, (
-        f"records diverged across shards/window bodies: {farm}")
+        f"records diverged across shards/window bodies/blocks: {farm}")
+    # cross-PR anchor: BENCH_PR3.json recorded this config's digest
+    # when the per-window path was the only one — equality proves the
+    # superstep refactor changed no record bit
+    pr3_path = os.path.join(REPO, "BENCH_PR3.json")
+    if os.path.exists(pr3_path):
+        with open(pr3_path) as f:
+            pr3 = json.load(f)
+        pr3_sha = pr3["sharded_farm"]["shards=1,kernel=0"]["records_sha"]
+        assert digests == {pr3_sha}, (
+            f"records digest {digests} != BENCH_PR3 baseline {pr3_sha} "
+            "— the engine no longer reproduces the PR3-era records")
     for key, row in farm.items():
-        assert row["host_syncs_per_window"] == 1.0, (
+        expect = 1.0 if "window_block=1" in key else 1 / WINDOW_BLOCK
+        assert row["host_syncs_per_window"] == expect, (
             f"sharded_farm/{key}: {row['host_syncs_per_window']} host "
-            "syncs/window (expected exactly 1.0)")
+            f"syncs/window (expected {expect})")
+    return farm
 
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        REPO, "BENCH_PR5.json")
+    paths = window_section()
+    farm = farm_section()
+    bd = stat_smoke.birth_death_section()
+    tau_wall = {
+        "exact_wall_per_window_ms": bd["exact"]["wall_per_window_ms"],
+        "tau_leap_wall_per_window_ms":
+            bd["tau_leap"]["wall_per_window_ms"],
+        "wall_speedup_tau_vs_exact": bd["wall_speedup_tau_vs_exact"],
+    }
     doc = {
-        "pr": 3,
+        "pr": 5,
         "generated_by": "benchmarks/bench_smoke.py",
         "config": {
+            "wall_measure": (
+                "wall_per_window_ms is the post-warmup END-TO-END wall "
+                "per window (dispatch + device compute + every blocking "
+                "pull) — unlike BENCH_PR3's async-dispatch median, "
+                "which excluded the pull and so could not price the "
+                "per-window host round-trip the superstep removes"),
             "window_step_path": {
                 "instances": N_INSTANCES, "lanes": N_LANES,
-                "windows": N_WINDOWS},
+                "windows": N_WINDOWS, "window_block": WINDOW_BLOCK},
             "sharded_farm": {
                 "instances": SHARD_INSTANCES, "lanes": SHARD_LANES,
-                "windows": N_WINDOWS,
-                "stat_blocks": sharded_farm.STAT_BLOCKS},
+                "windows": SHARD_WINDOWS,
+                "stat_blocks": sharded_farm.STAT_BLOCKS,
+                "wall_note": (
+                    "window_block=4 rows run the whole 4-window grid "
+                    "as ONE block, so their wall medians include jit "
+                    "compile; this section's point is the records "
+                    "digest (pinned to the BENCH_PR3 baseline) and "
+                    "the dispatch/sync profile — the gated wall "
+                    "comparison lives in window_step_path")},
+            "tau_wall_clock": {
+                "model": "birth_death", "replicas": stat_smoke.REPLICAS,
+                "lanes": stat_smoke.N_LANES,
+                "windows": stat_smoke.N_WINDOWS,
+                "t_end": stat_smoke.BD_T_END},
         },
         "window_step_path": paths,
         "sharded_farm": farm,
+        "tau_wall_clock": tau_wall,
         "invariants": {
             "all_paths_bitwise_identical": True,
-            "kernel_single_dispatch_per_window": True,
-            "kernel_uniform_stream_operand": False,
-            "host_syncs_per_window_all_paths": 1.0,
+            "records_match_bench_pr3_digest": True,
+            "superstep_dispatches_per_window_le_0p25": True,
+            "superstep_host_syncs_per_window_lt_1": True,
+            "superstep_wall_beats_per_window_baseline": True,
+            "tau_leap_wall_speedup_birth_death_ge_1p2x": True,
         },
     }
     with open(out_path, "w") as f:

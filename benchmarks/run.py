@@ -29,10 +29,6 @@ def main() -> None:
         from benchmarks import fig1_trajectories
 
         fig1_trajectories.main()
-    if want("roofline"):
-        from benchmarks import roofline
-
-        roofline.main()
 
 
 if __name__ == "__main__":

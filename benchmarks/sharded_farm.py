@@ -48,6 +48,7 @@ exp = Experiment(
     ensemble=Ensemble.make(replicas={instances}),
     schedule=Schedule(t_end=2.0, n_windows={windows}, schema="iii"),
     n_lanes={lanes}, seed=7, use_kernel={kernel},
+    window_block={window_block},
     partitioning=Partitioning(n_shards=K, stat_blocks={blocks}))
 res = simulate(exp)
 tele = res.telemetry
@@ -62,13 +63,13 @@ print(f"{{K}},{{tele.dispatches}},{{tele.host_syncs}},"
 
 
 def run_point(k: int, instances: int, lanes: int, windows: int,
-              kernel: bool = False) -> str:
+              kernel: bool = False, window_block: int = 1) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={k}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     snippet = textwrap.dedent(CHILD.format(
         k=k, instances=instances, lanes=lanes, windows=windows,
-        blocks=STAT_BLOCKS, kernel=kernel))
+        blocks=STAT_BLOCKS, kernel=kernel, window_block=window_block))
     out = subprocess.run([sys.executable, "-c", snippet],
                          capture_output=True, text=True, env=env,
                          timeout=1200)

@@ -17,6 +17,8 @@ the first window).
 """
 from __future__ import annotations
 
+import time
+
 from repro.api import Ensemble, Experiment, Schedule, simulate
 from repro.core.cwc.models import lotka_volterra
 
@@ -24,7 +26,7 @@ PATHS = ("host_loop", "window_step", "kernel")
 
 
 def run_path(path: str, n_instances: int, n_lanes: int,
-             n_windows: int = 8):
+             n_windows: int = 8, window_block: int = 1):
     exp = Experiment(
         model=lotka_volterra(2),
         ensemble=Ensemble.make(replicas=n_instances),
@@ -32,18 +34,32 @@ def run_path(path: str, n_instances: int, n_lanes: int,
         n_lanes=n_lanes,
         seed=7,
         host_loop=(path == "host_loop"),
-        use_kernel=(path == "kernel"))
-    result = simulate(exp)
+        use_kernel=(path == "kernel"),
+        window_block=window_block)
+    # steady-state wall: warm up one block (jit compile + first
+    # dispatch), then time the remaining windows END TO END — dispatch,
+    # device compute, AND every blocking pull. The engine's per-window
+    # wall shares deliberately exclude the pull (they are an
+    # async-dispatch measure), so they cannot compare a per-window run
+    # against a superstep run whose collect hides the pull behind the
+    # next block's compute; this end-to-end measure can.
+    warmup = max(window_block, 1)
+    assert n_windows > warmup, (
+        f"n_windows ({n_windows}) must exceed window_block "
+        f"({window_block}): warmup consumes one full block and the "
+        "steady measure needs at least one window after it")
+    result = simulate(exp, max_windows=warmup)
+    t0 = time.perf_counter()
+    result.resume()
+    steady_wall = time.perf_counter() - t0
     tele = result.telemetry
-    # first window includes jit compile — report steady-state median
-    steady = sorted(tele.window_wall_times[1:])
     return result, dict(
         dispatches=tele.dispatches,
         host_syncs=tele.host_syncs,
         dispatches_per_window=tele.dispatches / n_windows,
         host_syncs_per_window=tele.host_syncs / n_windows,
         wall_total_s=tele.wall_time_s,
-        wall_per_window_ms=1e3 * steady[len(steady) // 2])
+        wall_per_window_ms=1e3 * steady_wall / (n_windows - warmup))
 
 
 def main() -> None:

@@ -23,8 +23,15 @@ class Telemetry:
 
     dispatches: jitted device launches for pool advancement — the new
     window_step path pays one per window, the legacy host loop one per
-    (group × window).
-    host_syncs: blocking device->host pulls (stats, samples, costs).
+    (group × window), and supersteps (window_block=W) one per BLOCK
+    (1/W per window).
+    host_syncs: blocking device->host pulls (stats, samples, costs);
+    under supersteps one combined ring pull per block, so the
+    amortised per-window rate drops below 1.
+    window_wall_times: per-window wall shares. On per-window paths this
+    is an async-dispatch measure (the blocking pull is excluded); under
+    supersteps each entry is 1/W of its block's dispatch + collect
+    wall, so the hidden pull is included.
     peak_buffered_bytes: engine-side trajectory buffering high-water
     mark (schema iii's memory bound).
     peak_rss_bytes: process high-water RSS where the platform reports
@@ -69,17 +76,41 @@ class SimulationResult:
                checkpoint_path: Optional[str] = None) -> "SimulationResult":
         """Advance the experiment, at most `max_windows` windows (all
         remaining if None), checkpointing after every window when a
-        path is given. Returns self for chaining."""
+        path is given. Returns self for chaining.
+
+        With `window_block > 1` the run advances in pipelined
+        supersteps: block k+1 is dispatched before block k's record
+        ring is pulled, so host-side reduction and sinks overlap device
+        simulation. A `checkpoint_path` saves after EVERY block, on
+        that block's boundary — which disables the dispatch-ahead (a
+        save must not flush the next block's windows into the file), so
+        prefer checkpointing at a coarser cadence than every block when
+        throughput matters. `max_windows` may cut the final block
+        short — such a mid-block checkpoint can only be resumed with a
+        window_block dividing its window index."""
         eng = self._engine
         t0 = time.perf_counter()
         done = 0
         try:
-            while eng._window < len(eng.grid) and (
-                    max_windows is None or done < max_windows):
-                eng.run_window()
-                done += 1
-                if checkpoint_path:
-                    eng.checkpoint(checkpoint_path)
+            if eng.cfg.window_block == 1:
+                while eng._window < len(eng.grid) and (
+                        max_windows is None or done < max_windows):
+                    eng.run_window()
+                    done += 1
+                    if checkpoint_path:
+                        eng.checkpoint(checkpoint_path)
+            else:
+                limit = len(eng.grid) if max_windows is None else min(
+                    len(eng.grid), eng._window + max_windows)
+                while eng._window < limit:
+                    # checkpointing disables the dispatch-ahead so each
+                    # save lands on the just-collected block's boundary
+                    # (instead of flushing the next block too)
+                    got = eng.run_block(dispatch_limit=limit,
+                                        pipeline=not checkpoint_path)
+                    if checkpoint_path and got:
+                        eng.checkpoint(checkpoint_path)
+                eng.flush()
         finally:
             self._wall_time += time.perf_counter() - t0
         if self.completed:

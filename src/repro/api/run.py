@@ -53,7 +53,8 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         kernel_max_chunks=experiment.kernel_max_chunks,
         method=experiment.method.value,
         tau_eps=experiment.tau_eps,
-        tau_fallback=experiment.tau_fallback)
+        tau_fallback=experiment.tau_fallback,
+        window_block=experiment.window_block)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
     try:
@@ -102,7 +103,11 @@ def simulate(experiment: Experiment, *,
         if not os.path.exists(path):
             raise ExperimentError(
                 f"resume=True but no checkpoint at {path!r}")
-        engine.restore(checkpoint_path)
+        try:
+            engine.restore(checkpoint_path)
+        except ValueError as e:
+            # e.g. a mid-block checkpoint under window_block > 1
+            raise ExperimentError(str(e)) from e
     for sink in experiment.sinks:
         engine.stream.attach(sink)
         for rec in engine.stream.records():  # replay restored windows

@@ -219,6 +219,16 @@ class Experiment:
     dispatch path. tau_eps: Cao drift bound (leap sizes scale with it);
     tau_fallback: minimum expected events per leap before a lane falls
     back to exact SSA for that step. Neither changes EXACT runs.
+    window_block: superstep width — fuse this many windows into ONE
+    device dispatch (a lax.scan over window horizons), with per-window
+    records accumulated in an on-device ring and collected by an async
+    pipelined pull, so dispatches and blocking host syncs amortise to
+    1/window_block per window (DESIGN.md §3e). Records are bitwise
+    identical for any value; composes with use_kernel, partitioning,
+    and method, but not host_loop (the per-window baseline). With a
+    checkpoint_path, saves land on block boundaries (a save forces the
+    in-flight block to be collected first), and resuming needs a
+    checkpoint on a window_block boundary.
     """
 
     model: Union[CWCModel, ReactionSystem]
@@ -237,6 +247,7 @@ class Experiment:
     method: Method = Method.EXACT
     tau_eps: float = 0.03
     tau_fallback: float = 10.0
+    window_block: int = 1
 
     def __post_init__(self):
         object.__setattr__(self, "method", Method.coerce(self.method))
@@ -276,6 +287,15 @@ class Experiment:
             raise ExperimentError(
                 f"Experiment.kernel_max_chunks must be >= 1, got "
                 f"{self.kernel_max_chunks}")
+        if self.window_block < 1:
+            raise ExperimentError(
+                f"Experiment.window_block must be >= 1, got "
+                f"{self.window_block}")
+        if self.window_block > 1 and self.host_loop:
+            raise ExperimentError(
+                "window_block > 1 needs the fused or sharded dispatch "
+                "strategy; host_loop is the per-window round-trip "
+                "baseline (set window_block=1)")
         # method itself needs no check here: __post_init__ coerced it
         # (or raised ExperimentError) at construction
         if not self.tau_eps > 0:

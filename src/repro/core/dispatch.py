@@ -30,6 +30,18 @@ The per-lane ALGORITHM is a second, orthogonal seam
 chunk loop (exact or tau — `engine._make_chunk_loop`); every
 strategy × method pairing stays bit-identical per lane.
 
+A third, orthogonal seam is the SUPERSTEP width
+(`SimConfig.window_block`): the fused and sharded strategies expose
+`advance_block(horizons)`, a `lax.scan` over W window horizons inside
+ONE jitted (donated) dispatch — both the unfused window body and the
+Pallas kernel chunk loop nest under the scan — accumulating per-window
+observables, Welford partials, steps/leaps telemetry, and (kernel
+paths) truncation flags into an on-device `(W, ...)` record ring
+(`BlockResult`). The engine's async collector pulls a whole ring with
+one blocking sync, so dispatches AND host syncs amortise to 1/W per
+window (DESIGN.md §3e). The host loop stays per-window by design (it
+is the round-trip baseline the superstep is measured against).
+
 All paths are bit-identical per lane (counter-based per-lane RNG,
 `core/stream.counter_uniforms`; identical per-lane ops — including
 kernel vs unfused, see DESIGN.md §3c). The sharded path additionally
@@ -37,7 +49,11 @@ pins the statistics merge tree to `Partitioning.blocks` virtual
 blocks, so its StatsRecords are bit-identical for ANY shard count
 dividing the block count — including the unsharded fused path
 configured with the same `stat_blocks` — which is what makes
-checkpoints mesh-shape-agnostic.
+checkpoints mesh-shape-agnostic. Supersteps preserve all of it:
+the scan body IS the per-window body, and the per-window statistics
+are computed by the same ops on the same values, so records are
+bitwise identical for ANY `window_block` (window_block=1 runs the
+unchanged legacy per-window path).
 """
 from __future__ import annotations
 
@@ -123,6 +139,40 @@ class WindowResult(NamedTuple):
     steps_delta: Any
     stats: Optional[reduction.Stats]
     grouped: Optional[reduction.Stats]
+    truncated: Any = None
+
+
+class BlockResult(NamedTuple):
+    """One superstep's on-device record ring: W windows advanced in ONE
+    dispatch, every per-window product stacked over a leading (W,) axis
+    and left on device until the engine's collector pulls the block.
+
+    obs: (W, I, n_obs) per-window samples (sharded over I under the
+    sharded strategy).
+    steps_end / leaps_end: (W,) int32 pool-total step/leap counts at
+    each window's end (cumulative — the collector takes mod-2^32
+    deltas exactly like the per-window path).
+    stats / grouped: length-W lists of per-window Stats already reduced
+    device-side (sharded strategy — the same psum-gather + eager fold
+    the per-window path uses), or None when the engine should compute
+    them from `obs` rows (fused strategy, mirroring its per-window
+    eager reduction).
+    steps_delta: (W, I) per-instance events per window — only produced
+    under the predictive policy (the scheduler's EMA costs are updated
+    window-by-window at collect time; regrouping happens at block
+    boundaries, which never changes a trajectory — lane groups are
+    execution packaging, not semantics).
+    truncated: (W,) int32 on the kernel paths — nonzero entries mark
+    windows whose chunk budget ran out (the collector raises
+    FusedWindowTruncated naming the first one); None on unfused paths.
+    """
+
+    obs: Any
+    steps_end: Any
+    leaps_end: Any
+    stats: Optional[list] = None
+    grouped: Optional[list] = None
+    steps_delta: Any = None
     truncated: Any = None
 
 
@@ -218,6 +268,15 @@ class _Dispatch:
 
     def advance(self, horizon) -> WindowResult:
         raise NotImplementedError
+
+    def advance_block(self, horizons) -> BlockResult:
+        """Advance the pool over a whole block of window horizons in
+        one dispatch (superstep). Only the fused and sharded strategies
+        implement it; the host loop is the per-window baseline
+        (SimConfig rejects window_block > 1 with host_loop)."""
+        raise NotImplementedError(
+            f"dispatch strategy {self.name!r} has no superstep path; "
+            "window_block > 1 needs the fused or sharded strategy")
 
 
 class HostLoopDispatch(_Dispatch):
@@ -367,7 +426,9 @@ class FusedDispatch(_Dispatch):
                                     engine.obs_idx,
                                     cfg.max_steps_per_window,
                                     step_fn=engine._lane_step)
+        self._body = body
         self._step = jax.jit(body, donate_argnums=(0,))
+        self._block_step = None  # built lazily on first superstep
 
     def advance(self, horizon) -> WindowResult:
         eng = self.eng
@@ -380,6 +441,48 @@ class FusedDispatch(_Dispatch):
             eng._pool, eng._rates_dev, eng._permutation(), horizon)
         eng.n_dispatches += 1
         return WindowResult(obs, steps_delta, None, None)
+
+    def _build_block(self):
+        """ONE jitted, donated superstep: lax.scan of the window body
+        over a (W,) horizon vector, stacking per-window obs + telemetry
+        into the record ring. The scan body is the SAME window body the
+        per-window step jits, so per-lane trajectories (and therefore
+        records) are bitwise independent of window_block."""
+        body = self._body
+        kernel = self._kernel
+        predictive = self.eng.scheduler.policy == "predictive"
+
+        def block_body(pool, rates, perm, horizons):
+            def step(p, h):
+                if kernel:
+                    new_pool, obs, steps_d, trunc = body(p, rates, h)
+                    trunc = trunc.astype(jnp.int32)
+                else:
+                    new_pool, obs, steps_d = body(p, rates, perm, h)
+                    trunc = jnp.int32(0)
+                ring = (obs, new_pool.steps.sum(), new_pool.leaps.sum(),
+                        trunc) + ((steps_d,) if predictive else ())
+                return new_pool, ring
+
+            return jax.lax.scan(step, pool, horizons)
+
+        return jax.jit(block_body, donate_argnums=(0,))
+
+    def advance_block(self, horizons) -> BlockResult:
+        eng = self.eng
+        if self._block_step is None:
+            self._block_step = self._build_block()
+        predictive = eng.scheduler.policy == "predictive"
+        perm = None if self._kernel else eng._permutation()
+        eng._pool, ring = self._block_step(
+            eng._pool, eng._rates_dev, perm, jnp.asarray(
+                horizons, jnp.float32))
+        eng.n_dispatches += 1
+        obs, steps_end, leaps_end, trunc = ring[:4]
+        return BlockResult(
+            obs=obs, steps_end=steps_end, leaps_end=leaps_end,
+            steps_delta=(ring[4] if predictive else None),
+            truncated=(trunc if self._kernel else None))
 
 
 class ShardedDispatch(_Dispatch):
@@ -418,6 +521,8 @@ class ShardedDispatch(_Dispatch):
         # cache key: (grouped?, n_groups) — the jitted step closes over
         # both, so a set_groups() with a new group count must rebuild
         self._step_key: Optional[tuple] = None
+        self._block_step = None
+        self._block_key: Optional[tuple] = None
 
     def place(self, tree):
         return jax.tree_util.tree_map(
@@ -500,6 +605,130 @@ class ShardedDispatch(_Dispatch):
         fn = compat.shard_map(wrapped, mesh=self.mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)
         return jax.jit(fn, donate_argnums=(0,))
+
+    def _build_block(self, grouped: bool):
+        """The sharded superstep: the SAME per-window local body
+        (window advance + per-block Welford partials + one psum gather)
+        wrapped in a lax.scan over the horizon vector, all inside one
+        shard_map'd, jitted, donated dispatch. Per-window gathered
+        stat stacks come back replicated with a leading (W,) axis; the
+        eager merge_blocks/finalize fold stays OUTSIDE the jit
+        (advance_block below), exactly like the per-window path, so
+        records are bitwise independent of both the mesh shape and
+        window_block."""
+        eng = self.eng
+        part = self.part
+        axis, n_shards = part.axis, part.n_shards
+        per_shard = eng.cfg.n_instances // n_shards
+        v_loc = part.blocks // n_shards
+        n_groups = eng._n_groups if grouped else 0
+        use_kernel = eng.cfg.use_kernel
+        predictive = eng.scheduler.policy == "predictive"
+        idx_t, coef_t, delta_t, _ = eng._tensors_base
+        if use_kernel:
+            kbody = make_kernel_window_body(
+                (idx_t, coef_t, delta_t), eng.obs_idx,
+                eng._make_chunk_loop())
+        else:
+            body = make_window_body((idx_t, coef_t, delta_t),
+                                    eng.scheduler.n_lanes, eng.obs_idx,
+                                    eng.cfg.max_steps_per_window,
+                                    step_fn=eng._lane_step)
+
+        def local(pool, rates, perm, gids, horizons):
+            def step(p, h):
+                if use_kernel:
+                    new_pool, obs, steps_d, trunc = kbody(p, rates, h)
+                    trunc = jax.lax.psum(trunc.astype(jnp.int32), axis)
+                else:
+                    k = jax.lax.axis_index(axis)
+                    perm_loc = perm - k * per_shard
+                    new_pool, obs, steps_d = body(p, rates, perm_loc, h)
+                    trunc = jnp.int32(0)
+                acc = reduction.blocked_welford(obs, v_loc)
+                stack = reduction.gather_blocks_over_axis(acc, axis,
+                                                          n_shards)
+                # int32 pool-total counters are exact mod 2^32, so the
+                # psum equals the eager global sum the per-window path
+                # pulls
+                ring = (obs, trunc, stack,
+                        jax.lax.psum(new_pool.steps.sum(), axis),
+                        jax.lax.psum(new_pool.leaps.sum(), axis))
+                if grouped:
+                    gacc = reduction.blocked_grouped_welford(
+                        obs, gids, n_groups, v_loc)
+                    ring = ring + (reduction.gather_blocks_over_axis(
+                        gacc, axis, n_shards),)
+                if predictive:
+                    ring = ring + (steps_d,)
+                return new_pool, ring
+
+            return jax.lax.scan(step, pool, horizons)
+
+        sh = P(axis)
+        rsh = P(None, axis)  # (W, I_loc, ...) rings: windows leading
+        ring_specs = (rsh, P(), P(), P(), P())
+        if grouped:
+            ring_specs = ring_specs + (P(),)
+        if predictive:
+            ring_specs = ring_specs + (rsh,)
+        out_specs = (sh, ring_specs)
+        if use_kernel and grouped:
+            def wrapped(pool, rates, gids, horizons):
+                return local(pool, rates, None, gids, horizons)
+
+            in_specs = (sh, sh, sh, P())
+        elif use_kernel:
+            def wrapped(pool, rates, horizons):
+                return local(pool, rates, None, None, horizons)
+
+            in_specs = (sh, sh, P())
+        elif grouped:
+            wrapped = local
+            in_specs = (sh, sh, sh, sh, P())
+        else:
+            def wrapped(pool, rates, perm, horizons):
+                return local(pool, rates, perm, None, horizons)
+
+            in_specs = (sh, sh, sh, P())
+        fn = compat.shard_map(wrapped, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def advance_block(self, horizons) -> BlockResult:
+        eng = self.eng
+        grouped = eng._group_ids_dev is not None
+        predictive = eng.scheduler.policy == "predictive"
+        key = (grouped, eng._n_groups if grouped else 0)
+        if self._block_step is None or self._block_key != key:
+            self._block_step = self._build_block(grouped)
+            self._block_key = key
+        step_args = [eng._pool, eng._rates_dev]
+        if not eng.cfg.use_kernel:
+            step_args.append(eng._permutation())
+        if grouped:
+            step_args.append(eng._group_ids_dev)
+        eng._pool, ring = self._block_step(
+            *step_args, jnp.asarray(horizons, jnp.float32))
+        eng.n_dispatches += 1
+        obs, trunc, stack, steps_end, leaps_end = ring[:5]
+        gstack = ring[5] if grouped else None
+        steps_delta = ring[-1] if predictive else None
+        n_windows = len(horizons)
+        # per-window eager fold — the exact op sequence the per-window
+        # sharded advance() (and the unsharded path) uses
+        stats = [reduction.finalize(reduction.merge_blocks(
+            reduction.Welford(*(a[w] for a in stack))))
+            for w in range(n_windows)]
+        gstats = None
+        if grouped:
+            gstats = [reduction.finalize(reduction.merge_blocks(
+                reduction.Welford(*(a[w] for a in gstack))))
+                for w in range(n_windows)]
+        return BlockResult(
+            obs=obs, steps_end=steps_end, leaps_end=leaps_end,
+            stats=stats, grouped=gstats, steps_delta=steps_delta,
+            truncated=(trunc if eng.cfg.use_kernel else None))
 
     def advance(self, horizon) -> WindowResult:
         eng = self.eng

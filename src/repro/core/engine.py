@@ -19,6 +19,12 @@ window, zero mid-window host syncs, and bitwise identical to the
 unfused path (DESIGN.md §3c). The legacy host-driven per-group loop is
 kept behind `SimConfig.host_loop` as the benchmark baseline; all paths
 are bit-identical because every per-lane operation is unchanged.
+With `SimConfig.window_block=W` whole runs go device-resident:
+W windows fuse into ONE dispatch (a lax.scan inside the strategy) whose
+per-window products land in an on-device record ring, and the engine's
+depth-1 pipelined collector dispatches block k+1 before blocking on
+block k's ring pull — so dispatches AND host syncs amortise to 1/W per
+window while records stay bitwise identical (DESIGN.md §3e).
 
 Distribution: with a `Partitioning` (or a mesh), the instance pool is
 sharded over the mesh's data axis (each shard = a farm worker); the
@@ -40,6 +46,7 @@ shim over the same engine.
 """
 from __future__ import annotations
 
+import collections
 import time
 import warnings
 from dataclasses import dataclass
@@ -91,8 +98,25 @@ class SimConfig:
     tau_eps: float = 0.03  # Cao bound: max relative propensity drift
     tau_fallback: float = 10.0  # leap only when tau covers >= this
     #   many expected SSA events (else per-lane exact SSA step)
+    # superstep width: fuse this many windows into ONE device dispatch
+    # (a lax.scan over window horizons inside the fused/sharded
+    # strategies) with the per-window records accumulated in an
+    # on-device ring and pulled per block by the engine's pipelined
+    # collector — dispatches and host syncs amortise to 1/window_block
+    # per window. 1 (default) is the unchanged per-window path;
+    # records are bitwise identical for any value (DESIGN.md §3e).
+    window_block: int = 1
 
     def __post_init__(self):
+        if self.window_block < 1:
+            raise ValueError(
+                f"SimConfig.window_block must be >= 1, got "
+                f"{self.window_block}")
+        if self.window_block > 1 and self.host_loop:
+            raise ValueError(
+                "window_block > 1 needs the fused or sharded dispatch "
+                "strategy; host_loop is the per-window round-trip "
+                "baseline (set window_block=1)")
         if self.kernel_chunk_steps < 1:
             raise ValueError(
                 f"SimConfig.kernel_chunk_steps must be >= 1, got "
@@ -173,6 +197,13 @@ class SimulationEngine:
             n_shards=n_shards)
         self._tensors_base = system_tensors(self.system)
         self._window = 0
+        # superstep pipeline (window_block > 1): windows DISPATCHED to
+        # the device run ahead of windows COLLECTED (records emitted);
+        # each in-flight block's record ring waits here until its
+        # blocking pull — which the collector hides behind the next
+        # block's device compute (run_block)
+        self._dispatched = 0
+        self._pending: collections.deque = collections.deque()
         # per-lane algorithm (the method seam): exact SSA or tau-leap —
         # the dispatch strategies consume `_lane_step` (unfused bodies)
         # and `_make_chunk_loop` (Pallas kernel bodies)
@@ -291,6 +322,8 @@ class SimulationEngine:
         samples for post-hoc use; iii: nothing beyond the running
         accumulator). HOW the pool advances (host loop / fused /
         sharded) is the dispatch strategy's concern."""
+        if self._pending:  # mixing with supersteps: drain them first
+            self.flush()
         cfg = self.cfg
         horizon = float(self.grid[self._window])
         t0 = time.perf_counter()
@@ -321,15 +354,7 @@ class SimulationEngine:
         self.n_host_syncs += 1
         if bool(pulled.get("truncated", False)):
             # a silently partial window must never become a record
-            from repro.kernels.ops import FusedWindowTruncated
-
-            raise FusedWindowTruncated(
-                f"window {self._window} (horizon {horizon:g}) "
-                f"exhausted kernel_max_chunks="
-                f"{cfg.kernel_max_chunks} x kernel_chunk_steps="
-                f"{cfg.kernel_chunk_steps} events with live lanes "
-                "still below the horizon; raise those limits or "
-                "use more windows")
+            self._raise_truncated(self._window, horizon)
         # the device sums are int32 and wrap once pool-wide cumulative
         # counts pass 2^31; tracking residues mod 2^32 and taking
         # modular deltas keeps every per-window value exact (a single
@@ -361,15 +386,174 @@ class SimulationEngine:
             ci90=pulled["ci90"], n=float(pulled["n"].max()))
         self.stream.emit(rec)
         self._window += 1
+        self._dispatched = self._window
         return rec
+
+    # -------------------------------------------------- supersteps
+    def _raise_truncated(self, window: int, horizon: float):
+        """The one FusedWindowTruncated raise for both the per-window
+        and the superstep collect path. Everything still in flight was
+        dispatched from the truncated (partial-window) pool, so the
+        pipeline is dropped first — no later accessor's flush() may
+        re-raise from a getter or turn the invalid state into records —
+        and the dispatch cursor rewinds to the collected frontier so a
+        caller that catches the error and drives on re-runs from the
+        failed window instead of silently skipping the dropped ones
+        (the per-window path has this property for free)."""
+        from repro.kernels.ops import FusedWindowTruncated
+
+        self._pending.clear()
+        self._dispatched = self._window
+        cfg = self.cfg
+        raise FusedWindowTruncated(
+            f"window {window} (horizon {horizon:g}) exhausted "
+            f"kernel_max_chunks={cfg.kernel_max_chunks} x "
+            f"kernel_chunk_steps={cfg.kernel_chunk_steps} events with "
+            "live lanes still below the horizon; raise those limits "
+            "or use more windows")
+
+    def _next_block_windows(self, limit: int) -> int:
+        """Size of the next superstep: realigned to the absolute
+        window_block grid (so an in-process mid-grid start — a
+        max_windows cut, or a restore from a window_block boundary —
+        converges back onto block boundaries; restore() itself rejects
+        MID-block checkpoints), capped by the grid end and the caller's
+        dispatch limit."""
+        w0 = self._dispatched
+        wb = self.cfg.window_block
+        return min(wb - (w0 % wb), len(self.grid) - w0, limit - w0)
+
+    def _dispatch_block(self, limit: int) -> None:
+        """Launch the next W windows as ONE device dispatch and queue
+        the resulting record ring for a later (pipelined) pull. The
+        per-window statistics folds run here EAGERLY on device arrays —
+        the same op sequence the per-window path uses — and are queued
+        with the ring; `copy_to_host_async` starts their device->host
+        movement so the blocking `device_get` in _collect_block mostly
+        finds the bytes already on host."""
+        cfg = self.cfg
+        w0 = self._dispatched
+        n_win = self._next_block_windows(limit)
+        horizons = self.grid[w0:w0 + n_win]
+        t0 = time.perf_counter()
+        res = self._dispatch.advance_block(horizons)
+        stats = (res.stats if res.stats is not None else [
+            reduction.blocked_stats(res.obs[w], self._stats_blocks)
+            for w in range(n_win)])
+        pull = dict(stats=stats, steps=res.steps_end,
+                    leaps=res.leaps_end)
+        if self._grouped_fn is not None:
+            pull["grouped"] = (res.grouped if res.grouped is not None
+                               else [self._grouped_fn(
+                                   res.obs[w], self._group_ids_dev)
+                                   for w in range(n_win)])
+        if res.truncated is not None:
+            pull["truncated"] = res.truncated
+        if cfg.schema in ("i", "ii") or self._record_trajectories:
+            pull["obs"] = res.obs
+        if res.steps_delta is not None:
+            pull["steps_delta"] = res.steps_delta
+        dispatch_wall = time.perf_counter() - t0
+        for leaf in jax.tree_util.tree_leaves(pull):
+            copy = getattr(leaf, "copy_to_host_async", None)
+            if callable(copy):
+                copy()
+        self._pending.append(
+            (w0, n_win, pull, dispatch_wall, res.obs.nbytes // n_win))
+        self._dispatched = w0 + n_win
+
+    def _collect_block(self) -> None:
+        """Blocking pull + host-side reduction of the OLDEST in-flight
+        superstep: ONE combined device_get for the whole ring (stats,
+        telemetry, truncation, optional samples/grouped), then the
+        exact per-window record emission the per-window path performs."""
+        cfg = self.cfg
+        w0, n_win, pull, dispatch_wall, obs_row_bytes = \
+            self._pending.popleft()
+        t0 = time.perf_counter()
+        pulled = jax.device_get(pull)
+        self.n_host_syncs += 1
+        wall = dispatch_wall + (time.perf_counter() - t0)
+        trunc = pulled.get("truncated")
+        for w in range(n_win):
+            self.wall_times.append(wall / n_win)
+            if trunc is not None and trunc[w]:
+                self._raise_truncated(w0 + w, float(self.grid[w0 + w]))
+            steps_cum = int(pulled["steps"][w]) & 0xFFFFFFFF
+            leaps_cum = int(pulled["leaps"][w]) & 0xFFFFFFFF
+            self.window_steps.append(
+                (steps_cum - self._cum_steps) & 0xFFFFFFFF)
+            self.window_leaps.append(
+                (leaps_cum - self._cum_leaps) & 0xFFFFFFFF)
+            self._cum_steps, self._cum_leaps = steps_cum, leaps_cum
+            if "obs" in pulled:
+                self._samples.append(np.asarray(pulled["obs"][w]))
+                self._peak_buffered = max(
+                    self._peak_buffered,
+                    sum(s.nbytes for s in self._samples))
+            else:
+                self._peak_buffered = max(self._peak_buffered,
+                                          obs_row_bytes)
+            if "grouped" in pulled:
+                self._grouped.append(reduction.Stats(
+                    *(np.asarray(v) for v in pulled["grouped"][w])))
+            if "steps_delta" in pulled:
+                # per-window EMA updates in window order — the cost
+                # state at every block boundary matches the per-window
+                # path's; regrouping itself waits for the next block
+                self.scheduler.record_costs(
+                    np.arange(cfg.n_instances),
+                    np.asarray(pulled["steps_delta"][w]))
+            s = pulled["stats"][w]
+            rec = StatsRecord(
+                t=float(self.grid[w0 + w]), window=w0 + w,
+                mean=s.mean, var=s.var, ci90=s.ci90,
+                n=float(s.n.max()))
+            self.stream.emit(rec)
+            self._window += 1
+
+    def run_block(self, dispatch_limit: Optional[int] = None,
+                  pipeline: bool = True) -> int:
+        """One turn of the pipelined superstep loop (window_block > 1):
+        dispatch the next window block if any remains below
+        `dispatch_limit` (an absolute window index), then collect the
+        oldest in-flight block once a second one is queued behind it —
+        or once dispatching is done — so host-side reduction and sinks
+        for block k run while the device simulates block k+1. With
+        `pipeline=False` the freshly dispatched block is collected
+        immediately (no dispatch-ahead) — the per-block checkpointing
+        mode, where a save after each call must land on THIS block's
+        boundary rather than flushing the next block too. Returns the
+        number of windows collected this call."""
+        limit = len(self.grid)
+        if dispatch_limit is not None:
+            limit = min(limit, dispatch_limit)
+        if self._dispatched < limit:
+            self._dispatch_block(limit)
+        before = self._window
+        if self._pending and (not pipeline or len(self._pending) > 1
+                              or self._dispatched >= limit):
+            self._collect_block()
+        return self._window - before
+
+    def flush(self) -> None:
+        """Collect every in-flight superstep so the emitted records
+        catch up with the dispatched pool state (checkpoint() forces
+        this — saves always land on a window boundary)."""
+        while self._pending:
+            self._collect_block()
 
     def _observe(self) -> jax.Array:
         cols = [self._pool.x[:, idx].sum(axis=1) for idx in self.obs_idx]
         return jnp.stack(cols, axis=1)
 
     def run(self) -> list[StatsRecord]:
-        while self._window < len(self.grid):
-            self.run_window()
+        if self.cfg.window_block == 1:
+            while self._window < len(self.grid):
+                self.run_window()
+        else:
+            while self._window < len(self.grid):
+                self.run_block()
         return self.stream.records()
 
     # ------------------------------------------------------------ fault
@@ -382,7 +566,12 @@ class SimulationEngine:
 
         Gather-on-save: `np.asarray` on a sharded pool gathers the
         global arrays, so the file never depends on the mesh shape —
-        any engine (any shard count) can restore it."""
+        any engine (any shard count) can restore it.
+
+        Supersteps: saving forces a flush — every in-flight window
+        block is collected first, so the saved pool state and the
+        saved records always agree on one window boundary."""
+        self.flush()
         p = self._pool
         extra = {}
         recs = self.stream.records()
@@ -410,6 +599,22 @@ class SimulationEngine:
 
     def restore(self, path: str) -> None:
         z = np.load(path if path.endswith(".npz") else path + ".npz")
+        # supersteps advance window_block windows per dispatch, so a
+        # resume must start on a block boundary of THIS engine's grid;
+        # a checkpoint cut mid-block (e.g. by a max_windows stop under
+        # a different window_block) is rejected up front, before any
+        # state is touched
+        saved_window = int(z["window"])
+        wb = self.cfg.window_block
+        if wb > 1 and saved_window % wb and saved_window != len(self.grid):
+            raise ValueError(
+                f"checkpoint at window {saved_window} is mid-block for "
+                f"window_block={wb}: supersteps advance {wb} windows "
+                "per dispatch, so resume needs a checkpoint on a "
+                "window_block boundary — resume with window_block=1 "
+                f"(or a divisor of {saved_window}), or re-save the "
+                "checkpoint at a multiple of window_block")
+        self._pending.clear()  # in-flight rings predate the restore
         # reshard-on-restore: checkpoints hold the gathered global pool
         # (mesh-shape-agnostic); the current dispatch re-places it on
         # whatever mesh THIS engine runs on
@@ -429,7 +634,8 @@ class SimulationEngine:
             ctr_hi=jnp.asarray(ctr_hi),
             steps=jnp.asarray(z["steps"]), leaps=jnp.asarray(leaps),
             dead=jnp.asarray(z["dead"])))
-        self._window = int(z["window"])
+        self._window = saved_window
+        self._dispatched = saved_window
         # per-window telemetry restarts from the restored cumulative
         # counts (deltas stay per-window, not since-process-start);
         # same mod-2^32 residue the wrapping device int32 sums produce
@@ -472,6 +678,7 @@ class SimulationEngine:
     def trajectories(self) -> Optional[np.ndarray]:
         """(I, T, n_obs) raw samples. Buffered for schemas i/ii; for
         schema iii only when record_trajectories was requested."""
+        self.flush()
         if not self._samples:
             return None
         return np.stack(self._samples, axis=1)
@@ -479,4 +686,5 @@ class SimulationEngine:
     def grouped_stats(self) -> list[reduction.Stats]:
         """Per-window grouped Stats ((n_groups, n_obs) leaves) when a
         grouped reduction is enabled via set_groups()."""
+        self.flush()
         return list(self._grouped)

@@ -12,6 +12,12 @@ per-lane stream (`core/stream.counter_uniforms`), the SAME stream the
 unfused `gillespie.ssa_step` consumes, so kernel↔unfused trajectories
 are bitwise identical for any `chunk_steps`, across window boundaries,
 and across shard counts.
+
+Both chunk loops are plain traced `lax.while_loop`s with no host
+dependence, so they nest unchanged under the superstep window scan
+(`SimConfig.window_block` — dispatch strategies scan W windows of
+this loop inside ONE dispatch, DESIGN.md §3e) as well as under
+shard_map.
 """
 from __future__ import annotations
 

@@ -1,1 +1,1 @@
-"""Launchers: mesh construction, dry-run, train/serve/simulate drivers."""
+"""Launchers: mesh construction, HLO analysis, the simulate CLI."""

@@ -72,6 +72,12 @@ def main() -> None:
                     "exact step")
     ap.add_argument("--kernel", action="store_true",
                     help="use the fused Pallas SSA kernel")
+    ap.add_argument("--window-block", type=int, default=1,
+                    help="superstep width: fuse this many windows into "
+                    "one device dispatch with an async pipelined "
+                    "record pull (amortises dispatches and host syncs "
+                    "to 1/N per window; records are bit-identical for "
+                    "any value; incompatible with --host-loop)")
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy per-group dispatch (benchmark baseline)")
     ap.add_argument("--devices", type=int, default=None,
@@ -105,6 +111,7 @@ def main() -> None:
         tau_fallback=args.tau_fallback,
         use_kernel=args.kernel,
         host_loop=args.host_loop,
+        window_block=args.window_block,
         partitioning=(Partitioning(n_shards=args.devices,
                                    stat_blocks=args.stat_blocks)
                       if args.devices else None))

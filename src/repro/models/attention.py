@@ -153,42 +153,10 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = Q_CHUNK,
     return outs.swapaxes(0, 1).reshape(b, sq, h, hd)
 
 
-# Selectable implementation for full-sequence attention:
-#   "auto"        — full (<=2k) else chunked online-softmax (pure JAX)
-#   "flash"       — Pallas flash kernel (TPU; interpret-mode on CPU tests)
-#   "linear_stub" — O(S) placeholder used ONLY by the dry-run's
-#                   flash-adjusted accounting: the compiled graph carries
-#                   everything except attention-score traffic, and the
-#                   kernel's analytic FLOPs/bytes are added post-hoc
-#                   (see launch/dryrun.py --attn flash).
-_ATTN_IMPL = "auto"
-
-
-def set_attention_impl(name: str) -> None:
-    global _ATTN_IMPL
-    assert name in ("auto", "flash", "linear_stub"), name
-    _ATTN_IMPL = name
-
-
-def _linear_stub(q, k, v, causal: bool):
-    """Near-free stand-in (dry-run flash accounting only): one reduction
-    over k/v plus a broadcast — keeps q/k/v (and so their projections'
-    backward matmuls) alive in the graph at negligible extra traffic."""
-    h = q.shape[-2]
-    ctx = (v.mean(axis=1, keepdims=True) + 0.01 * k.mean(axis=1,
-                                                         keepdims=True))
-    ctx = _expand_kv(ctx, h)
-    return (q * 0.01 + ctx).astype(q.dtype)
-
-
 def attention(q, k, v, *, causal: bool):
-    if _ATTN_IMPL == "linear_stub":
-        return _linear_stub(q, k, v, causal)
-    if _ATTN_IMPL == "flash":
-        from repro.kernels.flash_attention import flash_attention
-
-        interpret = jax.default_backend() != "tpu"
-        return flash_attention(q, k, v, causal, 512, 512, interpret)
+    # full attention for short sequences, chunked online-softmax above
+    # FULL_ATTN_MAX_SEQ (the pluggable flash/dry-run impl switch left
+    # with the pruned LLM-training skeleton)
     if max(q.shape[1], k.shape[1]) <= FULL_ATTN_MAX_SEQ:
         return full_attention(q, k, v, causal=causal)
     # outer checkpoint keeps cross-layer residuals at O(q,k,v,out);

@@ -1,7 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
-benches must see the real (1-device) platform; only launch/dryrun.py
-forces 512 placeholder devices. Multi-device tests run in subprocesses
-(see tests/test_distributed.py)."""
+benches must see the real (1-device) platform. Multi-device tests run
+in subprocesses that force their own host-device counts (see
+tests/test_distributed.py and tests/test_sharded.py)."""
 import numpy as np
 import pytest
 

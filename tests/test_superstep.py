@@ -1,0 +1,269 @@
+"""Multi-window supersteps (SimConfig.window_block, DESIGN.md §3e).
+
+The contract under test: fusing W windows into one dispatch (with the
+record ring pulled per block by the async collector) changes the
+dispatch/sync PROFILE and nothing else — records, grouped per-point
+stats, trajectories, and per-window step/leap telemetry are bitwise
+identical for any window_block, across the fused/kernel window bodies
+and both methods, and checkpoint/resume works at block boundaries
+(rejecting mid-block resumes with an error naming the knob).
+
+Sharded × window_block parity lives in tests/test_sharded.py (it needs
+forced host devices); telemetry-profile invariants (dispatches and
+amortised host syncs per window) live in tests/test_telemetry.py.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    ExperimentError,
+    Method,
+    Reduction,
+    Schedule,
+    simulate,
+)
+from repro.core.cwc.models import lotka_volterra
+from repro.core.engine import SimConfig
+
+N_WINDOWS = 8
+
+
+def make_exp(window_block=1, n_windows=N_WINDOWS, schema="iii",
+             policy="on_demand", reduction=Reduction.ENSEMBLE, **kw):
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=32),
+        schedule=Schedule(t_end=1.0, n_windows=n_windows, schema=schema,
+                          policy=policy),
+        reduction=reduction,
+        n_lanes=8, seed=7, window_block=window_block, **kw)
+
+
+def assert_records_bitwise(a, b, ctx=""):
+    assert len(a.records) == len(b.records), ctx
+    for ra, rb in zip(a.records, b.records):
+        assert ra.t == rb.t and ra.window == rb.window and ra.n == rb.n, ctx
+        assert (ra.mean == rb.mean).all(), ctx
+        assert (ra.var == rb.var).all(), ctx
+        assert (ra.ci90 == rb.ci90).all(), ctx
+
+
+def assert_bitwise(a, b, ctx=""):
+    assert_records_bitwise(a, b, ctx)
+    # telemetry covers the runs' own windows, so only full runs compare
+    ta, tb = a.telemetry, b.telemetry
+    assert ta.steps_per_window == tb.steps_per_window, ctx
+    assert ta.leaps_per_window == tb.leaps_per_window, ctx
+
+
+# ------------------------------------------------------------- parity
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("method", [Method.EXACT, Method.TAU_LEAP])
+def test_records_bitwise_invariant_to_window_block(use_kernel, method):
+    """The acceptance bar: window_block ∈ {1, 2, 4} × fused/kernel ×
+    exact/tau-leap all emit bit-identical records and telemetry —
+    window_block=1 IS the unchanged per-window path, so this pins the
+    superstep scan to the legacy behaviour."""
+    base = simulate(make_exp(1, use_kernel=use_kernel, method=method))
+    for wb in (2, 4):
+        got = simulate(make_exp(wb, use_kernel=use_kernel, method=method))
+        assert_bitwise(base, got, ctx=(wb, use_kernel, method))
+
+
+def test_non_dividing_window_block_runs_short_final_block():
+    """window_block that does not divide n_windows: the final block is
+    short; records still bitwise, no window dropped or duplicated."""
+    base = simulate(make_exp(1))
+    got = simulate(make_exp(3))
+    assert_bitwise(base, got)
+    assert got.windows_run == N_WINDOWS
+    # ceil(8 / 3) = 3 dispatches
+    assert got.telemetry.dispatches == 3
+
+
+def test_window_block_wider_than_grid_is_one_dispatch():
+    base = simulate(make_exp(1))
+    got = simulate(make_exp(64))
+    assert_bitwise(base, got)
+    assert got.telemetry.dispatches == 1
+    assert got.telemetry.host_syncs == 1
+
+
+def test_grouped_per_point_stats_invariant_to_window_block():
+    """PER_POINT reduction rides the same block pull (one sync per
+    block) and stays bitwise."""
+    def exp(wb):
+        return Experiment(
+            model=lotka_volterra(2),
+            ensemble=Ensemble.make(replicas=16, sweep={"die": [0.3, 1.2]}),
+            schedule=Schedule(t_end=1.0, n_windows=4, schema="iii"),
+            reduction=Reduction.PER_POINT,
+            n_lanes=8, seed=11, window_block=wb)
+
+    base, got = simulate(exp(1)), simulate(exp(4))
+    pb, pg = base.per_point(), got.per_point()
+    for k in ("n", "mean", "var", "ci90"):
+        assert (pb[k] == pg[k]).all(), k
+
+
+@pytest.mark.parametrize("schema", ["i", "ii"])
+def test_buffering_schemas_keep_trajectories_bitwise(schema):
+    base = simulate(make_exp(1, schema=schema))
+    got = simulate(make_exp(4, schema=schema))
+    assert (base.trajectories() == got.trajectories()).all()
+    assert_bitwise(base, got)
+
+
+def test_record_trajectories_under_schema_iii():
+    base = simulate(make_exp(1, record_trajectories=True))
+    got = simulate(make_exp(4, record_trajectories=True))
+    assert (base.trajectories() == got.trajectories()).all()
+
+
+def test_predictive_policy_composes_with_supersteps():
+    """Predictive EMA costs update per window at collect time, so the
+    cost state matches the per-window path at every block boundary;
+    regrouping at block (not window) cadence never changes a
+    trajectory (lane groups are packaging, not semantics)."""
+    base = simulate(make_exp(1, policy="predictive"))
+    got = simulate(make_exp(4, policy="predictive"))
+    assert_bitwise(base, got)
+    assert np.array_equal(base._engine.scheduler._cost,
+                          got._engine.scheduler._cost)
+
+
+# -------------------------------------------------- checkpoint/resume
+def test_checkpoint_resume_at_block_boundary_is_bitwise():
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    clean = simulate(make_exp(4))
+    simulate(make_exp(4), max_windows=4, checkpoint_path=ck)
+    z = np.load(ck + ".npz")
+    assert int(z["window"]) == 4  # save forced a flush: block boundary
+    resumed = simulate(make_exp(4), checkpoint_path=ck, resume=True)
+    assert_records_bitwise(clean, resumed)
+
+
+def test_checkpoint_resumes_across_window_block_values():
+    """A block-boundary checkpoint is just a window-boundary
+    checkpoint: any window_block dividing its index (including 1)
+    resumes it bitwise."""
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    clean = simulate(make_exp(1))
+    simulate(make_exp(4), max_windows=4, checkpoint_path=ck)
+    for wb in (1, 2, 4):
+        resumed = simulate(make_exp(wb), checkpoint_path=ck, resume=True)
+        assert_records_bitwise(clean, resumed, ctx=wb)
+
+
+def test_mid_block_resume_rejected_naming_the_knob():
+    """A checkpoint cut mid-block (here by a wb=1 run stopping at
+    window 3) cannot seed a wb=4 resume — supersteps advance 4 windows
+    per dispatch — and the error must name window_block."""
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    simulate(make_exp(1), max_windows=3, checkpoint_path=ck)
+    with pytest.raises(ExperimentError, match="window_block"):
+        simulate(make_exp(4), checkpoint_path=ck, resume=True)
+    # a dividing window_block is fine
+    resumed = simulate(make_exp(3), checkpoint_path=ck, resume=True)
+    assert_records_bitwise(simulate(make_exp(1)), resumed)
+
+
+def test_save_mid_run_forces_flush_of_inflight_block():
+    """Engine-level: checkpoint() while a superstep is in flight
+    collects it first, so the saved pool state and records agree."""
+    from repro.api.run import build_engine
+
+    eng = build_engine(make_exp(4))
+    eng.run_block()  # dispatches block 0, collects nothing (pipelined)
+    assert eng._dispatched == 4 and eng._window == 0
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    eng.checkpoint(ck)
+    assert eng._window == 4  # the flush
+    z = np.load(ck + ".npz")
+    assert int(z["window"]) == 4
+    assert len(z["rec_t"]) == 4
+
+
+def test_checkpointing_saves_on_every_block_boundary():
+    """A checkpoint_path run saves after every block, ON that block's
+    boundary — the dispatch-ahead is disabled so a save never flushes
+    the NEXT block's windows into the file (regression: the pipelined
+    loop used to checkpoint only every second block)."""
+    from repro.api.result import SimulationResult
+    from repro.api.run import build_engine
+
+    exp = make_exp(2)
+    eng = build_engine(exp)
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    saves = []
+    orig = eng.checkpoint
+    eng.checkpoint = lambda p: (orig(p), saves.append(eng._window))
+    SimulationResult(exp, eng).resume(checkpoint_path=ck)
+    assert saves == [2, 4, 6, 8]
+    assert_records_bitwise(simulate(make_exp(1)),
+                           SimulationResult(exp, eng))
+
+
+def test_max_windows_can_cut_a_block_short_and_realign():
+    """max_windows stops mid-block via a short dispatch; the
+    in-process continuation realigns to the absolute block grid and
+    stays bitwise."""
+    clean = simulate(make_exp(4))
+    r = simulate(make_exp(4), max_windows=3)
+    assert r.windows_run == 3
+    r.resume()
+    assert_bitwise(clean, r)
+
+
+# ------------------------------------------------------- error paths
+def test_truncation_raises_naming_the_failing_window():
+    from repro.kernels.ops import FusedWindowTruncated
+
+    with pytest.raises(FusedWindowTruncated, match="window 0"):
+        simulate(make_exp(4, use_kernel=True, kernel_chunk_steps=1,
+                          kernel_max_chunks=1))
+
+
+def test_truncation_drops_the_inflight_pipeline():
+    """When block k truncates, block k+1 (already dispatched from the
+    partial-window pool) must be dropped — a later accessor's flush
+    must neither re-raise from a getter nor turn the invalid state
+    into records."""
+    from repro.api.run import build_engine
+    from repro.kernels.ops import FusedWindowTruncated
+
+    eng = build_engine(make_exp(2, use_kernel=True, kernel_chunk_steps=1,
+                                kernel_max_chunks=1))
+    eng.run_block()  # dispatch block 0 (pipelined: nothing collected)
+    with pytest.raises(FusedWindowTruncated):
+        eng.run_block()  # dispatches block 1, then collects block 0
+    assert not eng._pending
+    assert eng.grouped_stats() == []  # accessors flush without raising
+    assert eng.stream.records() == []  # no record from invalid state
+    # the dispatch cursor rewound to the collected frontier: a caller
+    # driving on re-runs from the failed window, never skipping any
+    assert eng._dispatched == eng._window == 0
+
+
+def test_window_block_validation():
+    with pytest.raises(ExperimentError, match="window_block"):
+        make_exp(0).validate()
+    with pytest.raises(ExperimentError, match="host_loop"):
+        make_exp(4, host_loop=True).validate()
+    with pytest.raises(ValueError, match="window_block"):
+        SimConfig(window_block=0)
+    with pytest.raises(ValueError, match="host_loop"):
+        SimConfig(window_block=2, host_loop=True)
+    # window_block=1 + host_loop stays legal (the baseline)
+    SimConfig(window_block=1, host_loop=True)
+
+
+def test_sinks_receive_records_in_window_order():
+    seen = []
+    simulate(make_exp(4, sinks=(lambda rec: seen.append(rec.window),)))
+    assert seen == list(range(N_WINDOWS))

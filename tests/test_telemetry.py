@@ -1,0 +1,94 @@
+"""Dispatch/sync-profile regression tests (promoted from the
+bench-smoke job so a profile regression fails `pytest`, not just CI's
+benchmark gate).
+
+The profile contract per dispatch path (BENCH_PR5.json records the
+same numbers at benchmark scale):
+
+  host_loop   : one dispatch per (group × window), 1 blocking pull per
+                window;
+  fused       : ONE dispatch per window, exactly 1 blocking pull per
+                window (the combined record pull — PR4 folded the
+                kernel truncation flag into it);
+  supersteps  : window_block=W fuses W windows into one dispatch and
+                one block pull, so BOTH amortise to 1/W per window.
+"""
+import pytest
+
+from repro.api import Ensemble, Experiment, Method, Schedule, simulate
+from repro.core.cwc.models import lotka_volterra
+
+N_INSTANCES, N_LANES, N_WINDOWS = 32, 8, 8
+N_GROUPS = N_INSTANCES // N_LANES  # host-loop dispatches per window
+
+
+def run(**kw):
+    res = simulate(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=N_INSTANCES),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        n_lanes=N_LANES, seed=7, **kw))
+    t = res.telemetry
+    return (t.dispatches / N_WINDOWS, t.host_syncs / N_WINDOWS)
+
+
+def test_host_loop_profile():
+    disp, syncs = run(host_loop=True)
+    assert disp == N_GROUPS
+    assert syncs == 1.0
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_per_window_paths_are_one_dispatch_one_sync(use_kernel):
+    disp, syncs = run(use_kernel=use_kernel)
+    assert disp == 1.0, f"kernel={use_kernel}"
+    assert syncs == 1.0, f"kernel={use_kernel}"
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("method", [Method.EXACT, Method.TAU_LEAP])
+def test_superstep_amortises_dispatches_and_syncs(use_kernel, method):
+    """The PR5 acceptance numbers: at window_block=4 both
+    dispatches/window and amortised host_syncs/window are 0.25 —
+    ≤ 0.25 and < 1.0 respectively."""
+    disp, syncs = run(window_block=4, use_kernel=use_kernel,
+                      method=method)
+    assert disp <= 0.25, (use_kernel, method)
+    assert syncs < 1.0, (use_kernel, method)
+    assert syncs == disp == 0.25, (use_kernel, method)
+
+
+def test_superstep_amortises_trajectory_and_grouped_pulls():
+    """Per-window paths pay extra pulls for buffered samples; the block
+    collector folds samples into the one ring pull, so even a
+    trajectory-buffering run stays below 1 sync per window."""
+    from repro.api import Reduction
+
+    res = simulate(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=16, sweep={"die": [0.3, 1.2]}),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        reduction=Reduction.PER_POINT, record_trajectories=True,
+        n_lanes=N_LANES, seed=7, window_block=4))
+    t = res.telemetry
+    assert t.dispatches / N_WINDOWS == 0.25
+    assert t.host_syncs / N_WINDOWS < 1.0
+
+
+def test_superstep_pipeline_stays_one_block_deep():
+    """The collector double-buffers: after the steady-state turn of
+    run_block there is exactly one in-flight block (dispatch k+1
+    happened before the blocking pull of k)."""
+    from repro.api.run import build_engine
+
+    eng = build_engine(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=N_INSTANCES),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        n_lanes=N_LANES, seed=7, window_block=2))
+    eng.run_block()
+    assert len(eng._pending) == 1 and eng._window == 0
+    eng.run_block()  # dispatches block 1, THEN collects block 0
+    assert len(eng._pending) == 1 and eng._window == 2
+    eng.flush()
+    assert not eng._pending and eng._window == 4
