@@ -1,7 +1,7 @@
-"""Small-scale benchmark smoke run -> BENCH_PR5.json (the perf
-trajectory's superstep point).
+"""Small-scale benchmark smoke run -> BENCH_PR6.json (the perf
+trajectory's superstep + steering point).
 
-Three sections, all CI-sized and deterministic:
+Four sections, all CI-sized and deterministic:
 
 * `window_step_path` — host_loop vs window_step vs Pallas kernel, now
   each non-baseline path also at `window_block=4` (supersteps: 4
@@ -21,6 +21,12 @@ Three sections, all CI-sized and deterministic:
 * `tau_wall_clock` — the birth-death wall-clock speedup of tau-leaping
   over exact SSA (stat_smoke's gated section; BENCH_PR4 recorded only
   the step-count ratio).
+* `early_stop` — the steering savings row (steering_smoke): on a
+  mixed-variance immigration-death sweep, convergence early-stopping
+  must simulate >= 1.2x fewer point-windows than the unsteered run
+  while every point's final mean stays within 3 sigma of the analytic
+  value at its freeze time and the never-stopped point stays BITWISE
+  the unsteered run's.
 
   PYTHONPATH=src python benchmarks/bench_smoke.py [out.json]
 """
@@ -33,7 +39,12 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 
-from benchmarks import sharded_farm, stat_smoke, window_step_path  # noqa: E402
+from benchmarks import (  # noqa: E402
+    sharded_farm,
+    stat_smoke,
+    steering_smoke,
+    window_step_path,
+)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # 12 windows: warmup eats one block (4 windows at window_block=4, 1 at
@@ -138,9 +149,10 @@ def farm_section():
 
 def main() -> None:
     out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        REPO, "BENCH_PR5.json")
+        REPO, "BENCH_PR6.json")
     paths = window_section()
     farm = farm_section()
+    early_stop = steering_smoke.early_stop_section()
     bd = stat_smoke.birth_death_section()
     tau_wall = {
         "exact_wall_per_window_ms": bd["exact"]["wall_per_window_ms"],
@@ -149,7 +161,7 @@ def main() -> None:
         "wall_speedup_tau_vs_exact": bd["wall_speedup_tau_vs_exact"],
     }
     doc = {
-        "pr": 5,
+        "pr": 6,
         "generated_by": "benchmarks/bench_smoke.py",
         "config": {
             "wall_measure": (
@@ -177,10 +189,21 @@ def main() -> None:
                 "lanes": stat_smoke.N_LANES,
                 "windows": stat_smoke.N_WINDOWS,
                 "t_end": stat_smoke.BD_T_END},
+            "early_stop": {
+                "model": "immigration_death",
+                "sweep_birth": list(steering_smoke.BD_LAMS),
+                "replicas": steering_smoke.REPLICAS,
+                "lanes": steering_smoke.N_LANES,
+                "windows": steering_smoke.N_WINDOWS,
+                "t_end": steering_smoke.T_END,
+                "window_block": steering_smoke.WINDOW_BLOCK,
+                "ci_rel_tol": steering_smoke.CI_REL_TOL,
+                "min_windows": steering_smoke.MIN_WINDOWS},
         },
         "window_step_path": paths,
         "sharded_farm": farm,
         "tau_wall_clock": tau_wall,
+        "early_stop": early_stop,
         "invariants": {
             "all_paths_bitwise_identical": True,
             "records_match_bench_pr3_digest": True,
@@ -188,6 +211,9 @@ def main() -> None:
             "superstep_host_syncs_per_window_lt_1": True,
             "superstep_wall_beats_per_window_baseline": True,
             "tau_leap_wall_speedup_birth_death_ge_1p2x": True,
+            "early_stop_point_windows_saved_ge_1p2x": True,
+            "early_stop_final_means_within_3_sigma": True,
+            "early_stop_live_points_bitwise_vs_unsteered": True,
         },
     }
     with open(out_path, "w") as f:

@@ -1,0 +1,126 @@
+"""Early-stop steering benchmark -> the BENCH_PR6 savings row.
+
+A mixed-variance immigration-death sweep (X(t) ~ Poisson(m(t)),
+m(t) = (lam/mu)(1 - e^{-mu t})): the relative CI half-width at
+saturation is 1.645 / sqrt(replicas * lam / mu), so high-lam points
+converge (in relative terms) well before low-lam ones. With
+`Steering(ci_rel_tol=...)` the converged points early-stop at the
+first decision point past `min_windows`, freezing their lanes while
+the noisy point runs the full grid.
+
+Gates (CI asserts both):
+* point-windows simulated with convergence stopping must be >= 1.2x
+  fewer than without (the unsteered run always simulates
+  n_points x n_windows);
+* moment accuracy is unchanged: every point's final mean stays within
+  3 sigma of the analytic Poisson value, and the never-stopped point's
+  final record is BITWISE the unsteered run's (steering never touches
+  a live lane when reallocation is off).
+
+  PYTHONPATH=src python benchmarks/steering_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.api import (  # noqa: E402
+    Ensemble,
+    Experiment,
+    Reduction,
+    Schedule,
+    SketchSpec,
+    Steering,
+    simulate,
+)
+from repro.core.reactions import make_system  # noqa: E402
+
+BD_MU = 1.0
+BD_LAMS = (50.0, 200.0, 800.0)  # mixed variance: rel CI ~ 1/sqrt(lam)
+REPLICAS, N_LANES = 64, 16
+N_WINDOWS, T_END = 12, 12.0
+WINDOW_BLOCK = 2
+CI_REL_TOL = 0.02  # stops lam=200/800; lam=50 stays noisy (~0.029)
+MIN_WINDOWS = 6    # m(6)/m(inf) = 99.75% — freeze bias << sigma
+SEED = 11
+
+
+def _model():
+    return make_system(
+        ["A"],
+        [({}, {"A": 1}, BD_LAMS[0]), ({"A": 1}, {}, BD_MU)],
+        {"A": 0}, names=("birth", "death"))
+
+
+def _experiment(steering):
+    return Experiment(
+        model=_model(),
+        ensemble=Ensemble.make(replicas=REPLICAS,
+                               sweep={"birth": list(BD_LAMS)}),
+        schedule=Schedule(t_end=T_END, n_windows=N_WINDOWS),
+        reduction=Reduction.PER_POINT,
+        n_lanes=N_LANES, seed=SEED, window_block=WINDOW_BLOCK,
+        sketch=SketchSpec(n_bins=32),
+        steering=steering)
+
+
+def early_stop_section() -> dict:
+    base = simulate(_experiment(None))
+    steered = simulate(_experiment(
+        Steering(ci_rel_tol=CI_REL_TOL, min_windows=MIN_WINDOWS)))
+    rep = steered.steering_report()
+    total = rep["point_windows_total"]
+    simulated = rep["point_windows_simulated"]
+    ratio = rep["windows_saved_ratio"]
+    print(f"early_stop: {len(rep['stopped_points'])}/{rep['n_points']} "
+          f"points stopped at {rep['stop_windows']}; point-windows "
+          f"{simulated}/{total} simulated ({ratio:.2f}x fewer)")
+    assert ratio >= 1.2, (
+        f"early-stop saved only {ratio:.2f}x point-windows "
+        f"({simulated}/{total}); the >= 1.2x gate failed")
+
+    # moment gate: every point's final mean within 3 sigma of the
+    # analytic value at its freeze time (a stopped point's record is
+    # frozen at its stop window, so that is the time it estimates)
+    pp = steered.per_point()
+    dt = T_END / N_WINDOWS
+    zs = {}
+    for p, lam in enumerate(BD_LAMS):
+        t_freeze = rep["stop_windows"].get(p, N_WINDOWS) * dt
+        m_true = lam / BD_MU * (1 - np.exp(-BD_MU * t_freeze))
+        sd_mean = np.sqrt(m_true / REPLICAS)  # Poisson var = mean
+        zs[f"birth={lam:g}"] = round(float(
+            abs(pp["mean"][-1, p, 0] - m_true) / sd_mean), 3)
+    print(f"early_stop: final-mean z-scores vs analytic: {zs}")
+    assert max(zs.values()) <= 3.0, (
+        f"steered final means drifted beyond 3 sigma: {zs}")
+
+    # never-stopped points are untouched: bitwise vs the unsteered run
+    base_pp = base.per_point()
+    live = [p for p in range(len(BD_LAMS))
+            if p not in rep["stopped_points"]]
+    assert live, "expected at least one point to stay live"
+    for p in live:
+        assert (pp["mean"][-1, p] == base_pp["mean"][-1, p]).all(), (
+            f"live point {p} diverged from the unsteered run")
+    return {
+        "point_windows_total": total,
+        "point_windows_simulated": simulated,
+        "windows_saved_ratio": round(ratio, 3),
+        "stopped_points": rep["stopped_points"],
+        "stop_windows": {str(k): v
+                         for k, v in rep["stop_windows"].items()},
+        "final_mean_z_vs_analytic": zs,
+        "live_points_bitwise_vs_unsteered": True,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(early_stop_section(), indent=2))

@@ -29,6 +29,8 @@ from repro.api.spec import (
     Reduction,
     Schedule,
     Schema,
+    SketchSpec,
+    Steering,
 )
 from repro.core.stream import CsvSink
 from repro.core.sweep import SweepSpec
@@ -45,6 +47,8 @@ __all__ = [
     "Schedule",
     "Schema",
     "SimulationResult",
+    "SketchSpec",
+    "Steering",
     "SweepSpec",
     "Telemetry",
     "simulate",

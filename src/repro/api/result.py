@@ -51,6 +51,12 @@ class Telemetry:
     peak_rss_bytes: Optional[int]
     steps_per_window: tuple = ()
     leaps_per_window: tuple = ()
+    # straggler watchdog (runtime/straggler.py): (window, wall_s,
+    # rolling_median) entries whose wall share exceeded the watchdog
+    # factor x the rolling median, and the flagged fraction over the
+    # watchdog's observation history
+    straggler_windows: tuple = ()
+    straggler_rate: float = 0.0
 
 
 def _peak_rss_bytes() -> Optional[int]:
@@ -92,7 +98,9 @@ class SimulationResult:
         t0 = time.perf_counter()
         done = 0
         try:
-            if eng.cfg.window_block == 1:
+            # steered runs always use the block loop (decision points
+            # live at collected block boundaries), even window_block=1
+            if eng.cfg.window_block == 1 and eng._steer is None:
                 while eng._window < len(eng.grid) and (
                         max_windows is None or done < max_windows):
                     eng.run_window()
@@ -175,6 +183,21 @@ class SimulationResult:
         """(I, S) species counts at the last completed window."""
         return np.asarray(self._engine._pool.x)
 
+    def sketches(self) -> list:
+        """Per-window `WindowSketch`es (hist (G, n_obs, n_bins) int32,
+        rare (G, n_obs, n_thr) int32 or None) when the Experiment
+        carried a SketchSpec; empty list otherwise. Derive quantiles or
+        bimodality flags with `repro.stats.quantiles_from_hist` /
+        `bimodality_from_hist`."""
+        return self._engine.sketches()
+
+    def steering_report(self) -> Optional[dict]:
+        """The steering policy's savings + decision summary (stopped
+        points, windows saved, pinned lanes, bimodal flags, decision
+        log), or None when the Experiment carried no active
+        Steering."""
+        return self._engine.steering_report()
+
     # ------------------------------------------------------ telemetry
     @property
     def telemetry(self) -> Telemetry:
@@ -187,7 +210,9 @@ class SimulationResult:
             host_syncs=eng.n_host_syncs,
             peak_rss_bytes=_peak_rss_bytes(),
             steps_per_window=tuple(eng.window_steps),
-            leaps_per_window=tuple(eng.window_leaps))
+            leaps_per_window=tuple(eng.window_leaps),
+            straggler_windows=tuple(eng.watchdog.flagged),
+            straggler_rate=eng.watchdog.straggler_rate())
 
     def __repr__(self) -> str:
         state = "completed" if self.completed else (

@@ -61,7 +61,8 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         engine = SimulationEngine(
             experiment.model, cfg, mesh=mesh, group_ids=group_ids,
             record_trajectories=experiment.record_trajectories,
-            partitioning=part, _deprecated=False)
+            partitioning=part, sketch=experiment.sketch,
+            steering=experiment.steering, _deprecated=False)
     except ValueError as e:
         # dispatch-seam errors (device count, mesh/partitioning
         # mismatch) surface in the API's vocabulary

@@ -22,10 +22,13 @@ from repro.core.cwc.rules import CWCModel
 from repro.core.dispatch import Partitioning
 from repro.core.reactions import ReactionSystem
 from repro.core.sweep import SweepSpec
+from repro.stats.sketch import SketchSpec
+from repro.steer.policy import Steering
 
 __all__ = [
     "Ensemble", "Experiment", "ExperimentError", "Method",
     "Partitioning", "Policy", "Reduction", "Schedule", "Schema",
+    "SketchSpec", "Steering",
 ]
 
 
@@ -229,6 +232,19 @@ class Experiment:
     checkpoint_path, saves land on block boundaries (a save forces the
     in-flight block to be collected first), and resuming needs a
     checkpoint on a window_block boundary.
+    sketch: stream device-side per-window sketches (fixed-bin
+    histograms, rare-event counters — repro/stats, DESIGN.md §3f)
+    alongside the Welford records; read them back via
+    `SimulationResult.sketches()`. Integer-count merges keep them
+    bitwise identical across dispatch paths, shard counts, and
+    superstep widths.
+    steering: adaptive between-block control (repro/steer) — early-stop
+    converged sweep points, reallocate their freed replicas, per-lane
+    exact<->tau auto-switch, bimodality flags. Decisions are a pure
+    function of (seed, Steering), ride checkpoints, and `Steering()`
+    (all levers off) is bitwise identical to no steering at all.
+    Incompatible with host_loop (no block boundary to steer at);
+    bimodality needs a sketch; tau_switch needs Method.TAU_LEAP.
     """
 
     model: Union[CWCModel, ReactionSystem]
@@ -248,6 +264,8 @@ class Experiment:
     tau_eps: float = 0.03
     tau_fallback: float = 10.0
     window_block: int = 1
+    sketch: Optional[SketchSpec] = None
+    steering: Optional[Steering] = None
 
     def __post_init__(self):
         object.__setattr__(self, "method", Method.coerce(self.method))
@@ -319,6 +337,39 @@ class Experiment:
                     "partitioning with n_shards > 1 is incompatible "
                     "with host_loop (a host-driven single-device "
                     "baseline); use_kernel composes with sharding")
+        if self.sketch is not None:
+            if not isinstance(self.sketch, SketchSpec):
+                raise ExperimentError(
+                    "Experiment.sketch must be a SketchSpec, "
+                    f"got {type(self.sketch).__name__}")
+            try:
+                self.sketch.validate()
+            except ValueError as e:
+                raise ExperimentError(str(e)) from e
+        if self.steering is not None:
+            if not isinstance(self.steering, Steering):
+                raise ExperimentError(
+                    "Experiment.steering must be a Steering, "
+                    f"got {type(self.steering).__name__}")
+            try:
+                self.steering.validate()
+            except ValueError as e:
+                raise ExperimentError(str(e)) from e
+            if self.steering.enabled:
+                if self.host_loop:
+                    raise ExperimentError(
+                        "steering is driven from the superstep "
+                        "collector; host_loop has no block boundary "
+                        "to steer at")
+                if self.steering.bimodality and self.sketch is None:
+                    raise ExperimentError(
+                        "Steering.bimodality reads window histograms; "
+                        "set Experiment.sketch as well")
+                if self.steering.tau_switch \
+                        and self.method is not Method.TAU_LEAP:
+                    raise ExperimentError(
+                        "Steering.tau_switch only applies to "
+                        "method=Method.TAU_LEAP runs")
         for s in self.sinks:
             if not callable(s):
                 raise ExperimentError(f"sink {s!r} is not callable")

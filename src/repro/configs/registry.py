@@ -13,12 +13,10 @@ from repro.configs import (
     deepseek_moe_16b,
     gemma_7b,
     internvl2_1b,
-    jamba_v0p1_52b,
     llama3_8b,
     olmoe_1b_7b,
     seamless_m4t_large_v2,
     starcoder2_7b,
-    xlstm_1p3b,
 )
 from repro.configs.base import (
     ALL_SHAPES,
@@ -32,8 +30,6 @@ _MODULES = {
     "olmoe-1b-7b": olmoe_1b_7b,
     "deepseek-moe-16b": deepseek_moe_16b,
     "internvl2-1b": internvl2_1b,
-    "xlstm-1.3b": xlstm_1p3b,
-    "jamba-v0.1-52b": jamba_v0p1_52b,
     "llama3-8b": llama3_8b,
     "starcoder2-7b": starcoder2_7b,
     "command-r-35b": command_r_35b,
@@ -61,8 +57,6 @@ _DEFAULT_STRATEGY: dict[str, ShardingConfig] = {
     "olmoe-1b-7b": ShardingConfig(strategy="fsdp_tp", grad_accum=2),
     "deepseek-moe-16b": ShardingConfig(strategy="fsdp_tp", grad_accum=2),
     "internvl2-1b": ShardingConfig(strategy="dp_tp", grad_accum=1),
-    "xlstm-1.3b": ShardingConfig(strategy="fsdp_tp", grad_accum=2),
-    "jamba-v0.1-52b": ShardingConfig(strategy="fsdp_tp", grad_accum=8),
     "llama3-8b": ShardingConfig(strategy="fsdp_tp", grad_accum=4),
     "starcoder2-7b": ShardingConfig(strategy="fsdp_tp", grad_accum=4),
     "command-r-35b": ShardingConfig(strategy="fsdp_tp", grad_accum=8),
@@ -80,9 +74,9 @@ def default_sharding(name: str, shape: ShapeConfig | None = None,
         return cfg
     if shape.kind in ("decode", "prefill"):
         # Inference holds no optimizer state: FSDP-sharded weights would
-        # be all-gathered EVERY step (measured: 181 GB/step on jamba
-        # decode — §Perf H2). Serving layout = TP only, replicated over
-        # the data axes.
+        # be all-gathered EVERY step (measured: 181 GB/step on a 52B
+        # MoE decode — §Perf H2). Serving layout = TP only, replicated
+        # over the data axes.
         cfg = dataclasses.replace(cfg, strategy="dp_tp", grad_accum=1)
     if shape.name == "long_500k":
         # batch=1, 500k KV/state: shard the cache sequence axis over `data`.

@@ -68,6 +68,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.core import reduction
 from repro.core.gillespie import LaneState, ssa_step
+from repro.stats.sketch import window_sketch
 
 
 @dataclass(frozen=True)
@@ -133,6 +134,11 @@ class WindowResult(NamedTuple):
     the fused window's chunk budget ran out with live lanes below the
     horizon (the engine raises FusedWindowTruncated); None on the
     unfused paths, whose while_loop has no chunk budget.
+    sketch: (hist, rare) int32 device sketches (repro/stats) when the
+    engine configured a SketchSpec — reduced device-side with one psum
+    under the sharded strategy (integer sums: shard partials are
+    bitwise the full-pool counts), or None when the engine should
+    compute them eagerly from `obs` (fused strategy).
     """
 
     obs: Any
@@ -140,6 +146,7 @@ class WindowResult(NamedTuple):
     stats: Optional[reduction.Stats]
     grouped: Optional[reduction.Stats]
     truncated: Any = None
+    sketch: Any = None
 
 
 class BlockResult(NamedTuple):
@@ -165,6 +172,10 @@ class BlockResult(NamedTuple):
     truncated: (W,) int32 on the kernel paths — nonzero entries mark
     windows whose chunk budget ran out (the collector raises
     FusedWindowTruncated naming the first one); None on unfused paths.
+    sketch: (hist, rare) stacked (W, ...) int32 sketches riding the
+    ring (sharded strategy, one psum each — exact integer sums), or
+    None when the engine computes them eagerly from `obs` rows (fused
+    strategy).
     """
 
     obs: Any
@@ -174,6 +185,7 @@ class BlockResult(NamedTuple):
     grouped: Optional[list] = None
     steps_delta: Any = None
     truncated: Any = None
+    sketch: Any = None
 
 
 def _obs_extractor(obs_idx):
@@ -536,6 +548,7 @@ class ShardedDispatch(_Dispatch):
         v_loc = part.blocks // n_shards
         n_groups = eng._n_groups if grouped else 0
         use_kernel = eng.cfg.use_kernel
+        sk = eng._sketch  # SketchParams or None (frozen per engine)
         idx_t, coef_t, delta_t, _ = eng._tensors_base
         if use_kernel:
             # per-shard Pallas fused window: the paper's two families
@@ -577,10 +590,24 @@ class ShardedDispatch(_Dispatch):
                 gstack = reduction.gather_blocks_over_axis(gacc, axis,
                                                            n_shards)
                 outs = outs + (gstack,)
+            if sk is not None:
+                # int32 counts: shard-partial psum is bitwise the
+                # full-pool sum (integer addition is associative with
+                # exact identity), so sketches are mesh-shape-agnostic
+                g = gids if grouped else jnp.zeros((obs.shape[0],),
+                                                   jnp.int32)
+                hist, rare = window_sketch(
+                    obs, g, n_groups if grouped else 1, sk.lo, sk.width,
+                    sk.n_bins, sk.thresholds if sk.n_thr else None)
+                outs = outs + (jax.lax.psum(hist, axis),)
+                if rare is not None:
+                    outs = outs + (jax.lax.psum(rare, axis),)
             return outs
 
         sh = P(axis)
         out_specs = (sh, sh, sh, P(), P()) + ((P(),) if grouped else ())
+        if sk is not None:
+            out_specs = out_specs + (P(),) * (1 + (1 if sk.n_thr else 0))
         # the kernel body never reads the scheduler permutation (its
         # lane-block grid IS the grouping) — drop the operand so the
         # host neither assembles nor ships it each window
@@ -624,6 +651,7 @@ class ShardedDispatch(_Dispatch):
         n_groups = eng._n_groups if grouped else 0
         use_kernel = eng.cfg.use_kernel
         predictive = eng.scheduler.policy == "predictive"
+        sk = eng._sketch
         idx_t, coef_t, delta_t, _ = eng._tensors_base
         if use_kernel:
             kbody = make_kernel_window_body(
@@ -659,6 +687,16 @@ class ShardedDispatch(_Dispatch):
                         obs, gids, n_groups, v_loc)
                     ring = ring + (reduction.gather_blocks_over_axis(
                         gacc, axis, n_shards),)
+                if sk is not None:
+                    g = gids if grouped else jnp.zeros(
+                        (obs.shape[0],), jnp.int32)
+                    hist, rare = window_sketch(
+                        obs, g, n_groups if grouped else 1, sk.lo,
+                        sk.width, sk.n_bins,
+                        sk.thresholds if sk.n_thr else None)
+                    ring = ring + (jax.lax.psum(hist, axis),)
+                    if rare is not None:
+                        ring = ring + (jax.lax.psum(rare, axis),)
                 if predictive:
                     ring = ring + (steps_d,)
                 return new_pool, ring
@@ -670,6 +708,9 @@ class ShardedDispatch(_Dispatch):
         ring_specs = (rsh, P(), P(), P(), P())
         if grouped:
             ring_specs = ring_specs + (P(),)
+        if sk is not None:
+            ring_specs = ring_specs + (P(),) * (1 + (1 if sk.n_thr
+                                                     else 0))
         if predictive:
             ring_specs = ring_specs + (rsh,)
         out_specs = (sh, ring_specs)
@@ -712,8 +753,21 @@ class ShardedDispatch(_Dispatch):
             *step_args, jnp.asarray(horizons, jnp.float32))
         eng.n_dispatches += 1
         obs, trunc, stack, steps_end, leaps_end = ring[:5]
-        gstack = ring[5] if grouped else None
-        steps_delta = ring[-1] if predictive else None
+        i = 5
+        gstack = None
+        if grouped:
+            gstack = ring[i]
+            i += 1
+        sketch = None
+        if eng._sketch is not None:
+            hist = ring[i]
+            i += 1
+            rare = None
+            if eng._sketch.n_thr:
+                rare = ring[i]
+                i += 1
+            sketch = (hist, rare)
+        steps_delta = ring[i] if predictive else None
         n_windows = len(horizons)
         # per-window eager fold — the exact op sequence the per-window
         # sharded advance() (and the unsharded path) uses
@@ -728,7 +782,8 @@ class ShardedDispatch(_Dispatch):
         return BlockResult(
             obs=obs, steps_end=steps_end, leaps_end=leaps_end,
             stats=stats, grouped=gstats, steps_delta=steps_delta,
-            truncated=(trunc if eng.cfg.use_kernel else None))
+            truncated=(trunc if eng.cfg.use_kernel else None),
+            sketch=sketch)
 
     def advance(self, horizon) -> WindowResult:
         eng = self.eng
@@ -742,17 +797,27 @@ class ShardedDispatch(_Dispatch):
             step_args.append(eng._permutation())
         if grouped:
             step_args.append(eng._group_ids_dev)
-            eng._pool, obs, steps_delta, trunc, stack, gstack = \
-                self._step(*step_args, horizon)
-            gstats = reduction.finalize(reduction.merge_blocks(gstack))
-        else:
-            eng._pool, obs, steps_delta, trunc, stack = self._step(
-                *step_args, horizon)
-            gstats = None
+        outs = self._step(*step_args, horizon)
+        eng._pool, obs, steps_delta, trunc, stack = outs[:5]
+        i = 5
+        gstats = None
+        if grouped:
+            gstats = reduction.finalize(reduction.merge_blocks(outs[i]))
+            i += 1
+        sketch = None
+        if eng._sketch is not None:
+            hist = outs[i]
+            i += 1
+            rare = None
+            if eng._sketch.n_thr:
+                rare = outs[i]
+                i += 1
+            sketch = (hist, rare)
         stats = reduction.finalize(reduction.merge_blocks(stack))
         eng.n_dispatches += 1
         truncated = trunc if eng.cfg.use_kernel else None
-        return WindowResult(obs, steps_delta, stats, gstats, truncated)
+        return WindowResult(obs, steps_delta, stats, gstats, truncated,
+                            sketch)
 
 
 def select_dispatch(engine, mesh):

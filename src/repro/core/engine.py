@@ -70,6 +70,9 @@ from repro.core.gillespie import (
 from repro.core.reactions import ReactionSystem
 from repro.core.scheduler import Scheduler
 from repro.core.stream import StatsRecord, StatsStream
+from repro.runtime.straggler import WindowWatchdog
+from repro.stats.sketch import SketchSpec, WindowSketch, window_sketch
+from repro.steer.policy import Steering, SteeringActions, SteeringPolicy
 
 
 @dataclass(frozen=True)
@@ -158,6 +161,8 @@ class SimulationEngine:
                  rates=None, mesh=None, observables: Optional[list] = None,
                  group_ids=None, record_trajectories: bool = False,
                  partitioning: Optional[Partitioning] = None,
+                 sketch: Optional[SketchSpec] = None,
+                 steering: Optional[Steering] = None,
                  _deprecated: bool = True):
         if _deprecated:
             warnings.warn(
@@ -238,8 +243,47 @@ class SimulationEngine:
         self._grouped_fn = None
         self._n_groups = 0
         self._grouped: list[reduction.Stats] = []
+        # streaming sketches (DESIGN.md §3f): resolved bin geometry +
+        # the per-window pulled WindowSketch list; the sharded dispatch
+        # reads `_sketch` at build time (sketch counts ride its ring
+        # with one psum), the fused/host paths compute eagerly from obs
+        self._sketch_spec = sketch
+        self._sketch = None
+        if sketch is not None:
+            x0 = np.asarray(self.system.x0, np.float64)
+            obs0 = np.asarray(
+                [x0[list(ii)].sum() for ii in self.obs_idx], np.float64)
+            self._sketch = sketch.resolve(obs0)
+        self._sketch_fn_cache = None
+        self._sketches: list[WindowSketch] = []
         if group_ids is not None:
             self.set_groups(group_ids)
+        # adaptive steering (DESIGN.md §3f): a between-block controller
+        # consulted by run_block at superstep boundaries
+        self._steer: Optional[SteeringPolicy] = None
+        if steering is not None and steering.enabled:
+            steering.validate()
+            if cfg.host_loop:
+                raise ValueError(
+                    "steering is driven from the superstep collector; "
+                    "the host_loop baseline has no block boundary to "
+                    "steer at (use the fused or sharded strategy)")
+            if steering.bimodality and sketch is None:
+                raise ValueError(
+                    "Steering.bimodality reads window histograms — "
+                    "configure a SketchSpec as well")
+            if steering.tau_switch and cfg.method != "tau_leap":
+                raise ValueError(
+                    "Steering.tau_switch only applies to "
+                    "method='tau_leap' runs")
+            self._steer = SteeringPolicy(
+                steering, cfg.n_instances,
+                n_points=(self._n_groups or 1),
+                n_windows=cfg.n_windows,
+                tau_leap=(cfg.method == "tau_leap"))
+        # straggler watchdog: observes per-window wall clock on every
+        # collect path; flagged windows surface in result telemetry
+        self.watchdog = WindowWatchdog()
         # dispatch-path selection: one explicit strategy seam
         # (core/dispatch.py) — host loop / fused / sharded
         self._perm_cache: Optional[jax.Array] = None
@@ -266,6 +310,7 @@ class SimulationEngine:
         self._group_ids = ids
         self._group_ids_dev = jnp.asarray(ids)
         self._n_groups = int(ids.max()) + 1
+        self._sketch_fn_cache = None  # closes over the group map
         if self._stats_blocks == 1:
             # legacy single-fold form (bit-identical historical records)
             self._grouped_fn = jax.jit(partial(
@@ -303,6 +348,27 @@ class SimulationEngine:
                        max_chunks=cfg.kernel_max_chunks)
 
     # ------------------------------------------------------------------
+    def _sketch_eval(self):
+        """Jitted eager sketch for the paths whose dispatch does not
+        produce one device-side (fused/host loop): obs (I, n_obs) ->
+        (hist, rare). Same ops as the sharded in-body sketch, and
+        integer counts, so the results are bitwise identical."""
+        if self._sketch_fn_cache is None:
+            sk = self._sketch
+            gids = self._group_ids_dev
+            n_g = self._n_groups if gids is not None else 1
+            thr = sk.thresholds if sk.n_thr else None
+
+            def fn(obs):
+                g = (gids if gids is not None
+                     else jnp.zeros((obs.shape[0],), jnp.int32))
+                return window_sketch(obs, g, n_g, sk.lo, sk.width,
+                                     sk.n_bins, thr)
+
+            self._sketch_fn_cache = jax.jit(fn)
+        return self._sketch_fn_cache
+
+    # ------------------------------------------------------------------
     def _permutation(self) -> jax.Array:
         """Concatenated, padded scheduler groups as a device index map."""
         if self.scheduler.policy != "predictive" and \
@@ -337,9 +403,14 @@ class SimulationEngine:
             self.scheduler.record_costs(
                 np.arange(cfg.n_instances), steps_delta)
         self.wall_times.append(time.perf_counter() - t0)
+        self.watchdog.observe(self._window, self.wall_times[-1])
         obs = res.obs
         stats = (res.stats if res.stats is not None
                  else reduction.blocked_stats(obs, self._stats_blocks))
+        sk_dev = None
+        if self._sketch is not None:
+            sk_dev = (res.sketch if res.sketch is not None
+                      else self._sketch_eval()(obs))
         # ONE combined blocking pull per window, AFTER the timer (so
         # window_wall_times stays an async-dispatch measure on every
         # path): record stats + per-method step/leap telemetry + (on
@@ -350,7 +421,10 @@ class SimulationEngine:
             mean=stats.mean, var=stats.var, ci90=stats.ci90, n=stats.n,
             steps=self._pool.steps.sum(), leaps=self._pool.leaps.sum(),
             **({} if res.truncated is None
-               else {"truncated": res.truncated})))
+               else {"truncated": res.truncated}),
+            **({} if sk_dev is None else {"sk_hist": sk_dev[0]}),
+            **({} if sk_dev is None or sk_dev[1] is None
+               else {"sk_rare": sk_dev[1]})))
         self.n_host_syncs += 1
         if bool(pulled.get("truncated", False)):
             # a silently partial window must never become a record
@@ -366,6 +440,11 @@ class SimulationEngine:
         self.window_leaps.append(
             (leaps_cum - self._cum_leaps) & 0xFFFFFFFF)
         self._cum_steps, self._cum_leaps = steps_cum, leaps_cum
+        if sk_dev is not None:
+            self._sketches.append(WindowSketch(
+                hist=np.asarray(pulled["sk_hist"]),
+                rare=(np.asarray(pulled["sk_rare"])
+                      if "sk_rare" in pulled else None)))
         if cfg.schema in ("i", "ii") or self._record_trajectories:
             self._samples.append(np.asarray(obs))
             self.n_host_syncs += 1
@@ -447,6 +526,17 @@ class SimulationEngine:
                                else [self._grouped_fn(
                                    res.obs[w], self._group_ids_dev)
                                    for w in range(n_win)])
+        if self._sketch is not None:
+            if res.sketch is not None:  # sharded: rode the ring (psum)
+                pull["sk_hist"] = res.sketch[0]
+                if res.sketch[1] is not None:
+                    pull["sk_rare"] = res.sketch[1]
+            else:  # fused: eager per-window sketch from the obs ring
+                per = [self._sketch_eval()(res.obs[w])
+                       for w in range(n_win)]
+                pull["sk_hist"] = [p[0] for p in per]
+                if per and per[0][1] is not None:
+                    pull["sk_rare"] = [p[1] for p in per]
         if res.truncated is not None:
             pull["truncated"] = res.truncated
         if cfg.schema in ("i", "ii") or self._record_trajectories:
@@ -477,6 +567,7 @@ class SimulationEngine:
         trunc = pulled.get("truncated")
         for w in range(n_win):
             self.wall_times.append(wall / n_win)
+            self.watchdog.observe(w0 + w, wall / n_win)
             if trunc is not None and trunc[w]:
                 self._raise_truncated(w0 + w, float(self.grid[w0 + w]))
             steps_cum = int(pulled["steps"][w]) & 0xFFFFFFFF
@@ -497,6 +588,11 @@ class SimulationEngine:
             if "grouped" in pulled:
                 self._grouped.append(reduction.Stats(
                     *(np.asarray(v) for v in pulled["grouped"][w])))
+            if "sk_hist" in pulled:
+                self._sketches.append(WindowSketch(
+                    hist=np.asarray(pulled["sk_hist"][w]),
+                    rare=(np.asarray(pulled["sk_rare"][w])
+                          if "sk_rare" in pulled else None)))
             if "steps_delta" in pulled:
                 # per-window EMA updates in window order — the cost
                 # state at every block boundary matches the per-window
@@ -524,7 +620,15 @@ class SimulationEngine:
         immediately (no dispatch-ahead) — the per-block checkpointing
         mode, where a save after each call must land on THIS block's
         boundary rather than flushing the next block too. Returns the
-        number of windows collected this call."""
+        number of windows collected this call.
+
+        With steering active the pipeline is forced off: the policy's
+        decision point must see block k's records BEFORE block k+1 is
+        dispatched (a dispatch-ahead block would run on pre-decision
+        state), and the decision is applied here, at the collected
+        boundary."""
+        if self._steer is not None:
+            pipeline = False
         limit = len(self.grid)
         if dispatch_limit is not None:
             limit = min(limit, dispatch_limit)
@@ -534,7 +638,12 @@ class SimulationEngine:
         if self._pending and (not pipeline or len(self._pending) > 1
                               or self._dispatched >= limit):
             self._collect_block()
-        return self._window - before
+        collected = self._window - before
+        if (self._steer is not None and collected and not self._pending
+                and self._dispatched == self._window
+                and self._window < len(self.grid)):
+            self._steer_boundary()
+        return collected
 
     def flush(self) -> None:
         """Collect every in-flight superstep so the emitted records
@@ -543,12 +652,93 @@ class SimulationEngine:
         while self._pending:
             self._collect_block()
 
+    # --------------------------------------------------------- steering
+    def _steer_boundary(self) -> None:
+        """One decision point: hand the policy the freshest per-point
+        stats, the latest window sketch, and the exact per-lane
+        step/leap counters, then apply whatever it decides. Every input
+        is bitwise path-invariant, so the decision sequence is too."""
+        pulled = jax.device_get(dict(steps=self._pool.steps,
+                                     leaps=self._pool.leaps))
+        self.n_host_syncs += 1
+        # int32 device counters wrap at 2^31; keep the unsigned residue
+        # so the policy's deltas stay exact mod 2^32
+        steps = np.asarray(pulled["steps"]).astype(np.int64) & 0xFFFFFFFF
+        leaps = np.asarray(pulled["leaps"]).astype(np.int64) & 0xFFFFFFFF
+        if self._grouped:
+            g = self._grouped[-1]
+            point_stats = {"mean": np.asarray(g.mean),
+                           "ci90": np.asarray(g.ci90)}
+        elif self.stream.records():
+            r = self.stream.records()[-1]
+            point_stats = {"mean": np.asarray(r.mean),
+                           "ci90": np.asarray(r.ci90)}
+        else:
+            point_stats = None
+        hist = self._sketches[-1].hist if self._sketches else None
+        gids = (self._group_ids if self._group_ids is not None
+                else np.zeros(self.cfg.n_instances, np.int32))
+        actions = self._steer.decide(self._window, point_stats, hist,
+                                     gids, steps, leaps)
+        if actions.any:
+            self._apply_steering(actions)
+
+    def _apply_steering(self, a: SteeringActions) -> None:
+        """Apply a decision to the device pool. Pull-edit-replace: the
+        pool is tiny next to a window's compute and decision points are
+        rare, so one gather + one re-place (resharding under the
+        sharded strategy) beats a bespoke jitted scatter here."""
+        arrs = {f: np.array(getattr(self._pool, f))  # writable copies
+                for f in LaneState._fields}
+        self.n_host_syncs += 1
+        if np.asarray(a.stop_lanes).any():
+            arrs["dead"] = arrs["dead"] | np.asarray(a.stop_lanes)
+        moves = np.asarray(a.moves)
+        if moves.size:
+            dst, src = moves[:, 0], moves[:, 1]
+            # trajectory splitting: clone the donor's state, keep the
+            # moved lane's OWN RNG stream (key/ctr) — it diverges from
+            # the donor immediately, an extra replica from here on
+            for f in ("x", "t", "dead"):
+                arrs[f][dst] = arrs[f][src]
+            self.rates = np.array(self.rates)
+            self.rates[dst] = self.rates[src]
+            self._rates_dev = self._dispatch.place(
+                jnp.asarray(self.rates))
+            self.scheduler._cost[dst] = self.scheduler._cost[src]
+        if a.no_leap is not None:
+            arrs["no_leap"] = np.asarray(a.no_leap, bool)
+        self._pool = self._dispatch.place(LaneState(
+            **{f: jnp.asarray(v) for f, v in arrs.items()}))
+        if a.new_group_ids is not None:
+            # every point keeps >= 1 lane, so n_groups is unchanged and
+            # the sharded dispatch cache stays valid; only the operand
+            # content changes
+            self.set_groups(np.asarray(a.new_group_ids))
+            self._group_ids_dev = self._dispatch.place(
+                self._group_ids_dev)
+
+    def sketches(self) -> list[WindowSketch]:
+        """Per-window WindowSketch list (empty without a SketchSpec)."""
+        self.flush()
+        return list(self._sketches)
+
+    def steering_report(self) -> Optional[dict]:
+        """The policy's savings + decision summary (None when no
+        steering is active)."""
+        if self._steer is None:
+            return None
+        self.flush()
+        return self._steer.report()
+
     def _observe(self) -> jax.Array:
         cols = [self._pool.x[:, idx].sum(axis=1) for idx in self.obs_idx]
         return jnp.stack(cols, axis=1)
 
     def run(self) -> list[StatsRecord]:
-        if self.cfg.window_block == 1:
+        # steered runs go through the block loop even at window_block=1
+        # (steering decisions live at the collected block boundary)
+        if self.cfg.window_block == 1 and self._steer is None:
             while self._window < len(self.grid):
                 self.run_window()
         else:
@@ -589,12 +779,26 @@ class SimulationEngine:
             for name in ("n", "mean", "var", "ci90"):
                 extra[f"grouped_{name}"] = np.stack(
                     [getattr(g, name) for g in self._grouped])
+        if self._sketches:
+            extra["sketch_hist"] = np.stack(
+                [s.hist for s in self._sketches])
+            if self._sketches[0].rare is not None:
+                extra["sketch_rare"] = np.stack(
+                    [s.rare for s in self._sketches])
+        if self._group_ids is not None:
+            # steering reallocation rewrites the lane->point map, so it
+            # is run state, not just construction input
+            extra["group_ids"] = self._group_ids
+        if self._steer is not None:
+            for k, v in self._steer.state_dict().items():
+                extra[f"steer_{k}"] = v
         np.savez(
             path, x=np.asarray(p.x), t=np.asarray(p.t),
             key=np.asarray(p.key), ctr=np.asarray(p.ctr),
             ctr_hi=np.asarray(p.ctr_hi),
             steps=np.asarray(p.steps), leaps=np.asarray(p.leaps),
-            dead=np.asarray(p.dead), window=self._window,
+            dead=np.asarray(p.dead), no_leap=np.asarray(p.no_leap),
+            window=self._window,
             cost=self.scheduler._cost, rates=self.rates, **extra)
 
     def restore(self, path: str) -> None:
@@ -628,12 +832,16 @@ class SimulationEngine:
         ctr = z["ctr"] if "ctr" in z else np.zeros((n,), np.uint32)
         ctr_hi = z["ctr_hi"] if "ctr_hi" in z else np.zeros((n,), np.uint32)
         leaps = z["leaps"] if "leaps" in z else np.zeros((n,), np.int32)
+        # pre-steering checkpoints carry no `no_leap`: no lane was
+        # pinned, so all-False restores bitwise
+        no_leap = z["no_leap"] if "no_leap" in z else np.zeros((n,), bool)
         self._pool = self._dispatch.place(LaneState(
             x=jnp.asarray(z["x"]), t=jnp.asarray(z["t"]),
             key=jnp.asarray(z["key"]), ctr=jnp.asarray(ctr),
             ctr_hi=jnp.asarray(ctr_hi),
             steps=jnp.asarray(z["steps"]), leaps=jnp.asarray(leaps),
-            dead=jnp.asarray(z["dead"])))
+            dead=jnp.asarray(z["dead"]),
+            no_leap=jnp.asarray(no_leap, bool)))
         self._window = saved_window
         self._dispatched = saved_window
         # per-window telemetry restarts from the restored cumulative
@@ -648,6 +856,16 @@ class SimulationEngine:
         if "rates" in z:
             self.rates = np.asarray(z["rates"], np.float32)
             self._rates_dev = self._dispatch.place(jnp.asarray(self.rates))
+        if "group_ids" in z:
+            # the saved map reflects any steering reallocations
+            self.set_groups(np.asarray(z["group_ids"], np.int32))
+            self._group_ids_dev = self._dispatch.place(
+                self._group_ids_dev)
+        if self._steer is not None:
+            st = {k[len("steer_"):]: z[k] for k in z.files
+                  if k.startswith("steer_")}
+            if st:
+                self._steer.load_state(st)
         # re-populate already-emitted records (buffer only — sinks are
         # not replayed so a resumed CSV does not double-write)
         self.stream.buffer.clear()
@@ -670,6 +888,14 @@ class SimulationEngine:
                 for w in range(len(z["grouped_n"]))]
         else:
             self._grouped = []
+        if "sketch_hist" in z:
+            sh = z["sketch_hist"]
+            sr = z["sketch_rare"] if "sketch_rare" in z else None
+            self._sketches = [WindowSketch(
+                hist=sh[w], rare=(sr[w] if sr is not None else None))
+                for w in range(len(sh))]
+        else:
+            self._sketches = []
 
     @property
     def peak_buffered_bytes(self) -> int:

@@ -36,6 +36,10 @@ class LaneState(NamedTuple):
     #   events — the per-method work metric)
     leaps: jax.Array  # (B,) int32 accepted tau-leaps (0 on exact paths)
     dead: jax.Array  # (B,) bool — no reaction can ever fire again
+    no_leap: jax.Array  # (B,) bool — steering forced this lane to exact
+    #   SSA (tau-leap lanes only; ignored by exact paths). Rides the
+    #   pool pytree so it flows through donation, scan carries,
+    #   shard_map and checkpoints without extra plumbing.
 
 
 def init_lanes(system: ReactionSystem, n_lanes: int, seed: int,
@@ -54,6 +58,7 @@ def init_lanes(system: ReactionSystem, n_lanes: int, seed: int,
         steps=jnp.zeros((n_lanes,), jnp.int32),
         leaps=jnp.zeros((n_lanes,), jnp.int32),
         dead=jnp.zeros((n_lanes,), bool),
+        no_leap=jnp.zeros((n_lanes,), bool),
     )
 
 
@@ -108,6 +113,7 @@ def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
         steps=state.steps + fire.astype(jnp.int32),
         leaps=state.leaps,
         dead=state.dead | (active & dead),
+        no_leap=state.no_leap,
     )
 
 

@@ -166,6 +166,10 @@ def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
 
     Returns (x, t, dead, ctr, ctr_hi, steps, leaps). Pure jnp — traced
     by host jit AND the Pallas kernel body, bitwise identically.
+
+    `fallback` may be a scalar or a (B,) per-lane array (the steering
+    layer's exact<->tau auto-switch feeds +inf for switched lanes); it
+    only enters the `do_leap` comparison, which broadcasts.
     """
     b, s = x.shape
     r = delta.shape[0]
@@ -285,6 +289,13 @@ def make_tau_step(gi, rmask, eps: float, fallback: float):
     def tau_step(state: LaneState, system_tensors, horizon) -> LaneState:
         idx, coef_rm, delta_f, rates = system_tensors
         e, coef_k = onehot_tensors(idx, coef_rm, state.x.shape[1])
+        # steering's per-lane exact<->tau switch: a lane with no_leap
+        # set sees an infinite fallback threshold, so its `do_leap`
+        # gate is always False and it takes exact SSA steps (identical
+        # math and stream consumption to gillespie.ssa_step). With
+        # no_leap all-False this reduces bitwise to the scalar gate.
+        fb = jnp.where(state.no_leap, jnp.float32(jnp.inf),
+                       jnp.float32(fallback))
         x, t, dead, lo, hi, steps, leaps = tau_step_core(
             state.x, state.t, state.dead,
             state.key[:, 0], state.key[:, 1], state.ctr, state.ctr_hi,
@@ -292,9 +303,10 @@ def make_tau_step(gi, rmask, eps: float, fallback: float):
             e, coef_k, jnp.asarray(delta_f, jnp.float32),
             jnp.asarray(rates, jnp.float32), gi, rmask,
             jnp.asarray(horizon, jnp.float32),
-            eps=eps, fallback=fallback)
+            eps=eps, fallback=fb)
         return LaneState(x=x, t=t, key=state.key, ctr=lo, ctr_hi=hi,
-                         steps=steps, leaps=leaps, dead=dead)
+                         steps=steps, leaps=leaps, dead=dead,
+                         no_leap=state.no_leap)
 
     return tau_step
 

@@ -126,11 +126,14 @@ def tau_window_chunk_loop(pool: LaneState, tensors, horizon, gi, rmask,
     e, coef_k = onehot_tensors(idx, coef_rm, pool.x.shape[1])
     interp = (not ON_TPU) if interpret is None else interpret
     key = pool.key
+    # steering's per-lane exact<->tau switch rides as a (B,) operand;
+    # the kernel never writes it, so it is closed over (not carried)
+    no_leap = pool.no_leap.astype(jnp.int32)
 
     def chunk(x, t, dead, ctr, ctr_hi, horizon):
         return tau_window_call(
-            x, t, dead, key, ctr, ctr_hi, e, coef_k, delta_f, rates,
-            gi, rmask, horizon, n_steps=chunk_steps, eps=eps,
+            x, t, dead, no_leap, key, ctr, ctr_hi, e, coef_k, delta_f,
+            rates, gi, rmask, horizon, n_steps=chunk_steps, eps=eps,
             fallback=fallback, interpret=interp)
 
     return _chunk_while(pool, horizon, chunk, max_chunks)
@@ -167,7 +170,8 @@ def _chunk_while(pool: LaneState, horizon, chunk, max_chunks: int
     truncated = jnp.any(live(t, dead))
     t = jnp.where(dead > 0, jnp.maximum(t, horizon), t)
     state = LaneState(x=x, t=t, key=pool.key, ctr=ctr, ctr_hi=ctr_hi,
-                      steps=steps, leaps=leaps, dead=dead > 0)
+                      steps=steps, leaps=leaps, dead=dead > 0,
+                      no_leap=pool.no_leap)
     return FusedWindowOut(state=state, n_chunks=n_chunks,
                           truncated=truncated)
 

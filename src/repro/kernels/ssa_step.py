@@ -154,19 +154,26 @@ def ssa_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
     )(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates, horizon_arr)
 
 
-def _tau_window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref,
-                       ctrhi_ref, e_ref, coef_ref, delta_ref, rates_ref,
-                       gi_ref, rmask_ref, horizon_ref,
+def _tau_window_kernel(x_ref, t_ref, dead_ref, noleap_ref, key_ref,
+                       ctr_ref, ctrhi_ref, e_ref, coef_ref, delta_ref,
+                       rates_ref, gi_ref, rmask_ref, horizon_ref,
                        x_out, t_out, dead_out, steps_out, leaps_out,
                        ctr_out, ctrhi_out,
                        n_steps: int, eps: float, fallback: float):
     """Fused multi-step tau-leap window: the SAME `tau_step_core` the
     host paths trace, iterated with the lane state resident in VMEM —
     propensity/moment/update matmuls on the MXU, Poisson
-    inverse-transform and counter-based draws in VREGs."""
+    inverse-transform and counter-based draws in VREGs.
+
+    noleap_ref: (BL,) int32 — nonzero lanes take exact SSA steps only
+    (steering's per-lane exact<->tau switch): their effective fallback
+    threshold is +inf, computed once in VREGs; the static scalar
+    `fallback` stays a jit-time constant for everyone else."""
     x = x_ref[...].astype(jnp.float32)
     t = t_ref[...]
     dead = dead_ref[...] > 0
+    fb = jnp.where(noleap_ref[...] > 0, jnp.float32(jnp.inf),
+                   jnp.float32(fallback))
     k0 = key_ref[:, 0]
     k1 = key_ref[:, 1]
     ctr = ctr_ref[...]
@@ -181,7 +188,7 @@ def _tau_window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref,
             x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
             e_ref[...], coef_ref[...], delta_ref[...], rates_ref[...],
             gi_ref[...], rmask_ref[...], horizon,
-            eps=eps, fallback=fallback)
+            eps=eps, fallback=fb)
         return x, t, dead, ctr, ctr_hi, steps, leaps
 
     x, t, dead, ctr, ctr_hi, steps, leaps = jax.lax.fori_loop(
@@ -197,12 +204,14 @@ def _tau_window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref,
 
 @partial(jax.jit, static_argnames=("n_steps", "interpret", "eps",
                                    "fallback"))
-def tau_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
-                    gi, rmask, horizon, *, n_steps: int, eps: float,
-                    fallback: float, interpret: bool = True):
+def tau_window_call(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef,
+                    delta, rates, gi, rmask, horizon, *, n_steps: int,
+                    eps: float, fallback: float, interpret: bool = True):
     """Run up to n_steps fused tau-leap iterations per lane toward
-    `horizon`. Shapes as `ssa_window_call` plus gi (MAX_COEF,S) and
-    rmask (S,) from `core.tau_leap.gi_tables`/`reactant_mask`.
+    `horizon`. Shapes as `ssa_window_call` plus no_leap (B,) int32
+    (nonzero = lane forced to exact SSA — steering's per-lane method
+    switch), gi (MAX_COEF,S) and rmask (S,) from
+    `core.tau_leap.gi_tables`/`reactant_mask`.
     Returns (x, t, dead, steps_delta, leaps_delta, ctr, ctr_hi)."""
     b, s = x.shape
     r = delta.shape[0]
@@ -218,6 +227,7 @@ def tau_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl,), lambda i: (i,)),
             pl.BlockSpec((bl, 2), lambda i: (i, 0)),
@@ -250,5 +260,5 @@ def tau_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
             jax.ShapeDtypeStruct((b,), jnp.uint32),
         ],
         interpret=interpret,
-    )(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates, gi, rmask,
-      horizon_arr)
+    )(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef, delta, rates, gi,
+      rmask, horizon_arr)

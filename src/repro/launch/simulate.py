@@ -23,6 +23,8 @@ from repro.api import (
     Reduction,
     Schedule,
     Schema,
+    SketchSpec,
+    Steering,
     simulate,
 )
 from repro.core.cwc.models import MODELS
@@ -90,6 +92,32 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint file: written per window, resumed "
                     "from when it already exists")
+    ap.add_argument("--sketch-bins", type=int, default=0,
+                    help="stream per-window fixed-bin histograms with "
+                    "this many bins per (point, observable); p10/p50/"
+                    "p90 estimates print at the end (0 = off)")
+    ap.add_argument("--sketch-threshold", action="append", default=[],
+                    type=float, metavar="LEVEL",
+                    help="rare-event counter: instances with obs >= "
+                    "LEVEL per window; repeatable (needs --sketch-bins)")
+    ap.add_argument("--early-stop", type=float, default=0.0,
+                    metavar="REL_CI",
+                    help="steering: stop a sweep point once every "
+                    "observable's ci90/|mean| falls below REL_CI "
+                    "(0 = off)")
+    ap.add_argument("--steer-min-windows", type=int, default=4,
+                    help="never early-stop a point before this many "
+                    "windows")
+    ap.add_argument("--reallocate", action="store_true",
+                    help="steering: move a stopped point's freed lanes "
+                    "to the live point with the worst relative CI "
+                    "(needs --early-stop)")
+    ap.add_argument("--tau-switch", action="store_true",
+                    help="steering: pin lanes whose EMA leap share "
+                    "stays low to exact SSA (tau_leap runs only)")
+    ap.add_argument("--flag-bimodal", action="store_true",
+                    help="steering: flag bimodal (point, observable) "
+                    "histograms (needs --sketch-bins)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -114,7 +142,17 @@ def main() -> None:
         window_block=args.window_block,
         partitioning=(Partitioning(n_shards=args.devices,
                                    stat_blocks=args.stat_blocks)
-                      if args.devices else None))
+                      if args.devices else None),
+        sketch=(SketchSpec(n_bins=args.sketch_bins,
+                           thresholds=tuple(args.sketch_threshold))
+                if args.sketch_bins else None),
+        steering=(Steering(ci_rel_tol=args.early_stop,
+                           min_windows=args.steer_min_windows,
+                           reallocate=args.reallocate,
+                           tau_switch=args.tau_switch,
+                           bimodality=args.flag_bimodal)
+                  if (args.early_stop or args.tau_switch
+                      or args.flag_bimodal) else None))
 
     if args.out:
         from repro.api.run import observable_names
@@ -152,6 +190,36 @@ def main() -> None:
             vals = " ".join(f"{name}={m:.1f}" for name, m in
                             zip(result.obs_names, pp["mean"][-1, p]))
             print(f"  {point}: {vals}")
+    if tele.straggler_windows:
+        print(f"stragglers: {len(tele.straggler_windows)} window(s) "
+              f"flagged (rate {tele.straggler_rate:.2f}): " + ", ".join(
+                  f"w{w} {wall * 1e3:.0f}ms vs median {med * 1e3:.0f}ms"
+                  for w, wall, med in tele.straggler_windows[:5]))
+    sks = result.sketches()
+    if sks:
+        from repro.stats import quantiles_from_hist
+
+        sk_params = result._engine._sketch
+        q = quantiles_from_hist(sks[-1].hist, sk_params.lo,
+                                sk_params.width)
+        print("final-window quantile estimates (p10/p50/p90):")
+        for g in range(q.shape[0]):
+            for o, name in enumerate(result.obs_names):
+                tag = f"point {g} " if q.shape[0] > 1 else ""
+                print(f"  {tag}{name:20s} "
+                      f"{q[g, o, 0]:8.1f} {q[g, o, 1]:8.1f} "
+                      f"{q[g, o, 2]:8.1f}")
+    rep = result.steering_report()
+    if rep is not None:
+        print(f"steering: {len(rep['stopped_points'])}/{rep['n_points']}"
+              f" points early-stopped, "
+              f"{rep['point_windows_simulated']}/"
+              f"{rep['point_windows_total']} point-windows simulated "
+              f"({rep['windows_saved_ratio']:.2f}x saved), "
+              f"{rep['lanes_pinned_exact']} lanes pinned exact, "
+              f"{len(rep['bimodal_flags'])} bimodal flags")
+        for d in rep["decisions"]:
+            print(f"  w{d['window']}: {d}")
 
 
 if __name__ == "__main__":

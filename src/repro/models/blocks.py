@@ -1,11 +1,11 @@
 """Block assembly and layer stacking.
 
-A block = pre-norm mixer (attn / mamba / mlstm / slstm) + pre-norm FFN
-(dense / moe / none), with optional parallel-residual (command-r) and
+A block = pre-norm attention mixer + pre-norm FFN (dense / moe /
+none), with optional parallel-residual (command-r) and
 cross-attention (enc-dec decoders).
 
 Layer stacks are decomposed into `prefix + pattern × n_repeat` (e.g.
-deepseek: 1 dense layer + 27 MoE; jamba: 4 × an 8-layer period). The
+deepseek: 1 dense layer + 27 MoE). The
 repeated pattern is executed with `lax.scan` over stacked params —
 compile time and HLO size stay O(pattern), not O(n_layers) — with
 optional per-step remat.
@@ -23,15 +23,10 @@ from repro.configs.base import (
     FFN_MOE,
     FFN_NONE,
     MIXER_ATTN,
-    MIXER_MAMBA,
-    MIXER_MLSTM,
-    MIXER_SLSTM,
     LayerSpec,
     ModelConfig,
 )
 from repro.models import attention as attn_mod
-from repro.models import mamba as mamba_mod
-from repro.models import xlstm as xlstm_mod
 from repro.models.common import ParamDef
 from repro.models.mlp import apply_mlp, mlp_defs
 from repro.models.moe import apply_moe, moe_defs
@@ -71,12 +66,6 @@ def block_defs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
     d = {"norm1": norm_defs(cfg.d_model, cfg.norm)}
     if spec.mixer == MIXER_ATTN:
         d["mixer"] = attn_mod.attn_defs(cfg)
-    elif spec.mixer == MIXER_MAMBA:
-        d["mixer"] = mamba_mod.mamba_defs(cfg)
-    elif spec.mixer == MIXER_MLSTM:
-        d["mixer"] = xlstm_mod.mlstm_defs(cfg)
-    elif spec.mixer == MIXER_SLSTM:
-        d["mixer"] = xlstm_mod.slstm_defs(cfg)
     else:
         raise ValueError(spec.mixer)
     if cross:
@@ -102,12 +91,6 @@ def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
             "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
         }
-    elif spec.mixer == MIXER_MAMBA:
-        cache = mamba_mod.init_mamba_state(cfg, batch, dtype)._asdict()
-    elif spec.mixer == MIXER_MLSTM:
-        cache = xlstm_mod.init_mlstm_state(cfg, batch, dtype)._asdict()
-    elif spec.mixer == MIXER_SLSTM:
-        cache = xlstm_mod.init_slstm_state(cfg, batch)._asdict()
     else:
         raise ValueError(spec.mixer)
     if cross_len:
@@ -121,14 +104,6 @@ def block_cache_logical(cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
     if spec.mixer == MIXER_ATTN:
         out = {"k": (BATCH, KV_SEQ, KV_HEADS, None),
                "v": (BATCH, KV_SEQ, KV_HEADS, None)}
-    elif spec.mixer == MIXER_MAMBA:
-        out = {"ssm": (BATCH, "inner", None), "conv": (BATCH, None, "inner")}
-    elif spec.mixer == MIXER_MLSTM:
-        out = {"c": (BATCH, None, "head_dim", None), "n": (BATCH, None, "head_dim"),
-               "m": (BATCH, None), "conv": (BATCH, None, "inner")}
-    elif spec.mixer == MIXER_SLSTM:
-        out = {"c": (BATCH, None), "n": (BATCH, None), "h": (BATCH, None),
-               "m": (BATCH, None)}
     else:
         raise ValueError(spec.mixer)
     if cross:
@@ -205,30 +180,6 @@ def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
                                            positions)
             if mode == "prefill":
                 new_cache.update(kv)
-    elif spec.mixer == MIXER_MAMBA:
-        if mode == "decode":
-            st = mamba_mod.MambaState(**{k: cache[k] for k in ("ssm", "conv")})
-            mix_out, st2 = mamba_mod.mamba_decode_step(params["mixer"], h, cfg, st)
-        else:
-            mix_out, st2 = mamba_mod.apply_mamba(params["mixer"], h, cfg, topo)
-        if mode in ("decode", "prefill"):
-            new_cache.update(st2._asdict())
-    elif spec.mixer == MIXER_MLSTM:
-        if mode == "decode":
-            st = xlstm_mod.MLSTMState(**{k: cache[k] for k in ("c", "n", "m", "conv")})
-            mix_out, st2 = xlstm_mod.mlstm_decode_step(params["mixer"], h, cfg, st)
-        else:
-            mix_out, st2 = xlstm_mod.apply_mlstm(params["mixer"], h, cfg, topo)
-        if mode in ("decode", "prefill"):
-            new_cache.update(st2._asdict())
-    elif spec.mixer == MIXER_SLSTM:
-        if mode == "decode":
-            st = xlstm_mod.SLSTMState(**{k: cache[k] for k in ("c", "n", "h", "m")})
-            mix_out, st2 = xlstm_mod.slstm_decode_step(params["mixer"], h, cfg, st)
-        else:
-            mix_out, st2 = xlstm_mod.apply_slstm(params["mixer"], h, cfg, topo)
-        if mode in ("decode", "prefill"):
-            new_cache.update(st2._asdict())
     else:
         raise ValueError(spec.mixer)
 
@@ -289,8 +240,7 @@ def stack_defs(cfg: ModelConfig, specs: tuple[LayerSpec, ...],
 
 def pad_cache(cache, cache_len: int):
     """Pad attention K/V cache seq axes (axis = ndim-3) out to cache_len
-    so decode has ring-write headroom. SSM states and cross K/V are
-    untouched."""
+    so decode has ring-write headroom. Cross K/V are untouched."""
 
     def walk(node):
         if isinstance(node, dict):

@@ -166,7 +166,7 @@ def apply_moe(params, x, cfg: ModelConfig, topo: Topology):
         # shard routes the (tiny, already-replicated) token set against
         # its local experts and outputs psum over `model`. Moves O(T·d)
         # instead of all-gathering O(E·d·f) weights (§Perf H2:
-        # 158 GB/step -> ~MB/step on jamba decode).
+        # 158 GB/step -> ~MB/step on a 52B MoE decode).
         return _apply_moe_ep_small(params, x, cfg, topo, x_spec)
 
     # ---- TP-in-expert fallback: dispatch replicated over `model` -------

@@ -31,7 +31,7 @@ KV_HEADS = "kv_heads"
 HEAD_DIM = "head_dim"
 EXPERTS = "experts"
 EXPERT_FFN = "expert_ffn"
-INNER = "inner"  # mamba/xlstm d_inner
+INNER = "inner"  # state-space/recurrent mixer d_inner (retired archs)
 STATE = "state"  # ssm state dim
 CONV = "conv"
 LAYERS = "layers"  # stacked scan axis

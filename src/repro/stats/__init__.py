@@ -1,0 +1,22 @@
+"""Streaming analytics over the simulation record stream (DESIGN.md §3f).
+
+Device-side sketches (fixed-bin histograms, rare-event threshold
+counters) accumulated per window alongside the Welford records, plus
+the host-side estimators (quantiles, bimodality) the steering layer
+consumes. All merges are associative integer sums, so sketches are
+bitwise identical across fused/sharded dispatch, any shard count, and
+any superstep width.
+"""
+from repro.stats.sketch import (
+    SketchParams,
+    SketchSpec,
+    WindowSketch,
+    bimodality_from_hist,
+    quantiles_from_hist,
+    window_sketch,
+)
+
+__all__ = [
+    "SketchParams", "SketchSpec", "WindowSketch",
+    "bimodality_from_hist", "quantiles_from_hist", "window_sketch",
+]

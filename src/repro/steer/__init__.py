@@ -1,0 +1,11 @@
+"""Adaptive steering: the between-block controller (DESIGN.md §3f).
+
+Consumes the device-side sketches (repro/stats) at superstep
+boundaries and decides — deterministically from (seed, policy) —
+which sweep points to early-stop, where to reallocate their freed
+replicas, which lanes to switch between exact SSA and tau-leaping,
+and which distributions to flag as bimodal.
+"""
+from repro.steer.policy import Steering, SteeringActions, SteeringPolicy
+
+__all__ = ["Steering", "SteeringActions", "SteeringPolicy"]

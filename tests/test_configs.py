@@ -13,7 +13,7 @@ from repro.configs.registry import (
 
 
 def test_all_archs_registered():
-    assert len(ARCH_NAMES) == 10
+    assert len(ARCH_NAMES) == 8
 
 
 @pytest.mark.parametrize("name", ARCH_NAMES)
@@ -23,8 +23,6 @@ def test_param_counts_in_band(name):
         "olmoe-1b-7b": (6e9, 8e9),
         "deepseek-moe-16b": (15e9, 18e9),
         "internvl2-1b": (0.4e9, 1.2e9),
-        "xlstm-1.3b": (0.9e9, 2.5e9),
-        "jamba-v0.1-52b": (48e9, 56e9),
         "llama3-8b": (7.5e9, 8.6e9),
         "starcoder2-7b": (6.5e9, 8e9),
         "command-r-35b": (28e9, 36e9),
@@ -39,30 +37,14 @@ def test_param_counts_in_band(name):
 def test_cell_matrix():
     cells = dryrun_cells()
     skips = skipped_cells()
-    assert len(cells) == 32
+    assert len(cells) == 24
     assert len(skips) == 8
     assert all(s[1] == "long_500k" for s in skips)
-    # long_500k runs exactly for the sub-quadratic archs
+    # the sub-quadratic archs that ran long_500k were retired (the
+    # simulator is the repo's subject; see ROADMAP) — no arch left
+    # qualifies for the long-context shape
     long_archs = {a for a, s in cells if s.name == "long_500k"}
-    assert long_archs == {"xlstm-1.3b", "jamba-v0.1-52b"}
-
-
-def test_jamba_layer_pattern():
-    cfg = get_config("jamba-v0.1-52b")
-    specs = cfg.layer_specs()
-    assert len(specs) == 32
-    attn_layers = [i for i, s in enumerate(specs) if s.mixer == "attn"]
-    assert attn_layers == [4, 12, 20, 28]  # 1 in 8
-    moe_layers = [i for i, s in enumerate(specs) if s.ffn == "moe"]
-    assert moe_layers == list(range(1, 32, 2))  # every other
-
-
-def test_xlstm_layer_pattern():
-    cfg = get_config("xlstm-1.3b")
-    specs = cfg.layer_specs()
-    slstm = [i for i, s in enumerate(specs) if s.mixer == "slstm"]
-    assert slstm == list(range(7, 48, 8))
-    assert all(s.ffn == "none" for s in specs)
+    assert long_archs == set()
 
 
 def test_deepseek_first_dense():
@@ -79,8 +61,8 @@ def test_default_sharding_decode_rules():
     # divisible kv heads -> plain kv-head sharding
     s = default_sharding("gemma-7b", SHAPES["decode_32k"])
     assert not s.seq_sharded_kv
-    # long context -> cache seq over `data`
-    s = default_sharding("jamba-v0.1-52b", SHAPES["long_500k"])
+    # long context -> cache seq over `data` (arch-independent rule)
+    s = default_sharding("gemma-7b", SHAPES["long_500k"])
     assert s.seq_sharded_kv and s.kv_seq_axis == "data"
 
 

@@ -1,4 +1,4 @@
-"""Per-arch smoke + layer-level oracles (attention/MoE/SSM)."""
+"""Per-arch smoke + layer-level oracles (attention/MoE)."""
 import dataclasses
 
 import jax
@@ -59,8 +59,7 @@ def test_arch_smoke_forward_and_decode(name):
     assert bool(jnp.isfinite(logits).all()), name
 
 
-@pytest.mark.parametrize("name", ["llama3-8b", "jamba-v0.1-52b",
-                                  "xlstm-1.3b"])
+@pytest.mark.parametrize("name", ["llama3-8b", "olmoe-1b-7b"])
 def test_prefill_decode_matches_forward(name):
     """Greedy continuation: decode after prefill == forward on the longer
     sequence (cache correctness). capacity_factor is raised so MoE token
@@ -149,9 +148,7 @@ def test_layer_groups_decomposition():
     from repro.configs.registry import get_config
 
     for name, want in [("llama3-8b", (0, 1, 32)),
-                       ("jamba-v0.1-52b", (0, 8, 4)),
-                       ("deepseek-moe-16b", (1, 1, 27)),
-                       ("xlstm-1.3b", (0, 8, 6))]:
+                       ("deepseek-moe-16b", (1, 1, 27))]:
         specs = get_config(name).layer_specs()
         g = layer_groups(specs)
         got = (len(g.prefix), len(g.pattern), g.n_repeat)

@@ -1,0 +1,199 @@
+"""Streaming sketches (repro.stats.sketch): unit semantics, the
+statistical accuracy bound (streaming quantiles vs offline numpy
+within one bin width), and the bitwise merge invariant across
+fused | sharded x shard count x window_block (subprocess — forced
+host devices, same harness discipline as test_sharded.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    Method,
+    Schedule,
+    SketchSpec,
+    simulate,
+)
+from repro.core.reactions import make_system
+from repro.stats import (
+    bimodality_from_hist,
+    quantiles_from_hist,
+    window_sketch,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------- unit
+def test_window_sketch_matches_numpy_binning():
+    """Device binning == the offline numpy formula: clamp-to-edge bins,
+    per-group counts, totals preserved (no dropped mass)."""
+    rng = np.random.default_rng(3)
+    n_i, n_obs, n_bins, n_groups = 64, 2, 8, 3
+    obs = rng.uniform(-5.0, 45.0, (n_i, n_obs)).astype(np.float32)
+    gids = rng.integers(0, n_groups, n_i).astype(np.int32)
+    lo = np.zeros(n_obs, np.float32)
+    width = np.full(n_obs, 32.0 / n_bins, np.float32)
+    thr = np.asarray([10.0, 40.0], np.float32)
+
+    hist, rare = window_sketch(obs, gids, n_groups, lo, width, n_bins,
+                               thresholds=thr)
+    hist, rare = np.asarray(hist), np.asarray(rare)
+    assert hist.shape == (n_groups, n_obs, n_bins)
+    assert rare.shape == (n_groups, n_obs, 2)
+
+    b = np.clip(np.floor((obs - lo) / width), 0, n_bins - 1).astype(int)
+    for g in range(n_groups):
+        sel = gids == g
+        for o in range(n_obs):
+            ref = np.bincount(b[sel, o], minlength=n_bins)
+            assert (hist[g, o] == ref).all(), (g, o)
+            for k, level in enumerate(thr):
+                assert rare[g, o, k] == (obs[sel, o] >= level).sum()
+        # clamped tails: the histogram never drops mass
+        assert hist[g].sum(axis=-1).tolist() == [sel.sum()] * n_obs
+
+
+def test_window_sketch_merge_is_associative_partition_sum():
+    """The §3f merge rule at the unit level: sketching two disjoint
+    halves and adding the int32 counts is bitwise the full-pool sketch
+    — the exact property the sharded psum relies on."""
+    rng = np.random.default_rng(7)
+    obs = rng.uniform(0.0, 30.0, (40, 1)).astype(np.float32)
+    gids = rng.integers(0, 2, 40).astype(np.int32)
+    lo, width = np.zeros(1, np.float32), np.full(1, 2.0, np.float32)
+    full, _ = window_sketch(obs, gids, 2, lo, width, 16)
+    a, _ = window_sketch(obs[:13], gids[:13], 2, lo, width, 16)
+    b, _ = window_sketch(obs[13:], gids[13:], 2, lo, width, 16)
+    assert (np.asarray(a) + np.asarray(b) == np.asarray(full)).all()
+
+
+def test_quantiles_from_hist_within_one_bin_width():
+    """Histogram-CDF quantiles vs np.quantile on the raw samples: the
+    documented error bound is one bin width."""
+    rng = np.random.default_rng(11)
+    x = rng.gamma(4.0, 5.0, 4096).astype(np.float32)
+    lo = np.zeros(1, np.float32)
+    width = np.full(1, 100.0 / 64, np.float32)
+    hist, _ = window_sketch(x[:, None], np.zeros(4096, np.int32), 1,
+                            lo, width, 64)
+    q = quantiles_from_hist(np.asarray(hist), lo, width)
+    for k, p in enumerate((0.1, 0.5, 0.9)):
+        err = abs(q[0, 0, k] - np.quantile(x, p))
+        assert err <= float(width[0]), (p, err, float(width[0]))
+
+
+def test_bimodality_flag():
+    uni = np.zeros(16, int)
+    uni[6:10] = (30, 60, 55, 20)
+    bi = np.zeros(16, int)
+    bi[2:4] = (50, 45)
+    bi[11:13] = (40, 48)
+    flags = bimodality_from_hist(np.stack([uni, bi]))
+    assert flags.tolist() == [False, True]
+
+
+# ------------------------------------------- statistical (end to end)
+@pytest.mark.parametrize("method", [Method.EXACT, Method.TAU_LEAP])
+def test_streaming_quantiles_track_offline_numpy(method):
+    """End to end, both methods: per-window streaming sketches vs the
+    offline histogram/quantile of the SAME trajectory samples — the
+    histogram must be exact and the quantile within one bin width of
+    np.quantile on the raw samples."""
+    lam, mu = 200.0, 1.0
+    sys_ = make_system(
+        ["A"], [({}, {"A": 1}, lam), ({"A": 1}, {}, mu)], {"A": 0})
+    res = simulate(Experiment(
+        model=sys_,
+        ensemble=Ensemble.make(replicas=256),
+        schedule=Schedule(t_end=2.0, n_windows=4, schema="iii"),
+        n_lanes=64, seed=11, method=method,
+        record_trajectories=True,
+        # explicit support: the hi=None auto-scale keys off obs(t=0)=0
+        # here, which would clamp the whole Poisson bulk into the edge
+        # bin (the documented bound needs support inside [lo, hi])
+        sketch=SketchSpec(n_bins=48, hi=256.0, thresholds=(150.0,))))
+    sks = res.sketches()
+    assert len(sks) == 4
+    traj = res.trajectories()  # (I, T, n_obs)
+    pr = res._engine._sketch
+    for w, sk in enumerate(sks):
+        samples = traj[:, w, 0]
+        # histogram exactness vs the numpy binning of the same samples
+        b = np.clip(np.floor((samples - pr.lo[0]) / pr.width[0]),
+                    0, pr.n_bins - 1).astype(int)
+        ref = np.bincount(b, minlength=pr.n_bins)
+        assert (sk.hist[0, 0] == ref).all(), (method, w)
+        assert sk.rare[0, 0, 0] == (samples >= 150.0).sum()
+        # quantile bound vs np.quantile on the raw samples
+        q = quantiles_from_hist(sk.hist, pr.lo, pr.width)
+        for k, p in enumerate((0.1, 0.5, 0.9)):
+            err = abs(q[0, 0, k] - np.quantile(samples, p))
+            assert err <= float(pr.width[0]), (method, w, p, err)
+
+
+# --------------------------------------- bitwise across dispatch paths
+_EXP = """
+import numpy as np
+from repro.api import (Ensemble, Experiment, Partitioning, Reduction,
+                       Schedule, SketchSpec, simulate)
+from repro.core.cwc.models import lotka_volterra
+
+def make_exp(n_shards=None, window_block=1, **kw):
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=16, sweep={"die": [0.3, 1.2]}),
+        schedule=Schedule(t_end=1.0, n_windows=4, schema="iii"),
+        reduction=Reduction.PER_POINT,
+        n_lanes=8, seed=11, window_block=window_block,
+        sketch=SketchSpec(n_bins=16, thresholds=(4.0,)),
+        partitioning=(Partitioning(n_shards=n_shards, stat_blocks=8)
+                      if n_shards else None), **kw)
+
+def stack(res):
+    sks = res.sketches()
+    return (np.stack([s.hist for s in sks]),
+            np.stack([s.rare for s in sks]))
+"""
+
+
+def _run(body: str, devices: int = 8) -> str:
+    """test_sharded.py's forced-device child harness (see its
+    docstring for why the body must be dedented BEFORE prepending and
+    why the sentinel is asserted)."""
+    snippet = _EXP + textwrap.dedent(body) + '\nprint("SNIPPET-RAN")\n'
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", snippet],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SNIPPET-RAN" in out.stdout, (
+        "test body did not execute — harness regression")
+    return out.stdout
+
+
+def test_sketches_bitwise_across_shards_and_supersteps():
+    """THE tentpole acceptance bar: identical sketch histograms and
+    rare counters — bitwise — from the fused path, every shard count
+    in {2, 4, 8}, and superstep width 4, in one forced-8-device
+    child."""
+    _run("""
+    base_h, base_r = stack(simulate(make_exp()))
+    assert base_h.dtype == np.int32 and base_r.dtype == np.int32
+    for K in (2, 4, 8):
+        for wb in (1, 4):
+            h, r = stack(simulate(make_exp(n_shards=K,
+                                           window_block=wb)))
+            assert (h == base_h).all(), (K, wb)
+            assert (r == base_r).all(), (K, wb)
+    h, r = stack(simulate(make_exp(window_block=4)))
+    assert (h == base_h).all() and (r == base_r).all()
+    """)

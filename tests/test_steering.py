@@ -1,0 +1,217 @@
+"""Steering controller (repro.steer): the identity contract, each
+lever (early-stop, reallocate, tau-switch, bimodality), decision
+determinism, and the FailureInjector crash-recovery drill — a steered
+run killed at window boundaries must replay the identical decision
+sequence and record bits from its checkpoints.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    Method,
+    Reduction,
+    Schedule,
+    SketchSpec,
+    Steering,
+    simulate,
+)
+from repro.api.run import build_engine
+from repro.core.reactions import make_system
+from repro.runtime.fault import FailureInjector, FailurePlan
+from repro.steer.policy import SteeringPolicy
+
+# mixed-variance immigration-death sweep: X(t) ~ Poisson(m(t)) with
+# m(t) = (lam/mu)(1 - e^{-t}); at saturation the relative CI is
+# 1.645 / sqrt(replicas * lam) — 0.010 for lam=800 (stops under
+# tol=0.03 at the first decision point past min_windows) vs 0.042 for
+# lam=50 (never stops)
+LAMS = (50.0, 800.0)
+REPLICAS, N_WINDOWS, T_END = 32, 8, 8.0
+
+
+def _system():
+    return make_system(
+        ["A"], [({}, {"A": 1}, LAMS[0]), ({"A": 1}, {}, 1.0)],
+        {"A": 0}, names=("birth", "death"))
+
+
+def _exp(steering=None, **kw):
+    kw.setdefault("window_block", 2)
+    return Experiment(
+        model=_system(),
+        ensemble=Ensemble.make(replicas=REPLICAS,
+                               sweep={"birth": list(LAMS)}),
+        schedule=Schedule(t_end=T_END, n_windows=N_WINDOWS),
+        reduction=Reduction.PER_POINT,
+        n_lanes=16, seed=5, steering=steering, **kw)
+
+
+_STOP = Steering(ci_rel_tol=0.03, min_windows=4)
+
+
+def _rec_tuple(res):
+    return [(r.t, r.n, r.mean.tobytes(), r.var.tobytes(),
+             r.ci90.tobytes()) for r in res.records]
+
+
+# ------------------------------------------------- identity contract
+def test_all_off_steering_is_inert_and_bitwise():
+    """`Steering()` (every lever off) never even instantiates the
+    policy, and an ACTIVE policy that makes no decision (tolerance no
+    point can meet) still leaves every record bit untouched — steered
+    runs route through the block collector, so this also pins
+    block-loop == per-window bitwise equality at window_block=1."""
+    plain = simulate(_exp())
+    inert = simulate(_exp(steering=Steering()))
+    assert inert._engine._steer is None
+    assert _rec_tuple(inert) == _rec_tuple(plain)
+
+    active = simulate(_exp(steering=Steering(ci_rel_tol=1e-9)))
+    assert active._engine._steer is not None
+    assert active.steering_report()["decisions"] == []
+    assert _rec_tuple(active) == _rec_tuple(plain)
+
+
+# ------------------------------------------------------- early-stop
+def test_early_stop_freezes_converged_point():
+    res = simulate(_exp(steering=_STOP))
+    rep = res.steering_report()
+    assert rep["stopped_points"] == [1]  # lam=800 converged
+    stop_w = rep["stop_windows"][1]
+    assert stop_w == 4  # first decision point past min_windows
+    # savings accounting: 8 + 4 of 16 point-windows simulated
+    assert rep["point_windows_simulated"] == N_WINDOWS + stop_w
+    assert rep["windows_saved_ratio"] == pytest.approx(16 / 12)
+
+    pp = res.per_point()
+    # the stopped point's record is frozen at its last live window...
+    for w in range(stop_w, N_WINDOWS):
+        assert (pp["mean"][w, 1] == pp["mean"][stop_w - 1, 1]).all()
+        assert (pp["var"][w, 1] == pp["var"][stop_w - 1, 1]).all()
+    # ...while the live (noisy) point keeps evolving
+    assert not (pp["mean"][N_WINDOWS - 1, 0]
+                == pp["mean"][stop_w - 1, 0]).all()
+
+
+def test_steered_decisions_and_records_deterministic():
+    """The determinism contract: (seed, Steering) fully determines the
+    decision log and every record bit."""
+    a, b = simulate(_exp(steering=_STOP)), simulate(_exp(steering=_STOP))
+    assert a.steering_report()["decisions"] \
+        == b.steering_report()["decisions"]
+    assert _rec_tuple(a) == _rec_tuple(b)
+
+
+# ------------------------------------------------------- reallocate
+def test_reallocation_moves_freed_lanes_to_worst_point():
+    res = simulate(_exp(steering=Steering(
+        ci_rel_tol=0.03, min_windows=4, reallocate=True)))
+    rep = res.steering_report()
+    realloc = [d for d in rep["decisions"]
+               if d["action"] == "reallocate"]
+    assert len(realloc) == 1
+    # all but one of the stopped point's lanes move to the live point
+    assert realloc[0] == {"window": 4, "action": "reallocate",
+                          "target": 0, "n_moved": REPLICAS - 1}
+    pp = res.per_point()
+    stop_w = rep["stop_windows"][1]
+    # grouped counts re-shape at the boundary: the live point absorbs
+    # the movers, the stopped point keeps one frozen lane behind
+    assert pp["n"][stop_w - 1, 0, 0] == REPLICAS
+    assert pp["n"][N_WINDOWS - 1, 0, 0] == 2 * REPLICAS - 1
+    assert pp["n"][N_WINDOWS - 1, 1, 0] == 1
+    # more replicas -> the live point's CI must tighten vs unsteered
+    base = simulate(_exp(steering=_STOP))
+    assert (pp["ci90"][N_WINDOWS - 1, 0]
+            < base.per_point()["ci90"][N_WINDOWS - 1, 0]).all()
+
+
+# ------------------------------------------------------- tau-switch
+def test_tau_switch_pins_fallback_bound_lanes_exact():
+    """A tau_fallback too high for any leap to be worth taking makes
+    every lane pure exact-fallback; the EMA leap share sits at 0, so
+    the switch pins the whole pool — without changing a record bit
+    (pinned lanes take the same exact steps they already took)."""
+    kw = dict(method=Method.TAU_LEAP, tau_fallback=1e6)
+    steered = simulate(_exp(steering=Steering(
+        tau_switch=True, tau_switch_min_steps=8), **kw))
+    rep = steered.steering_report()
+    assert rep["lanes_pinned_exact"] == 2 * REPLICAS
+    pins = [d for d in rep["decisions"] if d["action"] == "no_leap"]
+    assert pins and pins[0]["window"] == 2  # first block boundary
+    assert np.asarray(steered._engine._pool.no_leap).all()
+    plain = simulate(_exp(**kw))
+    assert _rec_tuple(steered) == _rec_tuple(plain)
+
+
+# ------------------------------------------------------- bimodality
+def test_bimodality_flags_land_in_decision_log():
+    """Policy-level: a synthetic two-mode histogram for (point 1,
+    obs 0) is flagged at the decision point; nothing else is
+    actioned."""
+    pol = SteeringPolicy(Steering(bimodality=True), n_instances=4,
+                         n_points=2, n_windows=4, tau_leap=False)
+    hist = np.zeros((2, 1, 16), np.int32)
+    hist[1, 0, 2:4] = (50, 45)
+    hist[1, 0, 11:13] = (40, 48)
+    z = np.zeros(4, np.int64)
+    actions = pol.decide(2, None, hist, np.zeros(4, np.int32), z, z)
+    assert not actions.any
+    assert pol.bimodal_flags == [{"window": 2, "point": 1, "obs": 0}]
+    assert pol.report()["bimodal_flags"] == pol.bimodal_flags
+
+
+# ------------------------------------- crash recovery (FailureInjector)
+def _steered_exp():
+    return _exp(steering=Steering(ci_rel_tol=0.03, min_windows=4,
+                                  reallocate=True),
+                sketch=SketchSpec(n_bins=16, hi=1024.0))
+
+
+def _block_drill(make_engine, path, plan):
+    """run_sim_with_failures' block-loop sibling: steered engines
+    advance via run_block (decisions live at collected block
+    boundaries), so the drill checkpoints per collected block and
+    rebuilds + restores on each scheduled crash."""
+    inj = FailureInjector(plan)
+    eng = make_engine()
+    eng.checkpoint(path)
+    crashed: set = set()
+    guard = 0
+    while eng._window < len(eng.grid):
+        w = eng._window
+        if w in plan.schedule and w not in crashed:
+            crashed.add(w)
+            inj.maybe_fail(w)
+            eng = make_engine()  # the pod is gone; rebuild + restore
+            eng.restore(path)
+            continue
+        if eng.run_block(pipeline=False):
+            eng.checkpoint(path)
+        guard += 1
+        assert guard < 10 * len(eng.grid), "drill did not converge"
+    return eng, inj.events
+
+
+def test_steered_crash_recovery_replays_decisions_bitwise(tmp_path):
+    """The recovery contract for steered runs: crash at two window
+    boundaries (one BEFORE the first decision, one AFTER lanes were
+    stopped and moved) — the surviving run's records, sketches, AND
+    steering decision log are identical to an uninterrupted run's,
+    because the policy state rides the checkpoint."""
+    plan = FailurePlan(schedule={2: "crash", 6: "crash"})
+    eng, events = _block_drill(
+        lambda: build_engine(_steered_exp()),
+        str(tmp_path / "steer_drill.npz"), plan)
+    assert len(events) == 2
+
+    clean = simulate(_steered_exp())
+    assert clean.steering_report()["stopped_points"] == [1]
+    assert eng.steering_report() == clean.steering_report()
+    drill_recs = [(r.t, r.n, r.mean.tobytes(), r.var.tobytes(),
+                   r.ci90.tobytes()) for r in eng.stream.records()]
+    assert drill_recs == _rec_tuple(clean)
+    for a, b in zip(eng.sketches(), clean.sketches()):
+        assert (a.hist == b.hist).all()

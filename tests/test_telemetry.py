@@ -92,3 +92,39 @@ def test_superstep_pipeline_stays_one_block_deep():
     assert len(eng._pending) == 1 and eng._window == 2
     eng.flush()
     assert not eng._pending and eng._window == 4
+
+
+# --------------------------------------------- straggler watchdog
+def test_window_watchdog_flags_outliers():
+    """Unit contract: a window whose wall share exceeds factor x the
+    rolling median (of PRIOR observations) is flagged with its
+    context; steady windows are not."""
+    from repro.runtime.straggler import WindowWatchdog
+
+    wd = WindowWatchdog(factor=3.0)
+    assert not wd.observe(0, 0.1)  # no history yet: self-median
+    for w in range(1, 5):
+        assert not wd.observe(w, 0.1)
+    assert wd.observe(5, 0.5)  # 5x the median
+    assert not wd.observe(6, 0.1)
+    assert wd.flagged == [(5, 0.5, 0.1)]
+    assert wd.straggler_rate() == 1 / 7
+
+
+@pytest.mark.parametrize("window_block", [1, 4])
+def test_watchdog_observes_every_window_into_telemetry(window_block):
+    """Engine wiring (per-window AND superstep collector): every
+    window's wall share feeds the watchdog, and the telemetry
+    surfaces its verdicts."""
+    res = simulate(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=N_INSTANCES),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        n_lanes=N_LANES, seed=7, window_block=window_block))
+    wd = res._engine.watchdog
+    assert len(wd.history) == N_WINDOWS
+    t = res.telemetry
+    assert t.straggler_rate == wd.straggler_rate()
+    assert t.straggler_windows == tuple(wd.flagged)
+    for w, wall, med in t.straggler_windows:
+        assert 0 <= w < N_WINDOWS and wall > 3.0 * med
