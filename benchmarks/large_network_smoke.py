@@ -1,0 +1,164 @@
+"""Large-network benchmark smoke run -> BENCH_PR7.json.
+
+Events/sec vs n_reactions for the DENSE engine against the SPARSE
+dependency-graph engine (`Experiment(sparse=True)`) on generated
+structured CWC models (`cell_ring_model` / `cell_lattice_model` —
+compartment rings and lattices, hundreds to thousands of species and
+reactions). Per row:
+
+* dense and sparse runs are interleaved and repeated; the reported
+  throughput is the BEST of the trials for each path (machine noise
+  only ever deflates events/sec, so max-of-N is the low-variance
+  estimator, applied identically to both paths),
+* events/sec = exact-SSA events fired per second of steady
+  (post-compile) wall: one warmup window is simulated first, the
+  remaining windows are timed end to end through `result.resume()`,
+* the records of every sparse run are asserted BITWISE equal to the
+  dense run's (mean/var/ci90) — the speedup must not buy a different
+  simulation.
+
+THE GATE (CI): on the largest generated model (the 16x16 lattice,
+R = 2048 >= 512) the sparse engine must deliver >= 2x the dense
+events/sec. The smaller rows chart the events/sec-vs-R curve and are
+reported ungated: the dependency-graph update wins asymptotically (the
+dense per-event Match/Update is O(R*S) where sparse pays O(out-degree)
+past the shared O(R) Resolve reduction), so the margin grows with R
+and the gate sits where the win is structural, not noise.
+
+  PYTHONPATH=src python benchmarks/large_network_smoke.py [out.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+import numpy as np  # noqa: E402
+
+from repro.api import Ensemble, Experiment, Schedule, simulate  # noqa: E402
+from repro.core.cwc.compile import (  # noqa: E402
+    cell_lattice_model,
+    cell_ring_model,
+    compile_model,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SEED = 11
+N_LANES = 64
+T_END = 0.5
+N_WINDOWS = 4
+TRIALS = 3
+GATE_MIN_R = 512
+GATE_SPEEDUP = 2.0
+# (name, model builder, gated): ordered by n_reactions so the JSON rows
+# read as the events/sec-vs-R curve; the largest model carries the gate
+ROWS = (
+    ("ring16", lambda: cell_ring_model(16), False),
+    ("ring80", lambda: cell_ring_model(80), False),
+    ("lattice16x16", lambda: cell_lattice_model(16, 16), True),
+)
+
+
+def run_path(model, sparse: bool):
+    """One measured run: warmup window (compile + first dispatch), then
+    the remaining windows timed end to end. Returns (result, events/s,
+    steady wall seconds)."""
+    exp = Experiment(
+        model=model,
+        ensemble=Ensemble.make(replicas=N_LANES),
+        schedule=Schedule(t_end=T_END, n_windows=N_WINDOWS),
+        n_lanes=N_LANES, seed=SEED, sparse=sparse)
+    res = simulate(exp, max_windows=1)
+    t0 = time.perf_counter()
+    res = res.resume()
+    wall = time.perf_counter() - t0
+    events = int(np.sum(res.telemetry.steps_per_window[1:]))
+    return res, events / wall, wall
+
+
+def assert_records_bitwise(dense, sparse, name: str):
+    for a, b in zip(dense.records, sparse.records):
+        assert a.t == b.t and a.n == b.n, name
+        assert (a.mean == b.mean).all(), (
+            f"{name}: sparse records diverged from dense (mean)")
+        assert (a.var == b.var).all(), (
+            f"{name}: sparse records diverged from dense (var)")
+        assert (a.ci90 == b.ci90).all(), (
+            f"{name}: sparse records diverged from dense (ci90)")
+
+
+def bench_row(name: str, build, gated: bool) -> dict:
+    model = build()
+    system = compile_model(model)[0]
+    r, s = system.n_reactions, system.n_species
+    dense_best = sparse_best = 0.0
+    dense_res = None
+    for _ in range(TRIALS):  # interleaved so load drift hits both paths
+        d_res, d_evps, _ = run_path(model, sparse=False)
+        s_res, s_evps, _ = run_path(model, sparse=True)
+        dense_res = dense_res or d_res
+        assert_records_bitwise(d_res, s_res, name)
+        dense_best = max(dense_best, d_evps)
+        sparse_best = max(sparse_best, s_evps)
+    speedup = sparse_best / dense_best
+    row = {
+        "n_reactions": r,
+        "n_species": s,
+        "dense_events_per_s": round(dense_best, 1),
+        "sparse_events_per_s": round(sparse_best, 1),
+        "speedup_sparse_vs_dense": round(speedup, 3),
+        "gated": gated,
+        "records_bitwise_equal": True,
+    }
+    print(f"large_network/{name}: R={r} S={s} dense {dense_best:,.0f} "
+          f"ev/s sparse {sparse_best:,.0f} ev/s -> {speedup:.2f}x"
+          f"{' [gated]' if gated else ''}")
+    if gated:
+        assert r >= GATE_MIN_R, (
+            f"{name}: gate row must be a large network (R={r} < "
+            f"{GATE_MIN_R})")
+        assert speedup >= GATE_SPEEDUP, (
+            f"{name}: sparse {sparse_best:,.0f} ev/s is only "
+            f"{speedup:.2f}x dense {dense_best:,.0f} ev/s "
+            f"(gate: >= {GATE_SPEEDUP}x at R >= {GATE_MIN_R})")
+    return row
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        REPO, "BENCH_PR7.json")
+    rows = {name: bench_row(name, build, gated)
+            for name, build, gated in ROWS}
+    doc = {
+        "pr": 7,
+        "generated_by": "benchmarks/large_network_smoke.py",
+        "config": {
+            "lanes": N_LANES, "t_end": T_END, "windows": N_WINDOWS,
+            "seed": SEED, "trials": TRIALS,
+            "throughput_measure": (
+                "events/sec = exact-SSA events over the steady "
+                "(post-warmup-window) end-to-end wall of resume(); "
+                "best of the interleaved trials per path"),
+            "gate": {
+                "min_n_reactions": GATE_MIN_R,
+                "min_speedup": GATE_SPEEDUP,
+                "row": "lattice16x16"},
+        },
+        "events_per_s_vs_n_reactions": rows,
+        "invariants": {
+            "sparse_records_bitwise_equal_dense": True,
+            "gated_row_speedup_ge_2x_at_r_ge_512": True,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,8 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         method=experiment.method.value,
         tau_eps=experiment.tau_eps,
         tau_fallback=experiment.tau_fallback,
-        window_block=experiment.window_block)
+        window_block=experiment.window_block,
+        sparse=experiment.sparse)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
     try:

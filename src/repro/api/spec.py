@@ -238,6 +238,14 @@ class Experiment:
     `SimulationResult.sketches()`. Integer-count merges keep them
     bitwise identical across dispatch paths, shard counts, and
     superstep widths.
+    sparse: large-network encoding (DESIGN.md §3g) — CSR-style padded
+    reactant/stoichiometry tables plus a precomputed reaction
+    dependency graph, so each SSA event recomputes only the affected
+    propensities (O(out-degree) instead of O(R)) and tau-leaping uses
+    the gather-form Match (no dense one-hot tensors). Bitwise identical
+    to the dense encoding on every dispatch path, and lifts the dense
+    path's MAX_COEF unroll ceiling (coefficients > 4 require
+    sparse=True).
     steering: adaptive between-block control (repro/steer) — early-stop
     converged sweep points, reallocate their freed replicas, per-lane
     exact<->tau auto-switch, bimodality flags. Decisions are a pure
@@ -264,6 +272,7 @@ class Experiment:
     tau_eps: float = 0.03
     tau_fallback: float = 10.0
     window_block: int = 1
+    sparse: bool = False
     sketch: Optional[SketchSpec] = None
     steering: Optional[Steering] = None
 

@@ -15,7 +15,6 @@ from repro.configs import (
     internvl2_1b,
     llama3_8b,
     olmoe_1b_7b,
-    seamless_m4t_large_v2,
     starcoder2_7b,
 )
 from repro.configs.base import (
@@ -34,7 +33,6 @@ _MODULES = {
     "starcoder2-7b": starcoder2_7b,
     "command-r-35b": command_r_35b,
     "gemma-7b": gemma_7b,
-    "seamless-m4t-large-v2": seamless_m4t_large_v2,
 }
 
 ARCH_NAMES = tuple(_MODULES)
@@ -61,7 +59,6 @@ _DEFAULT_STRATEGY: dict[str, ShardingConfig] = {
     "starcoder2-7b": ShardingConfig(strategy="fsdp_tp", grad_accum=4),
     "command-r-35b": ShardingConfig(strategy="fsdp_tp", grad_accum=8),
     "gemma-7b": ShardingConfig(strategy="fsdp_tp", grad_accum=4),
-    "seamless-m4t-large-v2": ShardingConfig(strategy="dp_tp", grad_accum=2),
 }
 
 

@@ -14,7 +14,7 @@ from collections import Counter
 import numpy as np
 
 from repro.core.cwc.rules import CWCModel, Rule, TransportRule
-from repro.core.cwc.terms import TOP, Term
+from repro.core.cwc.terms import TOP, Term, comp, term
 from repro.core.reactions import MAX_REACTANTS, ReactionSystem, make_system
 
 
@@ -106,6 +106,116 @@ def compile_model(model: CWCModel) -> tuple[ReactionSystem, dict]:
                         species.index(key))
     meta = {"species": species, "observables": obs_idx}
     return sys, meta
+
+
+# ---------------------------------------------------------------------
+# Large structured model generators (the sparse engine's target class).
+#
+# Real compartmentalised models scale by REPEATING a motif over a
+# topology — a ring of coupled cells, a tissue lattice — not by making
+# one compartment's chemistry huge. Compiled through `compile_model`,
+# n coupled cells become S ≈ 4n species and R ≈ 7n reactions whose
+# dependency graph has out-degree bounded by the motif (≈ 5), NOT by n:
+# firing a reaction in cell i touches only cell i's species and the
+# shared carrier slot for cell i, so the sparse engine's per-event cost
+# stays O(1) in the number of cells while the dense path pays O(R).
+
+
+def cell_ring_model(n_cells: int, k_express: float = 4.0,
+                    k_decay: float = 0.05, k_dim: float = 0.002,
+                    k_unpack: float = 0.5, k_hop: float = 1.0,
+                    k_export: float = 0.3, k_import: float = 0.8,
+                    p0: int = 40) -> CWCModel:
+    """A ring of `n_cells` coupled cells passing a cargo clockwise.
+
+    Cell i (compartment label ``c{i}``) runs a local motif —
+
+      g        -> g + p      (express)
+      p        -> ∅          (decay)
+      2 p      -> w{i}       (dimerise: packages cargo; coefficient 2)
+      w{i}     -> 2 p        (unpack: received cargo releases payload)
+
+    — and couples to its clockwise neighbour through the top level:
+    ``w{i}`` is exported out of cell i, relabelled ``w{(i+1) % n}`` by a
+    TOP hop rule, and imported into cell i+1. The cargo atom is named
+    per DESTINATION slot, so each TOP species is consumed by exactly
+    one import and one hop: the reaction dependency graph stays
+    motif-bounded (max out-degree ~5) no matter how large the ring is.
+
+    Sizes: S = 4n (g, p, w{i} per cell + n TOP carrier slots),
+    R = 7n (4 local + hop + export + import per cell).
+    """
+    if n_cells < 2:
+        raise ValueError(f"cell_ring_model needs >= 2 cells, "
+                         f"got {n_cells}")
+    rules = []
+    for i in range(n_cells):
+        lab, w, w_next = f"c{i}", f"w{i}", f"w{(i + 1) % n_cells}"
+        rules += [
+            Rule.make(lab, {"g": 1}, {"g": 1, "p": 1}, k_express,
+                      f"express{i}"),
+            Rule.make(lab, {"p": 1}, {}, k_decay, f"decay{i}"),
+            Rule.make(lab, {"p": 2}, {w: 1}, k_dim, f"dimerise{i}"),
+            Rule.make(lab, {w: 1}, {"p": 2}, k_unpack, f"unpack{i}"),
+            # at TOP the cargo is relabelled for its destination cell
+            Rule.make(TOP, {w: 1}, {w_next: 1}, k_hop, f"hop{i}"),
+            TransportRule(TOP, w, lab, "out", k_export, f"export{i}"),
+            TransportRule(TOP, w, lab, "in", k_import, f"import{i}"),
+        ]
+
+    def init(n=n_cells, p0=p0):
+        return term(comps=[comp(f"c{i}", content=term({"g": 1, "p": p0}))
+                           for i in range(n)])
+
+    return CWCModel(
+        rules=tuple(rules), init_fn=init,
+        observables=(("c0", "p"), ("c0", "w0"), (TOP, "w0")),
+        name=f"cell-ring-{n_cells}")
+
+
+def cell_lattice_model(rows: int, cols: int, k_express: float = 4.0,
+                       k_decay: float = 0.05, k_dim: float = 0.002,
+                       k_unpack: float = 0.5, k_hop: float = 1.0,
+                       k_export: float = 0.3, k_import: float = 0.8,
+                       p0: int = 40) -> CWCModel:
+    """`cell_ring_model`'s motif on a rows × cols torus: each cell's
+    exported cargo hops east or south with equal rate, so every TOP
+    carrier is consumed by TWO hop rules + one import (out-degree still
+    motif-bounded). Sizes: S = 4·rows·cols, R = 8·rows·cols."""
+    if rows < 1 or cols < 1 or rows * cols < 2:
+        raise ValueError(f"cell_lattice_model needs >= 2 cells, "
+                         f"got {rows}x{cols}")
+    n = rows * cols
+
+    def cid(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    rules = []
+    for r in range(rows):
+        for c in range(cols):
+            i = cid(r, c)
+            lab, w = f"c{i}", f"w{i}"
+            w_east, w_south = f"w{cid(r, c + 1)}", f"w{cid(r + 1, c)}"
+            rules += [
+                Rule.make(lab, {"g": 1}, {"g": 1, "p": 1}, k_express,
+                          f"express{i}"),
+                Rule.make(lab, {"p": 1}, {}, k_decay, f"decay{i}"),
+                Rule.make(lab, {"p": 2}, {w: 1}, k_dim, f"dimerise{i}"),
+                Rule.make(lab, {w: 1}, {"p": 2}, k_unpack, f"unpack{i}"),
+                Rule.make(TOP, {w: 1}, {w_east: 1}, k_hop, f"hop-e{i}"),
+                Rule.make(TOP, {w: 1}, {w_south: 1}, k_hop, f"hop-s{i}"),
+                TransportRule(TOP, w, lab, "out", k_export, f"export{i}"),
+                TransportRule(TOP, w, lab, "in", k_import, f"import{i}"),
+            ]
+
+    def init(n=n, p0=p0):
+        return term(comps=[comp(f"c{i}", content=term({"g": 1, "p": p0}))
+                           for i in range(n)])
+
+    return CWCModel(
+        rules=tuple(rules), init_fn=init,
+        observables=(("c0", "p"), ("c0", "w0"), (TOP, "w0")),
+        name=f"cell-lattice-{rows}x{cols}")
 
 
 def _path_str(path, label) -> str:

@@ -6,9 +6,15 @@
   an E. coli cell compartment (the Fig. 1 experiment's model family).
 * `membrane_transport()` — compartment demo: molecules crossing a cell
   membrane, exercising the CWC compartment fragment.
+* `ring{8,80}` / `lattice8x8` — generated large structured models
+  (`cwc.compile.cell_ring_model` / `cell_lattice_model`): a local
+  gene-expression/cargo motif repeated over a ring or torus of coupled
+  cells. Hundreds of species/reactions with motif-bounded dependency
+  out-degree — the sparse engine's target class (DESIGN.md §3g).
 """
 from __future__ import annotations
 
+from repro.core.cwc.compile import cell_lattice_model, cell_ring_model
 from repro.core.cwc.rules import CWCModel, Rule, TransportRule
 from repro.core.cwc.terms import TOP, comp, term
 
@@ -104,4 +110,7 @@ MODELS = {
     "lv8": lambda: lotka_volterra(8),
     "ecoli": ecoli_gene_regulation,
     "transport": membrane_transport,
+    "ring8": lambda: cell_ring_model(8),       # S=32, R=56 (tests)
+    "ring80": lambda: cell_ring_model(80),     # S=320, R=560 (bench)
+    "lattice8x8": lambda: cell_lattice_model(8, 8),  # S=256, R=512
 }

@@ -24,11 +24,13 @@ families — single-simulation speedup × simulation farm — composed),
 and the host loop keeps it per group as the baseline.
 
 The per-lane ALGORITHM is a second, orthogonal seam
-(`SimConfig.method`): the unfused bodies take any
-`step_fn(state, tensors, horizon)` (exact `gillespie.ssa_step` or
-`tau_leap.make_tau_step`), the kernel bodies take the engine-built
-chunk loop (exact or tau — `engine._make_chunk_loop`); every
-strategy × method pairing stays bit-identical per lane.
+(`SimConfig.method` × `SimConfig.sparse`): the unfused bodies take the
+engine-built `advance_fn(lane_slice, rates, horizon)`
+(`gillespie.make_advance_fn` — exact `gillespie.ssa_step`,
+`tau_leap.make_tau_step`, dense or sparse dependency-graph), the
+kernel bodies take the engine-built chunk loop (exact or tau, dense or
+sparse — `engine._make_chunk_loop`); every strategy × method ×
+encoding pairing stays bit-identical per lane.
 
 A third, orthogonal seam is the SUPERSTEP width
 (`SimConfig.window_block`): the fused and sharded strategies expose
@@ -67,7 +69,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import reduction
-from repro.core.gillespie import LaneState, ssa_step
+from repro.core.gillespie import LaneState
 from repro.stats.sketch import window_sketch
 
 
@@ -201,23 +203,22 @@ def _obs_extractor(obs_idx):
     return extract
 
 
-def make_window_body(tensors3, n_lanes: int, obs_idx,
-                     max_steps: Optional[int], step_fn=ssa_step):
+def make_window_body(advance_fn, n_lanes: int, obs_idx):
     """The shared whole-pool window advance: permutation gather,
     lax.scan over fixed-size lane slices (each running the masked
-    per-lane step loop to the horizon), inverse scatter, device-side
+    per-lane advance to the horizon), inverse scatter, device-side
     observables.
 
-    `step_fn(state, (idx, coef, delta, rates), horizon) -> state` is
-    the per-lane algorithm — `gillespie.ssa_step` (exact, the default)
-    or `tau_leap.make_tau_step(...)` (Method.TAU_LEAP); the window
-    machinery is method-agnostic.
+    `advance_fn(lane_slice, rates, horizon) -> LaneState` is the
+    engine-built per-slice loop (`gillespie.make_advance_fn` — dense
+    exact, tau-leap, or the sparse dependency-graph step with its
+    carried propensity vector); the window machinery is method- and
+    encoding-agnostic.
 
     Used verbatim by BOTH the fused and the sharded strategies (the
     sharded one applies it per shard with shard-local indices), which
     is what keeps their per-lane trajectories bit-identical.
     """
-    idx_t, coef_t, delta_t = tensors3
     extract_obs = _obs_extractor(obs_idx)
 
     def window_body(pool: LaneState, rates, perm, horizon):
@@ -231,25 +232,7 @@ def make_window_body(tensors3, n_lanes: int, obs_idx,
 
         def advance_group(carry, grp):
             sl, r = grp
-            tensors = (idx_t, coef_t, delta_t, r)
-
-            def cond(s):
-                return jnp.any((s.t < horizon) & ~s.dead)
-
-            def body(s):
-                return step_fn(s, tensors, horizon)
-
-            if max_steps is None:
-                out = jax.lax.while_loop(cond, body, sl)
-            else:
-                out = jax.lax.fori_loop(
-                    0, max_steps,
-                    lambda _, s: jax.lax.cond(
-                        cond(s), body, lambda s_: s_, s),
-                    sl)
-            out = out._replace(
-                t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
-            return carry, out
+            return carry, advance_fn(sl, r, horizon)
 
         _, advanced = jax.lax.scan(advance_group, 0, (lanes, rates_g))
         flat = jax.tree_util.tree_map(
@@ -304,13 +287,14 @@ class HostLoopDispatch(_Dispatch):
 
     def _make_advance(self):
         eng = self.eng
-        idx_t, coef_t, delta_t, _ = eng._tensors_base
         cfg = eng.cfg
 
         if cfg.use_kernel:
+            idx_t, coef_t, delta_t, _ = eng._tensors_base
             # the chunk loop is one jitted launch (device-side
             # while_loop): one dispatch per group, no mid-window host
-            # syncs — exact or tau-leap per the engine's method
+            # syncs — exact or tau-leap, dense or sparse, per the
+            # engine's method/encoding
             chunk_loop = eng._make_chunk_loop()
 
             def advance(pool_slice, rates, horizon):
@@ -319,30 +303,9 @@ class HostLoopDispatch(_Dispatch):
 
             return jax.jit(advance, donate_argnums=(0,))
 
-        max_steps = cfg.max_steps_per_window
-        step_fn = eng._lane_step
-
-        def advance(pool_slice: LaneState, rates, horizon):
-            tensors = (idx_t, coef_t, delta_t, rates)
-
-            def cond(s):
-                return jnp.any((s.t < horizon) & ~s.dead)
-
-            def body(s):
-                return step_fn(s, tensors, horizon)
-
-            if max_steps is None:
-                out = jax.lax.while_loop(cond, body, pool_slice)
-            else:
-                out = jax.lax.fori_loop(
-                    0, max_steps,
-                    lambda _, s: jax.lax.cond(
-                        cond(s), body, lambda s_: s_, s),
-                    pool_slice)
-            return out._replace(
-                t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
-
-        return jax.jit(advance, donate_argnums=(0,))
+        # the engine-built per-slice loop — the SAME advance the fused/
+        # sharded window bodies scan, jitted per group here
+        return jax.jit(eng._make_advance_fn(), donate_argnums=(0,))
 
     def _gather(self, idx) -> tuple[LaneState, jax.Array]:
         p = self.eng._pool
@@ -433,11 +396,9 @@ class FusedDispatch(_Dispatch):
                 (idx_t, coef_t, delta_t), engine.obs_idx,
                 engine._make_chunk_loop())
         else:
-            body = make_window_body((idx_t, coef_t, delta_t),
+            body = make_window_body(engine._make_advance_fn(),
                                     engine.scheduler.n_lanes,
-                                    engine.obs_idx,
-                                    cfg.max_steps_per_window,
-                                    step_fn=engine._lane_step)
+                                    engine.obs_idx)
         self._body = body
         self._step = jax.jit(body, donate_argnums=(0,))
         self._block_step = None  # built lazily on first superstep
@@ -557,10 +518,8 @@ class ShardedDispatch(_Dispatch):
                 (idx_t, coef_t, delta_t), eng.obs_idx,
                 eng._make_chunk_loop())
         else:
-            body = make_window_body((idx_t, coef_t, delta_t),
-                                    eng.scheduler.n_lanes, eng.obs_idx,
-                                    eng.cfg.max_steps_per_window,
-                                    step_fn=eng._lane_step)
+            body = make_window_body(eng._make_advance_fn(),
+                                    eng.scheduler.n_lanes, eng.obs_idx)
 
         def local(pool, rates, perm, gids, horizon):
             if use_kernel:
@@ -658,10 +617,8 @@ class ShardedDispatch(_Dispatch):
                 (idx_t, coef_t, delta_t), eng.obs_idx,
                 eng._make_chunk_loop())
         else:
-            body = make_window_body((idx_t, coef_t, delta_t),
-                                    eng.scheduler.n_lanes, eng.obs_idx,
-                                    eng.cfg.max_steps_per_window,
-                                    step_fn=eng._lane_step)
+            body = make_window_body(eng._make_advance_fn(),
+                                    eng.scheduler.n_lanes, eng.obs_idx)
 
         def local(pool, rates, perm, gids, horizons):
             def step(p, h):

@@ -64,10 +64,12 @@ from repro.core.dispatch import Partitioning, select_dispatch
 from repro.core.gillespie import (
     LaneState,
     init_lanes,
+    make_advance_fn,
+    sparse_system_tensors,
     ssa_step,
     system_tensors,
 )
-from repro.core.reactions import ReactionSystem
+from repro.core.reactions import ReactionSystem, sparse_tables
 from repro.core.scheduler import Scheduler
 from repro.core.stream import StatsRecord, StatsStream
 from repro.runtime.straggler import WindowWatchdog
@@ -109,6 +111,16 @@ class SimConfig:
     # per window. 1 (default) is the unchanged per-window path;
     # records are bitwise identical for any value (DESIGN.md §3e).
     window_block: int = 1
+    # sparse large-network encoding (DESIGN.md §3g): CSR-style padded
+    # reactant tables + a precomputed reaction dependency graph so a
+    # firing recomputes only the affected propensities (O(out-degree)
+    # per event instead of O(R·M)), and the kernels hold only
+    # O(R·(M+K+D)) sparse tables instead of O(S·R) one-hots. Composes
+    # with every strategy × method × window_block; trajectories and
+    # records are BITWISE identical to the dense path. Also lifts the
+    # dense MAX_COEF ceiling (table-free comb unroll to the system's
+    # actual max coefficient).
+    sparse: bool = False
 
     def __post_init__(self):
         if self.window_block < 1:
@@ -200,7 +212,15 @@ class SimulationEngine:
             min(cfg.n_lanes, cfg.n_instances // n_shards),
             policy=("static_rr" if cfg.schema == "i" else cfg.policy),
             n_shards=n_shards)
-        self._tensors_base = system_tensors(self.system)
+        # dense gather-form tensors are always built (the sparse exact
+        # path still seeds its carried propensity vector with the dense
+        # evaluation, and sparse tau keeps the dense delta matmuls);
+        # the MAX_COEF ceiling only binds when the dense comb unroll
+        # would actually be used
+        self._tensors_base = system_tensors(self.system,
+                                            require_dense=not cfg.sparse)
+        self._sparse_tensors = (sparse_system_tensors(
+            sparse_tables(self.system)) if cfg.sparse else None)
         self._window = 0
         # superstep pipeline (window_block > 1): windows DISPATCHED to
         # the device run ahead of windows COLLECTED (records emitted);
@@ -217,8 +237,12 @@ class SimulationEngine:
 
             self._gi_tab = jnp.asarray(tau_leap.gi_tables(self.system))
             self._rmask = jnp.asarray(tau_leap.reactant_mask(self.system))
+            # the sparse seam keeps tau-leap Match in gather form
+            # (bitwise equal to the one-hot form, no MAX_COEF ceiling)
             self._lane_step = tau_leap.make_tau_step(
-                self._gi_tab, self._rmask, cfg.tau_eps, cfg.tau_fallback)
+                self._gi_tab, self._rmask, cfg.tau_eps, cfg.tau_fallback,
+                gather_max_c=(max(self.system.max_coef, 1)
+                              if cfg.sparse else None))
         else:
             self._lane_step = ssa_step
         # schemas i/ii always buffer raw per-window samples; schema iii
@@ -338,14 +362,43 @@ class SimulationEngine:
 
         cfg = self.cfg
         if cfg.method == "tau_leap":
+            if cfg.sparse:
+                return partial(ops.sparse_tau_window_chunk_loop,
+                               gi=self._gi_tab, rmask=self._rmask,
+                               eps=cfg.tau_eps, fallback=cfg.tau_fallback,
+                               max_c=max(self.system.max_coef, 1),
+                               chunk_steps=cfg.kernel_chunk_steps,
+                               max_chunks=cfg.kernel_max_chunks)
             return partial(ops.tau_window_chunk_loop,
                            gi=self._gi_tab, rmask=self._rmask,
                            eps=cfg.tau_eps, fallback=cfg.tau_fallback,
                            chunk_steps=cfg.kernel_chunk_steps,
                            max_chunks=cfg.kernel_max_chunks)
+        if cfg.sparse:
+            return partial(ops.sparse_window_chunk_loop,
+                           sp=self._sparse_tensors,
+                           chunk_steps=cfg.kernel_chunk_steps,
+                           max_chunks=cfg.kernel_max_chunks)
         return partial(ops.window_chunk_loop,
                        chunk_steps=cfg.kernel_chunk_steps,
                        max_chunks=cfg.kernel_max_chunks)
+
+    # ------------------------------------------------------------------
+    def _make_advance_fn(self):
+        """Per-lane-slice advance for the UNFUSED bodies (the encoding
+        × method seam in one place): `advance(lane_slice, rates,
+        horizon) -> LaneState`. Dense exact/tau iterate `_lane_step`;
+        sparse exact runs the dependency-graph step with its carried
+        propensity vector; sparse tau is `_lane_step` built with the
+        gather-form Match. All bitwise identical to dense."""
+        cfg = self.cfg
+        idx_t, coef_t, delta_t, _ = self._tensors_base
+        if cfg.sparse and cfg.method != "tau_leap":
+            return make_advance_fn(None, None, cfg.max_steps_per_window,
+                                   sparse=self._sparse_tensors)
+        return make_advance_fn(self._lane_step,
+                               (idx_t, coef_t, delta_t),
+                               cfg.max_steps_per_window)
 
     # ------------------------------------------------------------------
     def _sketch_eval(self):

@@ -21,7 +21,14 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.reactions import ReactionSystem, propensities
+from repro.core.reactions import (
+    ReactionSystem,
+    SparseTables,
+    comb_factors,
+    propensities,
+    require_dense_capable,
+    sparse_tables,
+)
 from repro.core.stream import counter_uniforms, ctr_add
 
 
@@ -117,13 +124,257 @@ def ssa_step(state: LaneState, system_tensors, horizon) -> LaneState:
     )
 
 
-def system_tensors(system: ReactionSystem, rates=None):
+def system_tensors(system: ReactionSystem, rates=None, *,
+                   require_dense: bool = True):
+    """Dense gather-form tensors. Dense evaluation unrolls C(n, c) to
+    MAX_COEF, so by default this refuses systems with larger
+    coefficients (run those with sparse=True)."""
+    if require_dense:
+        require_dense_capable(system)
     return (
         jnp.asarray(system.reactant_idx),
         jnp.asarray(system.reactant_coef),
         jnp.asarray(system.delta, jnp.float32),
         jnp.asarray(system.rates if rates is None else rates, jnp.float32),
     )
+
+
+def sparse_system_tensors(tables: SparseTables):
+    """Device-side sparse tables as one tuple: (idx_pad (R+1, M),
+    coef_pad (R+1, M), dep_idx (R+1, K), delta_idx (R+1, D),
+    delta_val (R+1, D), max_c). Threaded opaquely through window bodies
+    and kernels the way `system_tensors` tuples are."""
+    return (
+        jnp.asarray(tables.reactant_idx),
+        jnp.asarray(tables.reactant_coef),
+        jnp.asarray(tables.dep_idx),
+        jnp.asarray(tables.delta_idx),
+        jnp.asarray(tables.delta_val),
+        int(tables.max_coef),
+    )
+
+
+def pad_rates(rates):
+    """Append the PAD reaction's zero rate: (R,) -> (R+1,) or (B, R) ->
+    (B, R+1). Done ONCE per window so the per-event dep gather stays
+    O(out-degree)."""
+    rates = jnp.asarray(rates, jnp.float32)
+    if rates.ndim == 1:
+        return jnp.concatenate([rates, jnp.zeros((1,), rates.dtype)])
+    return jnp.concatenate(
+        [rates, jnp.zeros((rates.shape[0], 1), rates.dtype)], axis=1)
+
+
+def initial_propensities(x, sp, rates):
+    """Dense evaluation seeding the carried (B, R) propensity vector.
+
+    Propensities are a pure function of x, so re-seeding at any window
+    or chunk boundary reproduces the carried value bitwise — which is
+    what lets every execution granularity (host loop, fused window,
+    kernel chunks) share one contract. Uses the SAME slot order and
+    rates-first association as the dense path; the unroll bound differs
+    only in exact no-op iterations.
+    """
+    idx_pad, coef_pad, _, _, _, max_c = sp
+    return propensities(x, idx_pad[:-1], coef_pad[:-1], rates, max_c)
+
+
+def bind_sparse_step(sp, rates):
+    """Hoist the per-window table packing for `sparse_ssa_step`.
+
+    XLA:CPU gathers pay per-OP overhead that dwarfs the handful of
+    elements each one moves, so the per-event table lookups are fused
+    into TWO row gathers: every reaction row j carries its whole update
+    recipe contiguously —
+
+      int_tab[j]  = [delta_idx (D) | dep(j) (K) | reactant idx of each
+                     dep row, flattened (K·M)]
+      flt_tab[j]  = [delta_val (D) | reactant coef of each dep row
+                     (K·M) | rates of each dep row (K)]
+
+    both with the all-pad row R at the end (non-firing lanes index it).
+    The dep-row rates fold into flt_tab only for shared (R,)-shaped
+    rates; per-instance sweep rates stay a separate (B, R+1) operand
+    gathered per event (`rates2d`). Packing is pure memory layout —
+    every value is the same float/int the unpacked tables held — and
+    runs once per window/chunk launch, so the per-event cost is
+    O(out-degree) gathers regardless of how the rates are shaped.
+
+    Returns (int_tab, flt_tab, rates2d, max_c, d, k, m).
+    """
+    idx_pad, coef_pad, dep_idx, delta_idx, delta_val, max_c = sp
+    d = delta_idx.shape[1]
+    k = dep_idx.shape[1]
+    m = idx_pad.shape[1]
+    r1 = dep_idx.shape[0]
+    ridx = idx_pad[dep_idx].reshape(r1, k * m)
+    int_tab = jnp.concatenate([delta_idx, dep_idx, ridx], axis=1)
+    coefs = coef_pad[dep_idx].reshape(r1, k * m).astype(jnp.float32)
+    rp = pad_rates(rates)
+    if rp.ndim == 1:
+        flt_tab = jnp.concatenate([delta_val, coefs, rp[dep_idx]], axis=1)
+        rates2d = None
+    else:
+        flt_tab = jnp.concatenate([delta_val, coefs], axis=1)
+        rates2d = rp
+    return (int_tab, flt_tab, rates2d, max_c, d, k, m)
+
+
+def resolve_carry(a):
+    """(a, a0, cum) — the Resolve inputs the sparse step carries.
+
+    a0 and cum are the SAME `a.sum(axis=1)` / `jnp.cumsum(a, axis=1)`
+    the dense step computes per event, evaluated eagerly whenever `a`
+    changes (seed time, and the tail of every `sparse_ssa_step`)
+    instead of lazily at the top of the next step. Same ops on the same
+    values — the pipelining exists so that each loop iteration only
+    WRITES the carried `a` buffer (the dep-row scatter): with no
+    read-before-write hazard on `a`, XLA updates it in place instead of
+    copying the (B, R) buffer every event.
+    """
+    return a, a.sum(axis=1), jnp.cumsum(a, axis=1)
+
+
+def sparse_ssa_step(state: LaneState, aci, bound, horizon):
+    """One direct-method step with dependency-graph propensity updates.
+
+    Identical Resolve/clock/counter logic to `ssa_step`, but Match and
+    Update are sparse: `aci = (a, a0, cum)` (`resolve_carry`) carries
+    the (B, R) propensity vector (invariant: bitwise equal to
+    `propensities(state.x, ...)`) with its Resolve reductions, the
+    Update scatters the fired reaction's delta list, and only the
+    dep(j) rows of `a` are recomputed — O(out-degree) gathered work per
+    event instead of O(R·M). The O(R) elementwise Resolve (sum/cumsum)
+    is retained: the inverse-CDF choice must accumulate in dense order
+    to stay bitwise identical to the reference.
+
+    bound: `bind_sparse_step(sp, rates)` — packed once per window.
+    Returns (LaneState, aci).
+    """
+    a, a0, cum = aci
+    int_tab, flt_tab, rates2d, max_c, d, k, m = bound
+    r = int_tab.shape[0] - 1
+    b, s = state.x.shape
+    active = (state.t < horizon) & ~state.dead
+    dead = a0 <= 0.0
+    u1, u2 = _uniforms(state)
+    tau = -jnp.log(u1) / jnp.maximum(a0, 1e-30)
+    t_next = state.t + tau
+    fire = active & ~dead & (t_next <= horizon)
+    thresh = (u2 * a0)[:, None]
+    j = jnp.argmax(cum >= thresh, axis=1)  # (B,)
+    rows = jnp.arange(b)[:, None]
+    # jd: the fired reaction, or the all-pad row R for lanes that did
+    # not fire — the two packed-row gathers below ride this single
+    # select instead of each masking its own (B, ·) result
+    jd = jnp.where(fire, j, r)
+    it = int_tab[jd]  # (B, D + K + K·M)
+    ft = flt_tab[jd]  # (B, D + K·M [+ K])
+    didx, dep = it[:, :d], it[:, d:d + k]
+    ridx = it[:, d + k:]
+    dval, coefs = ft[:, :d], ft[:, d:d + k * m].reshape(b, k, m)
+    if rates2d is None:
+        rate_rows = ft[:, d + k * m:]
+    else:
+        rate_rows = jnp.take_along_axis(rates2d, dep, axis=1)
+    # sparse Update: scatter the fired delta list; pad slots (and every
+    # slot of non-firing lanes, via row R) point at column S and are
+    # dropped. Bitwise equal to the dense x + delta[j]: untouched
+    # entries are x + 0.0 there, and populations are never -0.0.
+    x = state.x.at[rows, didx].add(dval, mode="drop")
+    # dependency-graph Match: recompute ONLY dep(j) rows from the new x;
+    # rows outside dep(j) keep their carried value — their reactant
+    # populations did not change, so a recomputation would return the
+    # identical bits. Same scalar math as `propensities`: pad-slot pops
+    # gather the neutral 1.0 (out-of-range fill), the comb unroll runs
+    # all M slots batched (exact no-ops past each coef), and the slot
+    # products multiply rates-first in slot order.
+    pops = jnp.take_along_axis(x, ridx, axis=1, mode="fill",
+                               fill_value=1.0).reshape(b, k, m)
+    f = comb_factors(pops, coefs, max_c)
+    a_new = rate_rows.astype(x.dtype)
+    for mm in range(m):
+        a_new = a_new * f[:, :, mm]
+    a = a.at[rows, dep].set(a_new, mode="drop")
+    # an active lane either fired (clock -> t_next) or froze at the
+    # horizon: ~fire for an active lane means dead (tau = +inf) or an
+    # overshooting t_next, and both froze to `horizon` in the dense
+    # step's where-chain too — same values, two selects instead of four
+    t = jnp.where(active, jnp.where(fire, t_next, horizon), state.t)
+    lo, hi = ctr_add(state.ctr, state.ctr_hi, active.astype(jnp.uint32))
+    return LaneState(
+        x=x,
+        t=t,
+        key=state.key,
+        ctr=lo,
+        ctr_hi=hi,
+        steps=state.steps + fire.astype(jnp.int32),
+        leaps=state.leaps,
+        dead=state.dead | (active & dead),
+        no_leap=state.no_leap,
+    ), resolve_carry(a)
+
+
+def make_advance_fn(step_fn, tensors3, max_steps: Optional[int],
+                    sparse=None):
+    """Build `advance(lane_slice, rates, horizon) -> LaneState`: the
+    masked per-lane loop to the horizon, bounded by max_steps when set.
+
+    This is THE loop every execution path shares — the fused/sharded
+    window bodies scan it per lane group and the host-loop strategy
+    jits it per group — so the horizon-freeze and step-bound semantics
+    live in exactly one place.
+
+    `step_fn(state, (idx, coef, delta, rates), horizon) -> state` is
+    the per-lane algorithm (`ssa_step`, `tau_leap.make_tau_step(...)`,
+    dense or gather-Match). `sparse` switches to the dependency-graph
+    exact step: pass the `sparse_system_tensors` tuple; the carry is
+    then (LaneState, propensity vector), seeded densely on entry —
+    bitwise identical to a dense run because propensities are a pure
+    function of x.
+    """
+    idx_t = coef_t = delta_t = None
+    if tensors3 is not None:
+        idx_t, coef_t, delta_t = tensors3
+
+    def advance(sl: LaneState, rates, horizon):
+        def lane_cond(s):
+            return jnp.any((s.t < horizon) & ~s.dead)
+
+        if sparse is None:
+            tensors = (idx_t, coef_t, delta_t, rates)
+            cond, init = lane_cond, sl
+
+            def body(s):
+                return step_fn(s, tensors, horizon)
+
+            def unwrap(c):
+                return c
+        else:
+            bound = bind_sparse_step(sparse, rates)
+            init = (sl, resolve_carry(
+                initial_propensities(sl.x, sparse, rates)))
+
+            def cond(c):
+                return lane_cond(c[0])
+
+            def body(c):
+                return sparse_ssa_step(c[0], c[1], bound, horizon)
+
+            def unwrap(c):
+                return c[0]
+
+        if max_steps is None:
+            out = unwrap(jax.lax.while_loop(cond, body, init))
+        else:
+            out = unwrap(jax.lax.fori_loop(
+                0, max_steps,
+                lambda _, c: jax.lax.cond(cond(c), body, lambda c_: c_, c),
+                init))
+        return out._replace(
+            t=jnp.where(out.dead, jnp.maximum(out.t, horizon), out.t))
+
+    return advance
 
 
 def advance_to(state: LaneState, system_tensors, horizon,

@@ -21,9 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 MAX_REACTANTS = 4  # max distinct species on a rule LHS (CWC rules are small)
-# C(n, c) evaluation (`propensities` / kernels `_comb_factors`) is
-# unrolled to c <= MAX_COEF; larger multiplicities MUST be rejected at
-# construction — they would yield silently wrong propensities
+# The DENSE path unrolls C(n, c) (`propensities` / kernels
+# `_comb_factors`) to c <= MAX_COEF and rejects larger multiplicities
+# when dense tensors are built (`require_dense_capable`) — they would
+# yield silently wrong propensities. The SPARSE path is table-free: it
+# unrolls to the system's actual `max_coef`, so any multiplicity works.
 MAX_COEF = 4
 
 
@@ -33,7 +35,8 @@ class ReactionSystem:
 
     reactant_idx:  (R, MAX_REACTANTS) int32 — species index, S = padding
     reactant_coef: (R, MAX_REACTANTS) int32 — multiplicity, 0 = padding
-                   (each entry <= MAX_COEF, enforced at construction)
+                   (dense paths require <= MAX_COEF, checked when dense
+                   tensors are built; the sparse path takes any value)
     delta:         (R, S) int32 — product-minus-reactant stoichiometry
     rates:         (R,) float32 — kinetic constants
     species_names / reaction_names: labels for reporting
@@ -48,18 +51,12 @@ class ReactionSystem:
     species_names: tuple[str, ...]
     reaction_names: tuple[str, ...]
 
-    def __post_init__(self):
-        bad = np.argwhere(np.asarray(self.reactant_coef) > MAX_COEF)
-        if bad.size:
-            j, m = (int(v) for v in bad[0])
-            name = (self.reaction_names[j]
-                    if j < len(self.reaction_names) else f"r{j}")
-            raise ValueError(
-                f"reaction {name!r} has stoichiometric coefficient "
-                f"{int(self.reactant_coef[j, m])} > MAX_COEF={MAX_COEF}: "
-                "the combination factors C(n, c) are unrolled to "
-                f"c <= {MAX_COEF}, so this system would evaluate to "
-                "silently wrong propensities")
+    @property
+    def max_coef(self) -> int:
+        """Largest reactant multiplicity — the sparse `comb_factors`
+        unroll bound. Dense paths additionally require <= MAX_COEF."""
+        c = np.asarray(self.reactant_coef)
+        return int(c.max()) if c.size else 0
 
     @property
     def n_species(self) -> int:
@@ -124,18 +121,127 @@ def make_system(species: Sequence[str],
     return sys
 
 
-def _comb_table(max_coef: int = 8):
-    """C(n, c) via falling factorial / c! — differentiable-free, exact for
-    counts < 2^24 in fp32."""
-    return None  # computed inline; kept for documentation
+def require_dense_capable(system: ReactionSystem) -> None:
+    """Reject systems the DENSE path would silently mis-evaluate.
+
+    The dense `comb_factors` unroll is fixed at c <= MAX_COEF; a larger
+    stoichiometric coefficient yields wrong propensities, so it must be
+    refused wherever dense tensors are built. The sparse path
+    (`sparse=True`) unrolls to the actual `system.max_coef` and has no
+    such ceiling.
+    """
+    coef = np.asarray(system.reactant_coef)
+    bad = np.argwhere(coef > MAX_COEF)
+    if bad.size:
+        j, m = (int(v) for v in bad[0])
+        name = (system.reaction_names[j]
+                if j < len(system.reaction_names) else f"r{j}")
+        raise ValueError(
+            f"reaction {name!r} has stoichiometric coefficient "
+            f"{int(coef[j, m])} > MAX_COEF={MAX_COEF}: the dense path "
+            f"unrolls the combination factors C(n, c) to c <= {MAX_COEF} "
+            "and would evaluate silently wrong propensities — run this "
+            "system with sparse=True (table-free unroll to the actual "
+            "max coefficient)")
+
+
+@dataclass(frozen=True)
+class SparseTables:
+    """Device-ready sparse structure derived from a ReactionSystem.
+
+    All tables are padded to rectangular shapes so gather/scatter stays
+    jit/scan/Pallas-compatible; pad entries use out-of-range indices and
+    are dropped with `mode="drop"` scatters (or gather a neutral slot).
+
+    reactant_idx / reactant_coef / rate_pad: (R+1, M) — the reactant
+        tables with one extra PAD reaction row (idx = S, coef = 0,
+        rate = 0) so a dependency-list pad entry (R) gathers a row that
+        evaluates to propensity 0 and is then dropped on scatter.
+    dep_idx: (R+1, K) int32 — dep(j): the reactions whose reactant
+        populations change when j fires (R = pad). Row R is all-pad,
+        used by lanes that did not fire. K = max out-degree.
+    delta_idx: (R+1, D) int32 — species changed by j (S = pad). Row R
+        is all-pad so non-firing lanes index it directly (one gather,
+        no mask) and their scatter drops.
+    delta_val: (R+1, D) float32 — the signed change (0 at pads).
+    max_coef: the table-free comb_factors unroll bound.
+    """
+
+    reactant_idx: np.ndarray
+    reactant_coef: np.ndarray
+    rate_pad: np.ndarray
+    dep_idx: np.ndarray
+    delta_idx: np.ndarray
+    delta_val: np.ndarray
+    max_coef: int
+
+    @property
+    def out_degree(self) -> int:
+        return self.dep_idx.shape[1]
+
+
+def sparse_tables(system: ReactionSystem) -> SparseTables:
+    """Precompute the reaction dependency graph + sparse stoichiometry.
+
+    dep(j) = { r : reactants(r) ∩ changed(j) ≠ ∅ } — after j fires,
+    only these propensities can differ; every other reaction's reactant
+    populations are untouched, so its (recomputed) propensity would be
+    bitwise identical and the stale value is exact. This is what makes
+    the per-event update cost O(out-degree) instead of O(R).
+    """
+    r, s = system.n_reactions, system.n_species
+    delta = np.asarray(system.delta)
+    idx = np.asarray(system.reactant_idx)
+    coef = np.asarray(system.reactant_coef)
+
+    # species -> reactions that consume it (reactant with coef > 0)
+    by_species: list[list[int]] = [[] for _ in range(s)]
+    for j in range(r):
+        for i, c in zip(idx[j], coef[j]):
+            if c > 0:
+                by_species[int(i)].append(j)
+
+    changed = [np.nonzero(delta[j])[0] for j in range(r)]
+    deps = []
+    for j in range(r):
+        dj: set[int] = set()
+        for i in changed[j]:
+            dj.update(by_species[int(i)])
+        deps.append(sorted(dj))
+
+    k = max((len(d) for d in deps), default=1) or 1
+    d_max = max((len(c) for c in changed), default=1) or 1
+
+    dep_idx = np.full((r + 1, k), r, np.int32)  # row r = all-pad
+    for j, dj in enumerate(deps):
+        dep_idx[j, :len(dj)] = dj
+    delta_idx = np.full((r + 1, d_max), s, np.int32)  # row r = all-pad
+    delta_val = np.zeros((r + 1, d_max), np.float32)
+    for j, ci in enumerate(changed):
+        delta_idx[j, :len(ci)] = ci
+        delta_val[j, :len(ci)] = delta[j, ci]
+
+    m = idx.shape[1]
+    idx_pad = np.concatenate([idx, np.full((1, m), s, np.int32)], axis=0)
+    coef_pad = np.concatenate([coef, np.zeros((1, m), np.int32)], axis=0)
+    rate_pad = np.concatenate(
+        [np.asarray(system.rates, np.float32), np.zeros((1,), np.float32)])
+    return SparseTables(
+        reactant_idx=idx_pad, reactant_coef=coef_pad, rate_pad=rate_pad,
+        dep_idx=dep_idx, delta_idx=delta_idx, delta_val=delta_val,
+        max_coef=max(system.max_coef, 1))
 
 
 def comb_factors(pops, coef, max_c: int = MAX_COEF):
     """C(pops, coef) unrolled to coef <= max_c: pops (B, R) f32, coef
-    (R,) or (B, R). Coefficients beyond MAX_COEF are rejected at
-    `ReactionSystem` construction, so the unroll bound is safe. Plain
-    jnp ops — shared by the Pallas kernel bodies (kernels/propensity.py
-    re-exports it) and the MXU-form host propensities (core/tau_leap)."""
+    (R,) or (B, R). The dense callers use the fixed MAX_COEF bound
+    (larger coefficients rejected by `require_dense_capable`); the
+    sparse path passes the system's actual `max_coef`. Iterations with
+    coef <= i are exact no-ops (`where` keeps the running value), so a
+    LARGER unroll bound never changes the bits of a smaller-coef system.
+    Plain jnp ops — shared by the Pallas kernel bodies
+    (kernels/propensity.py re-exports it) and the MXU-form host
+    propensities (core/tau_leap)."""
     ff = jnp.ones_like(pops)
     fact = jnp.ones_like(pops)
     for i in range(max_c):
@@ -145,11 +251,13 @@ def comb_factors(pops, coef, max_c: int = MAX_COEF):
     return ff / fact
 
 
-def propensities(x, sys_idx, sys_coef, rates):
+def propensities(x, sys_idx, sys_coef, rates, max_c: int = MAX_COEF):
     """Batched mass-action propensities.
 
     x: (B, S) float32 counts; sys_idx (R, M); sys_coef (R, M);
     rates (R,) or (B, R) for per-instance parameter sweeps.
+    max_c: comb_factors unroll bound — MAX_COEF on the dense path,
+    the system's actual max_coef on the sparse path.
     Returns (B, R) float32.
 
     The product accumulates in the SAME association order as the Pallas
@@ -167,10 +275,38 @@ def propensities(x, sys_idx, sys_coef, rates):
     a = jnp.broadcast_to(jnp.asarray(rates, x.dtype),
                          (b, sys_idx.shape[0]))
     for m in range(sys_idx.shape[1]):
-        # C(n, c) per slot (c <= MAX_COEF, unrolled; larger rejected at
-        # ReactionSystem construction)
-        a = a * comb_factors(pops[:, :, m], sys_coef[None, :, m])
+        # C(n, c) per slot, unrolled to max_c (dense callers must have
+        # passed `require_dense_capable` for the default bound)
+        a = a * comb_factors(pops[:, :, m], sys_coef[None, :, m], max_c)
     return a
+
+
+def propensities_partitioned(x, sys_idx, sys_coef, rates, max_c: int,
+                             part: int):
+    """`propensities`, with the per-slot comb work species-partitioned.
+
+    Reshapes the (B, R[, M]) elementwise unroll to (B·part, R/part[, M])
+    so ONE simulation's reaction axis spreads across `part` lanes of a
+    kernel block — the layout that fills the vector unit when a single
+    large network runs at small batch. Requires part | R. Every element
+    sees the identical scalar computation, so the result is BITWISE
+    equal to `propensities` for any partition factor.
+    """
+    b, s = x.shape
+    r, m = sys_idx.shape
+    if part <= 1 or r % part:
+        return propensities(x, sys_idx, sys_coef, rates, max_c)
+    xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)
+    pops = xp[:, sys_idx]  # (B, R, M)
+    a = jnp.broadcast_to(jnp.asarray(rates, x.dtype), (b, r))
+    coef_b = jnp.broadcast_to(sys_coef[None].astype(x.dtype), (b, r, m))
+    rp = r // part
+    a_p = a.reshape(b * part, rp)
+    pops_p = pops.reshape(b * part, rp, m)
+    coef_p = coef_b.reshape(b * part, rp, m)
+    for mm in range(m):
+        a_p = a_p * comb_factors(pops_p[:, :, mm], coef_p[:, :, mm], max_c)
+    return a_p.reshape(b, r)
 
 
 def propensities_ref(x, system: ReactionSystem, rates=None) -> np.ndarray:

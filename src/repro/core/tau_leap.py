@@ -85,7 +85,10 @@ def gi_tables(system: ReactionSystem) -> np.ndarray:
     Species never consumed get g = 1 (masked out of the tau min by
     `reactant_mask` anyway)."""
     s = system.n_species
-    tab = np.zeros((MAX_COEF, s), np.float32)
+    # rows up to the actual max coefficient (sparse path lifts the
+    # MAX_COEF ceiling); extra rows stay zero for small-coef systems,
+    # and gi consumers loop over gi.shape[0], adding exact +0.0 terms
+    tab = np.zeros((max(MAX_COEF, system.max_coef), s), np.float32)
     tab[0] = 1.0
     best = np.zeros((2, s), np.int64)  # (o, c) of the HOR per species
     for j in range(system.n_reactions):
@@ -156,12 +159,13 @@ def poisson_from_uniform(u, lam, kmax: int = POISSON_KMAX):
 def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
                   e, coef, delta, rates, gi, rmask, horizon, *,
                   eps: float, fallback: float,
-                  lam_max: float = LAM_MAX, kmax: int = POISSON_KMAX):
+                  lam_max: float = LAM_MAX, kmax: int = POISSON_KMAX,
+                  gather_match=None):
     """One vectorised tau-leap-or-fallback step over the lane axis.
 
     x (B,S) f32; t (B,) f32; dead (B,) bool; k0/k1/ctr/ctr_hi (B,) u32;
     steps/leaps (B,) i32; e (M,S,R) f32 one-hots; coef (M,R) f32;
-    delta (R,S) f32; rates (B,R) or (R,) f32; gi (MAX_COEF,S) f32
+    delta (R,S) f32; rates (B,R) or (R,) f32; gi (>=MAX_COEF,S) f32
     (`gi_tables`); rmask (S,) f32 (`reactant_mask`); horizon scalar.
 
     Returns (x, t, dead, ctr, ctr_hi, steps, leaps). Pure jnp — traced
@@ -170,6 +174,18 @@ def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
     `fallback` may be a scalar or a (B,) per-lane array (the steering
     layer's exact<->tau auto-switch feeds +inf for switched lanes); it
     only enters the `do_leap` comparison, which broadcasts.
+
+    `gather_match=(idx (R,M) i32, coef_rm (R,M) i32, max_c)` switches
+    Match to the sparse gather form — no (M,S,R) one-hot tensors, the
+    comb unroll bounded by the system's actual max coefficient — in
+    which case `e`/`coef` may be None. A real slot gathers the same
+    population the one-hot dot accumulates (one x entry plus exact
+    +0.0 terms) and a pad slot yields factor 1.0 on both forms, so the
+    two Matches are bitwise identical. The leap bookkeeping
+    (mu/sig2/dx) stays dense: those are genuine f32 SUMS over species,
+    and re-associating them would change bits — so sparse tau-leap
+    saves Match work and one-hot memory only (documented in
+    DESIGN.md §3g).
     """
     b, s = x.shape
     r = delta.shape[0]
@@ -180,9 +196,17 @@ def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
     active = (t < horizon) & ~dead
     # --- Match (identical op sequence to the exact kernel) ---
     a = rates
-    for m in range(e.shape[0]):
-        pops = jax.lax.dot(x, e[m], preferred_element_type=jnp.float32)
-        a = a * comb_factors(pops, coef[m][None, :])
+    if gather_match is not None:
+        g_idx, g_coef, max_c = gather_match
+        xp = jnp.concatenate([x, jnp.ones((b, 1), x.dtype)], axis=1)
+        pops_g = xp[:, g_idx]  # (B, R, M)
+        for m in range(g_idx.shape[1]):
+            a = a * comb_factors(pops_g[:, :, m], g_coef[None, :, m],
+                                 max_c)
+    else:
+        for m in range(e.shape[0]):
+            pops = jax.lax.dot(x, e[m], preferred_element_type=jnp.float32)
+            a = a * comb_factors(pops, coef[m][None, :])
     a0 = a.sum(axis=1)
     now_dead = a0 <= 0.0
     alive = active & ~now_dead
@@ -277,18 +301,28 @@ def tau_step_core(x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
 
 
 # --------------------------------------------------------- host wrapper
-def make_tau_step(gi, rmask, eps: float, fallback: float):
+def make_tau_step(gi, rmask, eps: float, fallback: float,
+                  gather_max_c: int | None = None):
     """`ssa_step`-shaped per-lane step for the dispatch seam: returns
     step(state: LaneState, system_tensors, horizon) -> LaneState, where
     system_tensors is the gather-form (idx, coef, delta, rates) tuple —
     converted to the kernel's one-hot form at trace time so the host
-    paths run the exact op sequence the Pallas body runs."""
+    paths run the exact op sequence the Pallas body runs.
+
+    `gather_max_c` (the sparse seam) keeps Match in gather form with
+    that comb unroll bound instead — bitwise identical, no (M, S, R)
+    one-hots, and no MAX_COEF ceiling."""
     gi = jnp.asarray(gi, jnp.float32)
     rmask = jnp.asarray(rmask, jnp.float32)
 
     def tau_step(state: LaneState, system_tensors, horizon) -> LaneState:
         idx, coef_rm, delta_f, rates = system_tensors
-        e, coef_k = onehot_tensors(idx, coef_rm, state.x.shape[1])
+        if gather_max_c is None:
+            e, coef_k = onehot_tensors(idx, coef_rm, state.x.shape[1])
+            gm = None
+        else:
+            e = coef_k = None
+            gm = (idx, coef_rm, gather_max_c)
         # steering's per-lane exact<->tau switch: a lane with no_leap
         # set sees an infinite fallback threshold, so its `do_leap`
         # gate is always False and it takes exact SSA steps (identical
@@ -303,7 +337,7 @@ def make_tau_step(gi, rmask, eps: float, fallback: float):
             e, coef_k, jnp.asarray(delta_f, jnp.float32),
             jnp.asarray(rates, jnp.float32), gi, rmask,
             jnp.asarray(horizon, jnp.float32),
-            eps=eps, fallback=fb)
+            eps=eps, fallback=fb, gather_match=gm)
         return LaneState(x=x, t=t, key=state.key, ctr=lo, ctr_hi=hi,
                          steps=steps, leaps=leaps, dead=dead,
                          no_leap=state.no_leap)

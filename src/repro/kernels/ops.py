@@ -27,10 +27,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gillespie import LaneState
+from repro.core.gillespie import LaneState, pad_rates
 from repro.core.reactions import ReactionSystem
 from repro.core.tau_leap import onehot_tensors
-from repro.kernels.propensity import propensity_call, reactant_onehots
+from repro.kernels.propensity import (
+    propensity_call,
+    reactant_onehots,
+    resolve_interpret,
+)
 from repro.kernels.ssa_step import ssa_window_call
 
 ON_TPU = jax.default_backend() == "tpu"
@@ -56,8 +60,8 @@ def system_kernel_tensors(system: ReactionSystem):
 
 def propensity(x, system_tensors_k, rates, interpret: bool | None = None):
     e, coef, _ = system_tensors_k
-    interp = (not ON_TPU) if interpret is None else interpret
-    return propensity_call(x, e, coef, rates, interpret=interp)
+    return propensity_call(x, e, coef, rates,
+                           interpret=resolve_interpret(interpret))
 
 
 class FusedWindowOut(NamedTuple):
@@ -97,7 +101,7 @@ def window_chunk_loop(pool: LaneState, tensors, horizon,
     idx, coef_rm, delta_f, rates = tensors
     # build one-hots from (idx, coef) — same info, MXU layout
     e, coef_k = onehot_tensors(idx, coef_rm, pool.x.shape[1])
-    interp = (not ON_TPU) if interpret is None else interpret
+    interp = resolve_interpret(interpret)
     key = pool.key
 
     def chunk(x, t, dead, ctr, ctr_hi, horizon):
@@ -124,7 +128,7 @@ def tau_window_chunk_loop(pool: LaneState, tensors, horizon, gi, rmask,
 
     idx, coef_rm, delta_f, rates = tensors
     e, coef_k = onehot_tensors(idx, coef_rm, pool.x.shape[1])
-    interp = (not ON_TPU) if interpret is None else interpret
+    interp = resolve_interpret(interpret)
     key = pool.key
     # steering's per-lane exact<->tau switch rides as a (B,) operand;
     # the kernel never writes it, so it is closed over (not carried)
@@ -135,6 +139,70 @@ def tau_window_chunk_loop(pool: LaneState, tensors, horizon, gi, rmask,
             x, t, dead, no_leap, key, ctr, ctr_hi, e, coef_k, delta_f,
             rates, gi, rmask, horizon, n_steps=chunk_steps, eps=eps,
             fallback=fallback, interpret=interp)
+
+    return _chunk_while(pool, horizon, chunk, max_chunks)
+
+
+def sparse_window_chunk_loop(pool: LaneState, tensors, horizon, *,
+                             sp, chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                             interpret: bool | None = None,
+                             max_chunks: int = DEFAULT_MAX_CHUNKS
+                             ) -> FusedWindowOut:
+    """`window_chunk_loop` through the SPARSE exact kernel
+    (`kernels.ssa_step.sparse_window_call`): dependency-graph propensity
+    updates inside the kernel, only the O(R·(M+K+D)) sparse tables in
+    VMEM. `sp` is the `gillespie.sparse_system_tensors` tuple (bound in
+    by the engine); of `tensors` only the rates slot is used — the
+    dense idx/coef/delta are not materialised on this path. Same chunk
+    budget, truncation and stream semantics as the dense loop, and the
+    trajectories are bitwise identical to it."""
+    from repro.core.gillespie import bind_sparse_step
+    from repro.kernels.ssa_step import sparse_window_call
+
+    rates = tensors[3]
+    idx_pad, coef_pad = sp[0], sp[1]
+    interp = resolve_interpret(interpret)
+    key = pool.key
+    rates_pad = pad_rates(rates)
+    # pack the per-reaction recipe rows ONCE per window launch — the
+    # kernel then pays two row gathers per event (see bind_sparse_step)
+    int_tab, flt_tab, rates2d, max_c, d, k, m = bind_sparse_step(
+        sp, rates)
+
+    def chunk(x, t, dead, ctr, ctr_hi, horizon):
+        x, t, dead, steps_d, ctr, ctr_hi = sparse_window_call(
+            x, t, dead, key, ctr, ctr_hi, idx_pad, coef_pad, int_tab,
+            flt_tab, rates_pad, horizon, n_steps=chunk_steps,
+            max_c=max_c, d=d, k=k, packed_rates=rates2d is None,
+            interpret=interp)
+        return x, t, dead, steps_d, jnp.zeros_like(steps_d), ctr, ctr_hi
+
+    return _chunk_while(pool, horizon, chunk, max_chunks)
+
+
+def sparse_tau_window_chunk_loop(pool: LaneState, tensors, horizon, gi,
+                                 rmask, eps: float, fallback: float, *,
+                                 max_c: int,
+                                 chunk_steps: int = DEFAULT_CHUNK_STEPS,
+                                 interpret: bool | None = None,
+                                 max_chunks: int = DEFAULT_MAX_CHUNKS
+                                 ) -> FusedWindowOut:
+    """`tau_window_chunk_loop` with the gather-form Match kernel
+    (`sparse_tau_window_call`): no (M, S, R) one-hot operands, comb
+    unroll bounded by the system's actual max coefficient (the sparse
+    seam's MAX_COEF lift). Bitwise identical to the dense tau loop."""
+    from repro.kernels.ssa_step import sparse_tau_window_call
+
+    idx, coef_rm, delta_f, rates = tensors
+    interp = resolve_interpret(interpret)
+    key = pool.key
+    no_leap = pool.no_leap.astype(jnp.int32)
+
+    def chunk(x, t, dead, ctr, ctr_hi, horizon):
+        return sparse_tau_window_call(
+            x, t, dead, no_leap, key, ctr, ctr_hi, idx, coef_rm, delta_f,
+            rates, gi, rmask, horizon, n_steps=chunk_steps, eps=eps,
+            fallback=fallback, max_c=max_c, interpret=interp)
 
     return _chunk_while(pool, horizon, chunk, max_chunks)
 

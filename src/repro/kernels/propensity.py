@@ -36,6 +36,25 @@ R_BLK = 256
 # core.reactions so kernel-free code (core/tau_leap.py) shares it
 _comb_factors = comb_factors
 
+#: backends whose Mosaic/Triton lowering we compile for — everything
+#: else (CPU, METAL, ...) runs the kernel bodies in the interpreter
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret: bool | None, backend: str | None = None
+                      ) -> bool:
+    """Resolve a kernel-call `interpret` argument: an explicit value
+    wins; `None` auto-selects — compiled on TPU/GPU, interpreter
+    elsewhere. Every kernel entry point defaults to None, so callers
+    get the compiled path on accelerators WITHOUT opting in (the old
+    `interpret=True` default silently pinned the interpreter).
+    `backend` overrides `jax.default_backend()` (for tests)."""
+    if interpret is not None:
+        return interpret
+    if backend is None:
+        backend = jax.default_backend()
+    return backend.lower() not in COMPILED_BACKENDS
+
 
 def reactant_onehots(system: ReactionSystem) -> np.ndarray:
     """(M, S, R) one-hot matrices E[m][s, j] = 1 iff reactant slot m of
@@ -63,11 +82,13 @@ def _propensity_kernel(x_ref, e_ref, coef_ref, rates_ref, out_ref):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def propensity_call(x, e, coef, rates, *, interpret: bool = True):
+def propensity_call(x, e, coef, rates, *, interpret: bool | None = None):
     """x: (B, S) f32; e: (M, S, R); coef: (M, R) f32; rates (B, R) or (R,).
 
-    Returns (B, R) propensities.
+    Returns (B, R) propensities. `interpret=None` auto-selects the
+    compiled kernel on TPU/GPU (`resolve_interpret`).
     """
+    interpret = resolve_interpret(interpret)
     b, s = x.shape
     r = e.shape[-1]
     if rates.ndim == 1:

@@ -35,12 +35,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.reactions import MAX_COEF, MAX_REACTANTS
+from repro.core.gillespie import LaneState, resolve_carry, sparse_ssa_step
+from repro.core.reactions import (
+    MAX_REACTANTS,
+    propensities_partitioned,
+)
 from repro.core.stream import counter_uniforms, ctr_add
 from repro.core.tau_leap import tau_step_core
-from repro.kernels.propensity import _comb_factors
+from repro.kernels.propensity import _comb_factors, resolve_interpret
 
 LANE_BLK = 256
+
+
+def species_partition(b: int, r: int, lane_blk: int = LANE_BLK) -> int:
+    """Partition factor for the in-kernel dense propensity seed: the
+    largest power-of-two divisor of R such that b·part <= lane_blk.
+    One LARGE simulation's R-wide Match work is reshaped across `part`
+    lanes of the block (species-partitioned stepping) instead of
+    leaving the lane axis mostly idle at small batch. Pure shape
+    arithmetic — the partitioned evaluation is bitwise identical to the
+    unpartitioned one for any factor."""
+    part = 1
+    while b * part * 2 <= lane_blk and r % (part * 2) == 0:
+        part *= 2
+    return part
 
 
 def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, ctrhi_ref,
@@ -102,14 +120,17 @@ def _window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref, ctrhi_ref,
 
 @partial(jax.jit, static_argnames=("n_steps", "interpret"))
 def ssa_window_call(x, t, dead, key, ctr, ctr_hi, e, coef, delta, rates,
-                    horizon, *, n_steps: int, interpret: bool = True):
+                    horizon, *, n_steps: int,
+                    interpret: bool | None = None):
     """Run up to n_steps fused SSA events per lane toward `horizon`.
 
     x: (B,S) f32; t: (B,) f32; dead: (B,) int32; key: (B,2) uint32;
     ctr/ctr_hi: (B,) uint32; e: (M,S,R); coef: (M,R) f32;
     delta: (R,S) f32; rates: (B,R) or (R,).
+    `interpret=None` auto-selects the compiled kernel on TPU/GPU.
     Returns (x, t, dead, steps_taken, ctr, ctr_hi).
     """
+    interpret = resolve_interpret(interpret)
     b, s = x.shape
     r = delta.shape[0]
     if rates.ndim == 1:
@@ -206,13 +227,16 @@ def _tau_window_kernel(x_ref, t_ref, dead_ref, noleap_ref, key_ref,
                                    "fallback"))
 def tau_window_call(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef,
                     delta, rates, gi, rmask, horizon, *, n_steps: int,
-                    eps: float, fallback: float, interpret: bool = True):
+                    eps: float, fallback: float,
+                    interpret: bool | None = None):
     """Run up to n_steps fused tau-leap iterations per lane toward
     `horizon`. Shapes as `ssa_window_call` plus no_leap (B,) int32
     (nonzero = lane forced to exact SSA — steering's per-lane method
-    switch), gi (MAX_COEF,S) and rmask (S,) from
+    switch), gi (>=MAX_COEF,S) and rmask (S,) from
     `core.tau_leap.gi_tables`/`reactant_mask`.
+    `interpret=None` auto-selects the compiled kernel on TPU/GPU.
     Returns (x, t, dead, steps_delta, leaps_delta, ctr, ctr_hi)."""
+    interpret = resolve_interpret(interpret)
     b, s = x.shape
     r = delta.shape[0]
     if rates.ndim == 1:
@@ -237,7 +261,7 @@ def tau_window_call(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef,
             pl.BlockSpec((MAX_REACTANTS, r), lambda i: (0, 0)),
             pl.BlockSpec((r, s), lambda i: (0, 0)),
             pl.BlockSpec((bl, r), lambda i: (i, 0)),
-            pl.BlockSpec((MAX_COEF, s), lambda i: (0, 0)),
+            pl.BlockSpec((gi.shape[0], s), lambda i: (0, 0)),
             pl.BlockSpec((s,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
@@ -262,3 +286,245 @@ def tau_window_call(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef,
         interpret=interpret,
     )(x, t, dead, no_leap, key, ctr, ctr_hi, e, coef, delta, rates, gi,
       rmask, horizon_arr)
+
+
+def _sparse_window_kernel(x_ref, t_ref, dead_ref, key_ref, ctr_ref,
+                          ctrhi_ref, idxp_ref, coefp_ref, itab_ref,
+                          ftab_ref, rates_ref, horizon_ref,
+                          x_out, t_out, dead_out, steps_out, ctr_out,
+                          ctrhi_out,
+                          n_steps: int, max_c: int, d: int, k: int,
+                          part: int, packed_rates: bool):
+    """Fused multi-step SPARSE exact-SSA window.
+
+    VMEM holds only the O(R·(M+K+D)) sparse tables — no (M, S, R)
+    one-hots and no (R, S) dense delta — so a network with thousands of
+    species AND reactions fits where the dense kernel's operands would
+    blow the budget. The per-step body is the SAME
+    `gillespie.sparse_ssa_step` the host paths trace (dependency-graph
+    Match update, scatter Update, carried (BL, R) propensity vector)
+    over the SAME packed row tables (`gillespie.bind_sparse_step` —
+    int_tab/flt_tab, one recipe row per reaction); the carry is seeded
+    ONCE per kernel launch by the species-partitioned dense evaluation
+    (`propensities_partitioned`, factor `part`) — a pure function of x,
+    so chunk boundaries cannot change bits. `packed_rates` says the
+    dep-row rates live inside flt_tab (shared (R,) rates); otherwise
+    they are gathered per event from the (BL, R+1) rates operand
+    (per-instance sweeps). Gather/scatter in the body are jnp
+    masked-index ops: they run in the interpreter off-TPU and lower to
+    Mosaic dynamic-gather on TPU.
+    """
+    x = x_ref[...].astype(jnp.float32)  # (BL, S)
+    t = t_ref[...]
+    dead = dead_ref[...] > 0
+    key = key_ref[...]
+    ctr = ctr_ref[...]
+    ctr_hi = ctrhi_ref[...]
+    horizon = horizon_ref[0]
+    rates_pad = rates_ref[...]  # (BL, R+1)
+    idxp = idxp_ref[...]
+    m = idxp.shape[1]
+    # species-partitioned seed: one simulation's R-wide Match spread
+    # across `part` lanes of the block
+    a = propensities_partitioned(
+        x, idxp[:-1], coefp_ref[...][:-1], rates_pad[:, :-1], max_c,
+        part)
+    bound = (itab_ref[...], ftab_ref[...],
+             None if packed_rates else rates_pad, max_c, d, k, m)
+    zeros_i = jnp.zeros_like(t, jnp.int32)
+    state = LaneState(x=x, t=t, key=key, ctr=ctr, ctr_hi=ctr_hi,
+                      steps=zeros_i, leaps=zeros_i, dead=dead,
+                      no_leap=jnp.zeros_like(dead))
+
+    def step(i, carry):
+        st, aci = carry
+        return sparse_ssa_step(st, aci, bound, horizon)
+
+    state, _ = jax.lax.fori_loop(0, n_steps, step,
+                                 (state, resolve_carry(a)))
+    x_out[...] = state.x
+    t_out[...] = state.t
+    dead_out[...] = state.dead.astype(jnp.int32)
+    steps_out[...] = state.steps  # started at 0: already the delta
+    ctr_out[...] = state.ctr
+    ctrhi_out[...] = state.ctr_hi
+
+
+@partial(jax.jit, static_argnames=("n_steps", "max_c", "d", "k",
+                                   "packed_rates", "interpret"))
+def sparse_window_call(x, t, dead, key, ctr, ctr_hi, idx_pad, coef_pad,
+                       int_tab, flt_tab, rates_pad, horizon,
+                       *, n_steps: int, max_c: int, d: int, k: int,
+                       packed_rates: bool,
+                       interpret: bool | None = None):
+    """Run up to n_steps sparse SSA events per lane toward `horizon`.
+
+    idx_pad/coef_pad (R+1, M) i32 as in
+    `gillespie.sparse_system_tensors` (seed only); int_tab
+    (R+1, D+K+K·M) i32 and flt_tab (R+1, D+K·M[+K]) f32 from
+    `gillespie.bind_sparse_step` (`packed_rates` = its rates2d was
+    None); rates_pad (B, R+1) or (R+1,) f32 (`gillespie.pad_rates`).
+    Returns (x, t, dead, steps_delta, ctr, ctr_hi) — bitwise identical
+    to iterating the host `sparse_ssa_step`, which is itself bitwise
+    identical to the dense path.
+    """
+    interpret = resolve_interpret(interpret)
+    b, s = x.shape
+    r1, m = idx_pad.shape
+    r = r1 - 1
+    wi = int_tab.shape[1]
+    wf = flt_tab.shape[1]
+    if rates_pad.ndim == 1:
+        rates_pad = jnp.broadcast_to(rates_pad, (b, r1))
+    bl = min(LANE_BLK, b)
+    grid = (pl.cdiv(b, bl),)
+    part = species_partition(bl, r)
+    horizon_arr = jnp.asarray([horizon], jnp.float32)
+    kernel = partial(_sparse_window_kernel, n_steps=n_steps, max_c=max_c,
+                     d=d, k=k, part=part, packed_rates=packed_rates)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((r1, m), lambda i: (0, 0)),
+            pl.BlockSpec((r1, m), lambda i: (0, 0)),
+            pl.BlockSpec((r1, wi), lambda i: (0, 0)),
+            pl.BlockSpec((r1, wf), lambda i: (0, 0)),
+            pl.BlockSpec((bl, r1), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, t, dead, key, ctr, ctr_hi, idx_pad, coef_pad, int_tab,
+      flt_tab, rates_pad, horizon_arr)
+
+
+def _sparse_tau_window_kernel(x_ref, t_ref, dead_ref, noleap_ref,
+                              key_ref, ctr_ref, ctrhi_ref, idx_ref,
+                              coef_ref, delta_ref, rates_ref, gi_ref,
+                              rmask_ref, horizon_ref,
+                              x_out, t_out, dead_out, steps_out,
+                              leaps_out, ctr_out, ctrhi_out,
+                              n_steps: int, eps: float, fallback: float,
+                              max_c: int):
+    """`_tau_window_kernel` with the gather-form Match: reactant tables
+    (R, M) in VMEM instead of (M, S, R) one-hots, comb unroll bounded
+    by the system's actual max coefficient. Leap bookkeeping
+    (mu/sig2/dx) keeps the dense delta matmuls — those sums must stay
+    in dense association order to preserve bits."""
+    x = x_ref[...].astype(jnp.float32)
+    t = t_ref[...]
+    dead = dead_ref[...] > 0
+    fb = jnp.where(noleap_ref[...] > 0, jnp.float32(jnp.inf),
+                   jnp.float32(fallback))
+    k0 = key_ref[:, 0]
+    k1 = key_ref[:, 1]
+    ctr = ctr_ref[...]
+    ctr_hi = ctrhi_ref[...]
+    horizon = horizon_ref[0]
+    steps = jnp.zeros_like(t, jnp.int32)
+    leaps = jnp.zeros_like(t, jnp.int32)
+    gm = (idx_ref[...], coef_ref[...], max_c)
+
+    def step(i, carry):
+        x, t, dead, ctr, ctr_hi, steps, leaps = carry
+        x, t, dead, ctr, ctr_hi, steps, leaps = tau_step_core(
+            x, t, dead, k0, k1, ctr, ctr_hi, steps, leaps,
+            None, None, delta_ref[...], rates_ref[...],
+            gi_ref[...], rmask_ref[...], horizon,
+            eps=eps, fallback=fb, gather_match=gm)
+        return x, t, dead, ctr, ctr_hi, steps, leaps
+
+    x, t, dead, ctr, ctr_hi, steps, leaps = jax.lax.fori_loop(
+        0, n_steps, step, (x, t, dead, ctr, ctr_hi, steps, leaps))
+    x_out[...] = x
+    t_out[...] = t
+    dead_out[...] = dead.astype(jnp.int32)
+    steps_out[...] = steps
+    leaps_out[...] = leaps
+    ctr_out[...] = ctr
+    ctrhi_out[...] = ctr_hi
+
+
+@partial(jax.jit, static_argnames=("n_steps", "eps", "fallback", "max_c",
+                                   "interpret"))
+def sparse_tau_window_call(x, t, dead, no_leap, key, ctr, ctr_hi, idx,
+                           coef, delta, rates, gi, rmask, horizon, *,
+                           n_steps: int, eps: float, fallback: float,
+                           max_c: int, interpret: bool | None = None):
+    """`tau_window_call` with gather-form Match (sparse seam): idx/coef
+    are the (R, M) int32 reactant tables (NOT one-hots); everything
+    else as the dense call. Bitwise identical to it — a real slot
+    gathers the population the one-hot dot accumulates exactly, and
+    pad slots contribute factor 1.0 on both forms."""
+    interpret = resolve_interpret(interpret)
+    b, s = x.shape
+    r, m = idx.shape
+    if rates.ndim == 1:
+        rates = jnp.broadcast_to(rates, (b, r))
+    bl = min(LANE_BLK, b)
+    grid = (pl.cdiv(b, bl),)
+    horizon_arr = jnp.asarray([horizon], jnp.float32)
+    kernel = partial(_sparse_tau_window_kernel, n_steps=n_steps, eps=eps,
+                     fallback=fallback, max_c=max_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((r, m), lambda i: (0, 0)),
+            pl.BlockSpec((r, m), lambda i: (0, 0)),
+            pl.BlockSpec((r, s), lambda i: (0, 0)),
+            pl.BlockSpec((bl, r), lambda i: (i, 0)),
+            pl.BlockSpec((gi.shape[0], s), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bl, s), lambda i: (i, 0)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, t, dead, no_leap, key, ctr, ctr_hi, idx, coef, delta, rates,
+      gi, rmask, horizon_arr)

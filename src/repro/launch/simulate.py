@@ -80,6 +80,12 @@ def main() -> None:
                     "record pull (amortises dispatches and host syncs "
                     "to 1/N per window; records are bit-identical for "
                     "any value; incompatible with --host-loop)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="sparse large-network engine: CSR reactant "
+                    "tables + reaction dependency graph, O(out-degree) "
+                    "propensity updates per event instead of O(R); "
+                    "bitwise identical to the dense encoding and "
+                    "required for stoichiometric coefficients > 4")
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy per-group dispatch (benchmark baseline)")
     ap.add_argument("--devices", type=int, default=None,
@@ -140,6 +146,7 @@ def main() -> None:
         use_kernel=args.kernel,
         host_loop=args.host_loop,
         window_block=args.window_block,
+        sparse=args.sparse,
         partitioning=(Partitioning(n_shards=args.devices,
                                    stat_blocks=args.stat_blocks)
                       if args.devices else None),

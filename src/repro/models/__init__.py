@@ -1,2 +1,15 @@
 """Model zoo: assigned-architecture families on a shared block substrate."""
-from repro.models.encdec import build_model  # noqa: F401
+
+
+def build_model(cfg, topo, remat: str = "block", scan_layers: bool = True):
+    """Build the model for `cfg`. Every registered architecture is
+    decoder-only (the encoder-decoder seamless-m4t family was pruned
+    with `models/encdec.py`)."""
+    from repro.models.causal_lm import CausalLM
+
+    if cfg.is_encoder_decoder:
+        raise ValueError(
+            "encoder-decoder configs are no longer supported — the "
+            "seamless-m4t family and models/encdec.py were removed; "
+            "use a decoder-only arch from configs.registry")
+    return CausalLM(cfg, topo, remat, scan_layers)

@@ -75,17 +75,30 @@ def test_dead_lanes_stay_dead():
     assert (np.asarray(st.x) == 0).all()
 
 
-def test_coefficient_beyond_unroll_cap_rejected_at_construction():
-    """C(n, c) is unrolled to c <= MAX_COEF; a larger stoichiometric
-    coefficient used to yield silently WRONG propensities — it must now
-    be rejected when the system is built, naming the reaction."""
+def test_coefficient_beyond_unroll_cap_rejected_by_dense_path():
+    """The DENSE path unrolls C(n, c) to c <= MAX_COEF; a larger
+    stoichiometric coefficient used to yield silently WRONG
+    propensities there. Constructing such a system is legal (the sparse
+    encoding unrolls to the system's actual max coefficient), but
+    building the dense tensors must reject it, naming the reaction and
+    pointing at sparse=True."""
+    sys5 = make_system(["A", "P"],
+                       [({"A": 1}, {}, 1.0),
+                        ({"A": MAX_COEF + 1}, {"P": 1}, 0.1)],
+                       {"A": 50}, names=["decay", "pentamer"])
+    assert sys5.max_coef == MAX_COEF + 1
     with pytest.raises(ValueError, match="pentamer.*5 > MAX_COEF"):
-        make_system(["A", "P"],
-                    [({"A": 1}, {}, 1.0),
-                     ({"A": MAX_COEF + 1}, {"P": 1}, 0.1)],
-                    {"A": 50}, names=["decay", "pentamer"])
-    # the cap itself is fine
-    make_system(["A", "P"], [({"A": MAX_COEF}, {"P": 1}, 0.1)], {"A": 50})
+        system_tensors(sys5)
+    with pytest.raises(ValueError, match="sparse=True"):
+        system_tensors(sys5)
+    # sparse tensors build fine and carry the true unroll bound
+    assert system_tensors(sys5, require_dense=False)
+    from repro.core.reactions import sparse_tables
+    assert sparse_tables(sys5).max_coef == MAX_COEF + 1
+    # the cap itself is fine on the dense path
+    sys_ok = make_system(["A", "P"], [({"A": MAX_COEF}, {"P": 1}, 0.1)],
+                         {"A": 50})
+    system_tensors(sys_ok)
 
 
 def test_rng_stream_is_counter_based_and_key_stable():

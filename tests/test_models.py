@@ -20,11 +20,6 @@ from repro.sharding.rules import smoke_topology
 
 
 def _batch_for(cfg, B, S, key):
-    if cfg.is_encoder_decoder:
-        return {"frames": jax.random.normal(key, (B, S, cfg.d_model),
-                                            jnp.float32),
-                "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
-                "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
     if cfg.frontend == "vision":
         p = cfg.frontend_tokens
         return {"tokens": jax.random.randint(key, (B, S - p), 0,

@@ -3,12 +3,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis "
-    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
-
 from repro.core.reactions import make_system, propensities, propensities_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # kernel/oracle tests below still run without it
+    hyp_only = pytest.mark.skip(
+        reason="property tests need hypothesis "
+        "(pip install -r requirements-dev.txt)")
+
+    def settings(**_kw):  # noqa: D103 — stand-ins so decorators parse
+        return hyp_only
+
+    def given(*_a, **_kw):
+        return lambda f: f
+
+    class st:  # noqa: N801
+        integers = floats = lists = staticmethod(lambda *a, **k: None)
 
 
 def _random_system(rng, s=5, r=6):
@@ -71,3 +82,39 @@ def test_nonnegative_and_zero_when_insufficient(counts):
     assert val >= 0.0
     if counts[0] < 2 or counts[1] < 1:
         assert val == 0.0
+
+
+def test_interpret_defaults_to_backend_not_true():
+    """`interpret` used to default to True everywhere — a TPU run of
+    the standalone propensity kernel would silently execute the Python
+    interpreter path. The default is now backend-derived: compiled on
+    every accelerator backend, interpret only where Pallas cannot
+    compile (CPU). An explicit argument always wins."""
+    from repro.kernels.propensity import COMPILED_BACKENDS, resolve_interpret
+
+    for backend in COMPILED_BACKENDS:
+        assert resolve_interpret(None, backend) is False
+    assert resolve_interpret(None, "cpu") is True
+    # explicit choice is never overridden
+    assert resolve_interpret(True, "tpu") is True
+    assert resolve_interpret(False, "cpu") is False
+    # the no-backend form consults jax.default_backend()
+    import jax
+
+    expected = jax.default_backend().lower() not in COMPILED_BACKENDS
+    assert resolve_interpret(None) is expected
+
+
+def test_propensity_call_default_interpret_runs(rng):
+    """propensity_call with no `interpret` must pick a mode that runs
+    on the current backend (interpret on CPU, compiled on TPU) and
+    agree with the reference math."""
+    from repro.kernels.propensity import propensity_call, reactant_onehots
+
+    sys = _random_system(rng)
+    x = rng.integers(0, 25, (8, sys.n_species)).astype(np.float32)
+    e = jnp.asarray(reactant_onehots(sys))
+    coef = jnp.asarray(sys.reactant_coef.T, jnp.float32)
+    a = propensity_call(jnp.asarray(x), e, coef, jnp.asarray(sys.rates))
+    ref = propensities_ref(x, sys)
+    np.testing.assert_allclose(np.asarray(a), ref, rtol=1e-5, atol=1e-6)

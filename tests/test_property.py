@@ -115,3 +115,168 @@ def test_random_system_checkpoint_resume_bitwise(seed, tmp_path):
         resumed = _run(system, method, seed, checkpoint_path=ck,
                        resume=True)
         assert (resumed.trajectories() == clean.trajectories()).all()
+
+
+# --- sparse encoding parity (DESIGN.md §3g) --------------------------
+
+
+def check_sparse_bitwise(seed: int):
+    """THE sparse property: on a random system, every sparse
+    configuration replays the DENSE trajectories bit-for-bit — records
+    (mean/var/ci90), raw trajectories, and the step/leap telemetry.
+    The dependency-graph update, the carried propensity vector, the
+    gather-form tau Match, and the in-kernel species partitioning must
+    all be invisible in the bits."""
+    system = random_system(seed)
+    for method in (Method.EXACT, Method.TAU_LEAP):
+        dense = _run(system, method, seed)
+        variants = {
+            "sparse": _run(system, method, seed, sparse=True),
+            "sparse_kernel": _run(system, method, seed, sparse=True,
+                                  use_kernel=True, kernel_chunk_steps=64,
+                                  kernel_max_chunks=4096),
+            "sparse_superstep": _run(system, method, seed, sparse=True,
+                                     window_block=2),
+            "sparse_host_loop": _run(system, method, seed, sparse=True,
+                                     host_loop=True),
+        }
+        for name, res in variants.items():
+            assert (res.means() == dense.means()).all(), (seed, method,
+                                                          name)
+            assert (res.trajectories() == dense.trajectories()).all(), (
+                seed, method, name)
+            for a, b in zip(dense.records, res.records):
+                assert a.t == b.t and a.n == b.n, (seed, method, name)
+                assert (a.var == b.var).all(), (seed, method, name)
+                assert (a.ci90 == b.ci90).all(), (seed, method, name)
+            assert (res.telemetry.steps_per_window
+                    == dense.telemetry.steps_per_window), (seed, method,
+                                                           name)
+            assert (res.telemetry.leaps_per_window
+                    == dense.telemetry.leaps_per_window), (seed, method,
+                                                           name)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_system_sparse_bitwise_seeded(seed):
+    check_sparse_bitwise(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_random_system_sparse_bitwise_hypothesis(seed):
+        check_sparse_bitwise(seed)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional)")
+    def test_random_system_sparse_bitwise_hypothesis():
+        pass
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sparse_checkpoint_resume_bitwise(seed, tmp_path):
+    """A sparse run's checkpoint resumes into the same stream — and
+    that stream is still the dense one (the carried propensity vector
+    is NOT part of the checkpoint: it is recomputed from x at the
+    window boundary, a pure function of restored state)."""
+    system = random_system(seed)
+    for method in (Method.EXACT, Method.TAU_LEAP):
+        ck = str(tmp_path / f"ck_sp_{method.value}_{seed}")
+        dense = _run(system, method, seed)
+        _run(system, method, seed, sparse=True, max_windows=1,
+             checkpoint_path=ck)
+        resumed = _run(system, method, seed, sparse=True,
+                       checkpoint_path=ck, resume=True)
+        assert (resumed.trajectories() == dense.trajectories()).all()
+
+
+def test_sparse_sharded_bitwise():
+    """Sparse composes with shard_map: on forced host devices the
+    sharded sparse path reproduces the single-device DENSE records and
+    trajectories bit-for-bit (subprocess: the main pytest process keeps
+    the real 1-device platform)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snippet = textwrap.dedent("""
+        from repro.api import (Ensemble, Experiment, Partitioning,
+                               Schedule, simulate)
+        from tests.test_property import random_system
+
+        def run(**kw):
+            return simulate(Experiment(
+                model=random_system(3),
+                ensemble=Ensemble.make(replicas=16),
+                schedule=Schedule(t_end=0.3, n_windows=2),
+                n_lanes=8, seed=5, record_trajectories=True, **kw))
+
+        for method in ("exact", "tau_leap"):
+            dense = run(method=method)
+            for kw in (dict(), dict(use_kernel=True)):
+                shard = run(method=method, sparse=True,
+                            partitioning=Partitioning(n_shards=4,
+                                                      stat_blocks=4),
+                            **kw)
+                for a, b in zip(dense.records, shard.records):
+                    assert a.t == b.t and a.n == b.n
+                    assert (a.mean == b.mean).all(), (method, kw)
+                    assert (a.var == b.var).all(), (method, kw)
+                assert (dense.trajectories()
+                        == shard.trajectories()).all(), (method, kw)
+        print("SNIPPET-RAN")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+    out = subprocess.run([sys.executable, "-c", snippet],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SNIPPET-RAN" in out.stdout
+
+
+def test_high_coefficient_system_is_sparse_only():
+    """Stoichiometric coefficients beyond the dense unroll cap
+    (MAX_COEF=4) run ONLY through the sparse encoding — the dense path
+    refuses (it would be silently wrong), and the sparse propensity
+    math matches the exact-combinatorics numpy oracle."""
+    import jax.numpy as jnp
+
+    from repro.core.reactions import (propensities, propensities_ref,
+                                      sparse_tables)
+
+    sys5 = make_system(
+        ["A", "P"],
+        [({}, {"A": 1}, 30.0),
+         ({"A": 1}, {}, 0.5),
+         ({"A": MAX_COEF + 1}, {"P": 1}, 1e-4),
+         ({"P": 1}, {}, 0.2)],
+        {"A": 60},
+        names=["feed", "decay", "pentamerise", "p-decay"])
+    with pytest.raises(ValueError, match="sparse=True"):
+        _run(sys5, Method.EXACT, seed=0)
+    # the sparse unroll bound covers the real coefficient: check the
+    # propensity math against the oracle at several population levels
+    x = np.asarray([[n, 0.0] for n in (0, 3, 4, 5, 9, 60)], np.float32)
+    a = propensities(jnp.asarray(x), jnp.asarray(sys5.reactant_idx),
+                     jnp.asarray(sys5.reactant_coef),
+                     jnp.asarray(sys5.rates),
+                     max_c=sparse_tables(sys5).max_coef)
+    np.testing.assert_allclose(np.asarray(a), propensities_ref(x, sys5),
+                               rtol=1e-5, atol=1e-8)
+    # and the full engine runs it: exact + tau, unfused + kernel, all
+    # bitwise-identical to each other
+    base = _run(sys5, Method.EXACT, seed=9, sparse=True)
+    kern = _run(sys5, Method.EXACT, seed=9, sparse=True,
+                use_kernel=True, kernel_chunk_steps=64,
+                kernel_max_chunks=4096)
+    assert (base.trajectories() == kern.trajectories()).all()
+    tau = _run(sys5, Method.TAU_LEAP, seed=9, sparse=True)
+    tau_k = _run(sys5, Method.TAU_LEAP, seed=9, sparse=True,
+                 use_kernel=True, kernel_chunk_steps=64,
+                 kernel_max_chunks=4096)
+    assert (tau.trajectories() == tau_k.trajectories()).all()
+    assert (base.trajectories() >= 0).all()
