@@ -1,0 +1,162 @@
+"""Fault-drill benchmark gate -> BENCH_PR8.json (robustness point).
+
+Two gated sections, CI-sized and deterministic:
+
+* `drill_parity` — a fixed 3-fault plan (crash at window 3, corrupt-
+  newest-checkpoint at 7, NaN-poisoned pool at 10) driven through the
+  RunSupervisor at window_block=4 with a sketch attached. GATE: the
+  drilled run's records, trajectories, and sketch histograms are
+  BITWISE identical to the uninterrupted run, and the supervisor
+  reports exactly 3 restarts.
+* `supervisor_overhead` — the same config fault-free, supervised
+  (cadenced atomic checkpoints + retention + guards) vs the bare
+  `engine.run_block` loop. GATE: supervised wall <= 1.05x bare wall
+  (the ISSUE's <= 5% overhead bar) — cadence spreads the checkpoint
+  cost across blocks and guards read stats the collector already
+  pulled, so the steady path stays device-bound. Both walls are
+  medians over repeated runs in one process (same compile cache).
+
+  PYTHONPATH=src python benchmarks/fault_drill_smoke.py [out.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.api import (  # noqa: E402
+    Ensemble,
+    Experiment,
+    FailurePlan,
+    Recovery,
+    Reduction,
+    Schedule,
+    SketchSpec,
+    simulate,
+)
+from repro.api.run import build_engine  # noqa: E402
+from repro.core.cwc.models import lotka_volterra  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_INSTANCES, N_LANES, N_WINDOWS = 128, 16, 12
+WINDOW_BLOCK = 4
+CADENCE = 4
+PLAN = {3: "crash", 7: "ckpt_corrupt", 10: "nan_pool"}
+OVERHEAD_GATE = 1.05
+REPEATS = 5
+
+
+def make_exp(**kw):
+    kw.setdefault("record_trajectories", True)
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=N_INSTANCES),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        reduction=Reduction.ENSEMBLE,
+        n_lanes=N_LANES, seed=7, window_block=WINDOW_BLOCK, **kw)
+
+
+def drill_parity_section():
+    sk = SketchSpec(n_bins=8, lo=0.0, hi=600.0)
+    base = simulate(make_exp(sketch=sk))
+    tmp = tempfile.mkdtemp(prefix="fault_drill_")
+    try:
+        got = simulate(make_exp(sketch=sk, recovery=Recovery(
+            ckpt_dir=os.path.join(tmp, "rec"), cadence=CADENCE,
+            keep_last=2, inject=FailurePlan(schedule=PLAN))))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    assert len(base.records) == len(got.records)
+    for ra, rb in zip(base.records, got.records):
+        assert (ra.mean == rb.mean).all() and (ra.var == rb.var).all()
+        assert (ra.ci90 == rb.ci90).all()
+    assert (base.trajectories() == got.trajectories()).all()
+    for sa, sb in zip(base.sketches(), got.sketches()):
+        assert (sa.hist == sb.hist).all()
+    rep = got.recovery_report()
+    assert rep["restarts"] == len(PLAN), rep
+    row = {
+        "plan": {str(w): k for w, k in sorted(PLAN.items())},
+        "restarts": rep["restarts"],
+        "faults_by_kind": rep["faults_by_kind"],
+        "records_bitwise": True,
+        "sketches_bitwise": True,
+        "trajectories_bitwise": True,
+    }
+    print(f"drill_parity: {row}")
+    return row
+
+
+def _bare_wall() -> float:
+    eng = build_engine(make_exp())
+    t0 = time.perf_counter()
+    while eng._window < len(eng.grid):
+        eng.run_block(pipeline=True)
+    return time.perf_counter() - t0
+
+
+def _supervised_wall(tmp: str) -> float:
+    exp = make_exp(recovery=Recovery(
+        ckpt_dir=os.path.join(tmp, "rec"), cadence=CADENCE, keep_last=2))
+    t0 = time.perf_counter()
+    simulate(exp)
+    return time.perf_counter() - t0
+
+
+def overhead_section():
+    bares, sups = [], []
+    for i in range(REPEATS):
+        bares.append(_bare_wall())
+        tmp = tempfile.mkdtemp(prefix="fault_overhead_")
+        try:
+            sups.append(_supervised_wall(tmp))
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    # medians: first iterations pay compile, the gate is steady-state
+    bare = float(np.median(bares))
+    sup = float(np.median(sups))
+    ratio = sup / bare
+    row = {
+        "bare_wall_ms": round(bare * 1e3, 2),
+        "supervised_wall_ms": round(sup * 1e3, 2),
+        "overhead_ratio": round(ratio, 4),
+        "gate": OVERHEAD_GATE,
+        "repeats": REPEATS,
+    }
+    print(f"supervisor_overhead: {row}")
+    assert ratio <= OVERHEAD_GATE, (
+        f"fault-free supervisor overhead {ratio:.3f}x exceeds the "
+        f"{OVERHEAD_GATE}x gate")
+    return row
+
+
+def main() -> None:
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        REPO, "BENCH_PR8.json")
+    report = {
+        "bench": "fault_drill_smoke",
+        "config": {
+            "n_instances": N_INSTANCES, "n_lanes": N_LANES,
+            "n_windows": N_WINDOWS, "window_block": WINDOW_BLOCK,
+            "cadence": CADENCE,
+        },
+        "drill_parity": drill_parity_section(),
+        "supervisor_overhead": overhead_section(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ from repro.api.spec import (
     Method,
     Partitioning,
     Policy,
+    Recovery,
     Reduction,
     Schedule,
     Schema,
@@ -34,15 +35,18 @@ from repro.api.spec import (
 )
 from repro.core.stream import CsvSink
 from repro.core.sweep import SweepSpec
+from repro.runtime.fault import FailurePlan
 
 __all__ = [
     "CsvSink",
     "Ensemble",
     "Experiment",
     "ExperimentError",
+    "FailurePlan",
     "Method",
     "Partitioning",
     "Policy",
+    "Recovery",
     "Reduction",
     "Schedule",
     "Schema",

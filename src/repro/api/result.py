@@ -57,6 +57,10 @@ class Telemetry:
     # watchdog's observation history
     straggler_windows: tuple = ()
     straggler_rate: float = 0.0
+    # supervised runs (Experiment.recovery): engine teardown+restore
+    # cycles the RunSupervisor performed; 0 for unsupervised runs and
+    # for supervised runs that never faulted
+    restarts: int = 0
 
 
 def _peak_rss_bytes() -> Optional[int]:
@@ -198,6 +202,13 @@ class SimulationResult:
         Steering."""
         return self._engine.steering_report()
 
+    def recovery_report(self) -> Optional[dict]:
+        """The RunSupervisor's event log + summary (restarts, faults
+        by kind, final shard count after any elastic degradation,
+        ordered events), or None when the Experiment carried no
+        Recovery."""
+        return getattr(self, "_recovery", None)
+
     # ------------------------------------------------------ telemetry
     @property
     def telemetry(self) -> Telemetry:
@@ -212,7 +223,8 @@ class SimulationResult:
             steps_per_window=tuple(eng.window_steps),
             leaps_per_window=tuple(eng.window_leaps),
             straggler_windows=tuple(eng.watchdog.flagged),
-            straggler_rate=eng.watchdog.straggler_rate())
+            straggler_rate=eng.watchdog.straggler_rate(),
+            restarts=getattr(self, "_restarts", 0))
 
     def __repr__(self) -> str:
         state = "completed" if self.completed else (

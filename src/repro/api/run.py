@@ -95,7 +95,24 @@ def simulate(experiment: Experiment, *,
     complete).
     max_windows: stop after this many windows; the returned handle's
     `.resume()` continues the same run in-process.
+
+    With `experiment.recovery` set, the run is handed to
+    `runtime.supervisor.RunSupervisor` (cadenced checkpoints +
+    restart-on-fault + elastic degradation, DESIGN.md §3h). The
+    supervisor owns checkpointing and drives the run to completion,
+    so checkpoint_path/resume/max_windows are rejected alongside it.
     """
+    if experiment.recovery is not None:
+        if checkpoint_path or resume or max_windows is not None:
+            raise ExperimentError(
+                "Experiment.recovery owns checkpointing and drives the "
+                "run to completion; drop checkpoint_path/resume/"
+                "max_windows (set Recovery.ckpt_dir and cadence "
+                "instead)")
+        from repro.runtime.supervisor import RunSupervisor
+
+        return RunSupervisor(experiment, experiment.recovery,
+                             mesh=mesh).run()
     engine = build_engine(experiment, mesh=mesh)
     if resume:
         if not checkpoint_path:

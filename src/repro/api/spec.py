@@ -22,13 +22,14 @@ from repro.core.cwc.rules import CWCModel
 from repro.core.dispatch import Partitioning
 from repro.core.reactions import ReactionSystem
 from repro.core.sweep import SweepSpec
+from repro.runtime.supervisor import Recovery
 from repro.stats.sketch import SketchSpec
 from repro.steer.policy import Steering
 
 __all__ = [
     "Ensemble", "Experiment", "ExperimentError", "Method",
-    "Partitioning", "Policy", "Reduction", "Schedule", "Schema",
-    "SketchSpec", "Steering",
+    "Partitioning", "Policy", "Recovery", "Reduction", "Schedule",
+    "Schema", "SketchSpec", "Steering",
 ]
 
 
@@ -253,6 +254,15 @@ class Experiment:
     (all levers off) is bitwise identical to no steering at all.
     Incompatible with host_loop (no block boundary to steer at);
     bimodality needs a sketch; tau_switch needs Method.TAU_LEAP.
+    recovery: supervised self-healing lifecycle (DESIGN.md §3h) —
+    simulate() hands the run to `runtime.supervisor.RunSupervisor`:
+    cadenced atomic checkpoints with retention, bounded-backoff restart
+    from the newest VALID snapshot on any typed recoverable fault,
+    elastic shard-loss degradation, straggler re-dispatch, and
+    deterministic fault-injection drills. Records/sketches/steering
+    decisions from a supervised run (faults or not) are bitwise
+    identical to the unsupervised run. Owns checkpointing, so it is
+    mutually exclusive with simulate()'s checkpoint_path/resume.
     """
 
     model: Union[CWCModel, ReactionSystem]
@@ -275,6 +285,7 @@ class Experiment:
     sparse: bool = False
     sketch: Optional[SketchSpec] = None
     steering: Optional[Steering] = None
+    recovery: Optional[Recovery] = None
 
     def __post_init__(self):
         object.__setattr__(self, "method", Method.coerce(self.method))
@@ -379,6 +390,15 @@ class Experiment:
                     raise ExperimentError(
                         "Steering.tau_switch only applies to "
                         "method=Method.TAU_LEAP runs")
+        if self.recovery is not None:
+            if not isinstance(self.recovery, Recovery):
+                raise ExperimentError(
+                    "Experiment.recovery must be a Recovery, "
+                    f"got {type(self.recovery).__name__}")
+            try:
+                self.recovery.validate()
+            except ValueError as e:
+                raise ExperimentError(str(e)) from e
         for s in self.sinks:
             if not callable(s):
                 raise ExperimentError(f"sink {s!r} is not callable")

@@ -1,1 +1,10 @@
-"""Checkpointing: atomic sharded store, async writer, elastic restore."""
+"""Checkpointing: atomic sharded store, async writer, elastic restore,
+hardened single-file engine snapshots (save_atomic/verify/retention)."""
+from repro.ckpt.store import (  # noqa: F401
+    CheckpointCorrupt,
+    RetentionPolicy,
+    checkpoint_name,
+    list_checkpoints,
+    save_atomic,
+    verify,
+)

@@ -11,19 +11,177 @@ process container stores full arrays.
 Integrity: every array file carries a checksum in the manifest;
 `latest_step` only advances after a fsync'd manifest rename (crash
 during save never corrupts the previous checkpoint).
+
+Single-file engine checkpoints (the `.npz` snapshots
+`SimulationEngine.checkpoint()` writes) are hardened here too:
+`save_atomic` is write-temp-fsync-rename with an embedded magic tag and
+a per-content sha256, `verify` loads with typed `CheckpointCorrupt`
+errors naming the path and the detected failure (unreadable/truncated
+archive, bad magic, checksum mismatch, missing key), and
+`RetentionPolicy` + `list_checkpoints` give the supervisor's cadenced
+checkpoint directory keep-last-K semantics (DESIGN.md §3h).
 """
 from __future__ import annotations
 
+import glob
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 import time
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(Exception):
+    """A checkpoint failed integrity verification. The message names
+    the offending path and the detected failure mode (unreadable or
+    truncated archive, bad magic, checksum mismatch, missing key)."""
+
+
+# magic + format version embedded in every hardened engine checkpoint;
+# files without it (pre-PR8 raw np.savez snapshots) still verify via
+# the legacy branch so old checkpoints keep restoring
+_CKPT_MAGIC = b"REPRO-CKPT-v1"
+_MAGIC_KEY = "__ckpt_magic__"
+_SHA_KEY = "__ckpt_sha256__"
+
+
+def _with_npz(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _digest_arrays(arrays: dict) -> str:
+    """Content digest over (key, dtype, shape, bytes) in sorted key
+    order — independent of npz member ordering/compression details."""
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def save_atomic(path: str, arrays: dict) -> str:
+    """Atomic single-file checkpoint write: the payload (plus magic tag
+    and content sha256) lands in a same-directory temp file, is
+    fsync'd, then renamed over `path` — a crash mid-save never leaves
+    a half-written file where a valid checkpoint (or nothing) should
+    be. Returns the final path (with `.npz`)."""
+    path = _with_npz(path)
+    payload = {k: np.asarray(v) for k, v in arrays.items()}
+    digest = _digest_arrays(payload)
+    payload[_MAGIC_KEY] = np.frombuffer(_CKPT_MAGIC, np.uint8).copy()
+    payload[_SHA_KEY] = np.frombuffer(digest.encode("ascii"),
+                                      np.uint8).copy()
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def verify(path: str, required: tuple = ()) -> dict:
+    """Load + integrity-check a single-file checkpoint.
+
+    Returns {key: np.ndarray} with the integrity keys stripped. Raises
+    `CheckpointCorrupt` naming `path` and the failure: an unreadable or
+    truncated archive, a bad magic tag, a content-checksum mismatch, or
+    a missing required key. Files without the magic tag (pre-hardening
+    raw np.savez snapshots) skip the checksum comparison but still get
+    readability and required-key checks."""
+    path = _with_npz(path)
+    try:
+        with np.load(path) as z:
+            arrays = {k: np.asarray(z[k]) for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointCorrupt(
+            f"checkpoint {path!r} is unreadable (truncated or not a "
+            f"valid npz archive): {type(e).__name__}: {e}") from e
+    if _MAGIC_KEY in arrays:
+        magic = bytes(arrays.pop(_MAGIC_KEY).tobytes())
+        if magic != _CKPT_MAGIC:
+            raise CheckpointCorrupt(
+                f"checkpoint {path!r} has a bad magic tag "
+                f"({magic!r} != {_CKPT_MAGIC!r}) — not a repro "
+                "checkpoint, or written by an incompatible version")
+        if _SHA_KEY not in arrays:
+            raise CheckpointCorrupt(
+                f"checkpoint {path!r} carries a magic tag but no "
+                "content checksum — partial or tampered write")
+        stored = arrays.pop(_SHA_KEY).tobytes().decode("ascii", "replace")
+        actual = _digest_arrays(arrays)
+        if actual != stored:
+            raise CheckpointCorrupt(
+                f"checkpoint {path!r} failed verification: checksum "
+                f"mismatch (stored {stored[:12]}…, content "
+                f"{actual[:12]}…) — the file was corrupted after it "
+                "was written")
+    missing = [k for k in required if k not in arrays]
+    if missing:
+        raise CheckpointCorrupt(
+            f"checkpoint {path!r} is missing required key(s) "
+            f"{missing} — truncated save or foreign file")
+    return arrays
+
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def checkpoint_name(window: int) -> str:
+    """Canonical cadenced-checkpoint file name for a window boundary."""
+    return f"ckpt_{window:08d}.npz"
+
+
+def list_checkpoints(directory: str) -> list[tuple[int, str]]:
+    """[(window, path)] of cadenced checkpoints under `directory`,
+    sorted oldest -> newest. Temp files from interrupted atomic saves
+    are ignored (they never match the canonical name)."""
+    out = []
+    for p in glob.glob(os.path.join(directory, "ckpt_*.npz")):
+        m = _CKPT_RE.search(os.path.basename(p))
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """Keep the newest `keep_last` cadenced checkpoints; prune the
+    rest oldest-first. keep_last >= 2 is what lets recovery fall back
+    PAST a corrupt newest checkpoint (DESIGN.md §3h)."""
+
+    keep_last: int = 3
+
+    def validate(self) -> None:
+        if self.keep_last < 1:
+            raise ValueError(
+                f"RetentionPolicy.keep_last must be >= 1, got "
+                f"{self.keep_last}")
+
+    def apply(self, directory: str) -> list[str]:
+        """Prune beyond keep_last; returns the removed paths."""
+        ckpts = list_checkpoints(directory)
+        removed = []
+        for _, p in ckpts[:max(0, len(ckpts) - self.keep_last)]:
+            os.remove(p)
+            removed.append(p)
+        return removed
 
 
 def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
@@ -108,7 +266,11 @@ def restore(template: Any, directory: str, step: Optional[int] = None,
     data = np.load(os.path.join(path, "arrays.npz"))
     digest = hashlib.sha256(
         open(os.path.join(path, "arrays.npz"), "rb").read()).hexdigest()
-    assert digest == manifest["sha256"], "checkpoint corrupted"
+    if digest != manifest["sha256"]:
+        raise CheckpointCorrupt(
+            f"checkpoint {path!r} failed verification: arrays.npz "
+            f"checksum mismatch vs manifest (stored "
+            f"{manifest['sha256'][:12]}…, file {digest[:12]}…)")
 
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
     sh_leaves = (jax.tree.leaves(shardings) if shardings is not None

@@ -1,8 +1,8 @@
 """Configuration dataclasses for the repro framework.
 
 Covers every assigned architecture family (dense / moe / ssm / hybrid /
-vlm / audio enc-dec) plus the simulation-side (paper) configs, the input
-shapes, the mesh, and the hardware model used for roofline analysis.
+vlm) plus the simulation-side (paper) configs, the input shapes, the
+mesh, and the hardware model used for roofline analysis.
 
 Configs are frozen dataclasses: hashable, usable as static args to jit.
 """
@@ -99,10 +99,6 @@ class ModelConfig:
     xlstm_expand: int = 2
     chunk_size: int = 256  # chunkwise-parallel chunk for mLSTM/mamba train
 
-    # --- encoder-decoder ---
-    is_encoder_decoder: bool = False
-    n_encoder_layers: int = 0
-
     # --- modality frontend stubs ---
     frontend: str = "none"  # none | vision | audio
     frontend_tokens: int = 0  # prefix positions supplied as embeddings
@@ -154,11 +150,6 @@ class ModelConfig:
         return tuple(
             LayerSpec(self.mixer_for_layer(i), self.ffn_for_layer(i))
             for i in range(self.n_layers)
-        )
-
-    def encoder_layer_specs(self) -> tuple[LayerSpec, ...]:
-        return tuple(
-            LayerSpec(MIXER_ATTN, FFN_DENSE) for _ in range(self.n_encoder_layers)
         )
 
     @property
@@ -233,10 +224,7 @@ class ModelConfig:
         n = self.padded_vocab * self.d_model  # embed
         if not self.tie_embeddings:
             n += self.padded_vocab * self.d_model
-        total_layers = list(self.layer_specs())
-        if self.is_encoder_decoder:
-            total_layers += list(self.encoder_layer_specs())
-        for spec in total_layers:
+        for spec in self.layer_specs():
             if spec.mixer == MIXER_ATTN:
                 n += self._attn_params()
             elif spec.mixer == MIXER_MAMBA:
@@ -251,9 +239,6 @@ class ModelConfig:
                 total, _ = self._moe_ffn_params()
                 n += total
             n += 2 * self.d_model  # norms
-        if self.is_encoder_decoder:
-            # cross-attention in each decoder layer
-            n += self.n_layers * self._attn_params()
         return n
 
     def active_param_count(self) -> int:
@@ -261,10 +246,7 @@ class ModelConfig:
         n = self.padded_vocab * self.d_model
         if not self.tie_embeddings:
             n += self.padded_vocab * self.d_model
-        total_layers = list(self.layer_specs())
-        if self.is_encoder_decoder:
-            total_layers += list(self.encoder_layer_specs())
-        for spec in total_layers:
+        for spec in self.layer_specs():
             if spec.mixer == MIXER_ATTN:
                 n += self._attn_params()
             elif spec.mixer == MIXER_MAMBA:
@@ -279,8 +261,6 @@ class ModelConfig:
                 _, active = self._moe_ffn_params()
                 n += active
             n += 2 * self.d_model
-        if self.is_encoder_decoder:
-            n += self.n_layers * self._attn_params()
         return n
 
 

@@ -121,6 +121,32 @@ class Partitioning:
                 f"n_instances ({n_instances}) must divide evenly into "
                 f"Partitioning.stat_blocks ({v}) blocks")
 
+    def degrade(self, n_instances: int, n_lost: int = 1) -> "Partitioning":
+        """Elastic shard-loss degradation: the largest valid shard
+        count d <= n_shards - n_lost — d must divide both n_instances
+        and the stat-block count (d=1 always qualifies, so any loss
+        short of every device degrades rather than dies).
+
+        stat_blocks is PINNED to the ORIGINAL partitioning's block
+        count: records depend on stat_blocks, never on the physical
+        shard count, so a run resumed on the survivors stays bitwise
+        identical to the uninterrupted one (the PR 2
+        reshard-on-restore contract, now exercised by fault recovery).
+        """
+        if n_lost < 1:
+            raise ValueError(f"n_lost must be >= 1, got {n_lost}")
+        if n_lost >= self.n_shards:
+            raise ValueError(
+                f"cannot degrade: lost {n_lost} of {self.n_shards} "
+                "shards (no survivors)")
+        blocks = self.blocks
+        target = self.n_shards - n_lost
+        d = next(d for d in range(target, 0, -1)
+                 if n_instances % d == 0 and blocks % d == 0)
+        out = Partitioning(n_shards=d, axis=self.axis, stat_blocks=blocks)
+        out.validate(n_instances)
+        return out
+
 
 class WindowResult(NamedTuple):
     """What one dispatched window hands back to the engine.

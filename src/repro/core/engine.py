@@ -72,6 +72,8 @@ from repro.core.gillespie import (
 from repro.core.reactions import ReactionSystem, sparse_tables
 from repro.core.scheduler import Scheduler
 from repro.core.stream import StatsRecord, StatsStream
+from repro.ckpt import store as ckpt_store
+from repro.runtime.fault import InvariantViolation
 from repro.runtime.straggler import WindowWatchdog
 from repro.stats.sketch import SketchSpec, WindowSketch, window_sketch
 from repro.steer.policy import Steering, SteeringActions, SteeringPolicy
@@ -121,6 +123,13 @@ class SimConfig:
     # dense MAX_COEF ceiling (table-free comb unroll to the system's
     # actual max coefficient).
     sparse: bool = False
+    # engine invariant guards (DESIGN.md §3h): host-side checks on the
+    # per-window statistics the collect path has ALREADY pulled
+    # (non-finite moments, negative populations, ring/record count
+    # disagreement) — zero extra device syncs. A trip raises a typed
+    # InvariantViolation; the in-memory pool is untrusted from that
+    # point and a supervisor recovers from the last durable checkpoint.
+    guards: bool = True
 
     def __post_init__(self):
         if self.window_block < 1:
@@ -482,6 +491,8 @@ class SimulationEngine:
         if bool(pulled.get("truncated", False)):
             # a silently partial window must never become a record
             self._raise_truncated(self._window, horizon)
+        if cfg.guards:
+            self._guard_stats(self._window, pulled["mean"], pulled["var"])
         # the device sums are int32 and wrap once pool-wide cumulative
         # counts pass 2^31; tracking residues mod 2^32 and taking
         # modular deltas keeps every per-window value exact (a single
@@ -543,6 +554,41 @@ class SimulationEngine:
             f"kernel_chunk_steps={cfg.kernel_chunk_steps} events with "
             "live lanes still below the horizon; raise those limits "
             "or use more windows")
+
+    def _raise_invariant(self, window: int, check: str, detail: str):
+        """Typed invariant-guard raise, shared by the per-window and
+        superstep collect paths. Same in-flight hygiene as
+        _raise_truncated: the pipeline was dispatched from the
+        now-untrusted pool, so it is dropped, and the dispatch cursor
+        rewinds to the collected frontier — a supervisor that catches
+        the error restores a checkpoint and replays from there."""
+        self._pending.clear()
+        self._dispatched = self._window
+        raise InvariantViolation(
+            f"engine invariant {check!r} violated at window {window}: "
+            f"{detail} — the pool state is untrusted; recover from the "
+            "last checkpoint (set SimConfig.guards=False to disable)",
+            window=window, check=check)
+
+    def _guard_stats(self, window: int, mean, var) -> None:
+        """Cheap host-side invariant checks on the per-window moments
+        the collect path already pulled (no extra device syncs).
+        Observables are sums of species counts, so a finite simulation
+        can only produce finite, non-negative means; NaN/inf means a
+        poisoned pool (propensity overflow, bad rates, fault
+        injection), a negative mean means population underflow."""
+        mean = np.asarray(mean)
+        var = np.asarray(var)
+        if not (np.isfinite(mean).all() and np.isfinite(var).all()):
+            self._raise_invariant(
+                window, "non_finite_stats",
+                "window statistics contain NaN/inf (non-finite "
+                "propensities or poisoned lane state)")
+        if (mean < 0.0).any():
+            self._raise_invariant(
+                window, "negative_population",
+                f"window mean dipped below zero (min {mean.min():g}); "
+                "species counts can never be negative")
 
     def _next_block_windows(self, limit: int) -> int:
         """Size of the next superstep: realigned to the absolute
@@ -618,11 +664,23 @@ class SimulationEngine:
         self.n_host_syncs += 1
         wall = dispatch_wall + (time.perf_counter() - t0)
         trunc = pulled.get("truncated")
+        if cfg.guards and (len(pulled["stats"]) != n_win
+                           or len(pulled["steps"]) != n_win):
+            # ring/record disagreement: the device ring and the queued
+            # block descriptor no longer agree on the window count
+            self._raise_invariant(
+                w0, "ring_record_mismatch",
+                f"superstep ring holds {len(pulled['stats'])} stat "
+                f"rows / {len(pulled['steps'])} telemetry rows for a "
+                f"{n_win}-window block at window {w0}")
         for w in range(n_win):
             self.wall_times.append(wall / n_win)
             self.watchdog.observe(w0 + w, wall / n_win)
             if trunc is not None and trunc[w]:
                 self._raise_truncated(w0 + w, float(self.grid[w0 + w]))
+            if cfg.guards:
+                s_w = pulled["stats"][w]
+                self._guard_stats(w0 + w, s_w.mean, s_w.var)
             steps_cum = int(pulled["steps"][w]) & 0xFFFFFFFF
             leaps_cum = int(pulled["leaps"][w]) & 0xFFFFFFFF
             self.window_steps.append(
@@ -845,17 +903,26 @@ class SimulationEngine:
         if self._steer is not None:
             for k, v in self._steer.state_dict().items():
                 extra[f"steer_{k}"] = v
-        np.savez(
-            path, x=np.asarray(p.x), t=np.asarray(p.t),
+        # atomic + checksummed (ckpt.store.save_atomic): a crash
+        # mid-save never clobbers the previous snapshot, and restore
+        # detects truncation/corruption instead of loading garbage
+        ckpt_store.save_atomic(path, dict(
+            x=np.asarray(p.x), t=np.asarray(p.t),
             key=np.asarray(p.key), ctr=np.asarray(p.ctr),
             ctr_hi=np.asarray(p.ctr_hi),
             steps=np.asarray(p.steps), leaps=np.asarray(p.leaps),
             dead=np.asarray(p.dead), no_leap=np.asarray(p.no_leap),
             window=self._window,
-            cost=self.scheduler._cost, rates=self.rates, **extra)
+            cost=self.scheduler._cost, rates=self.rates, **extra))
 
     def restore(self, path: str) -> None:
-        z = np.load(path if path.endswith(".npz") else path + ".npz")
+        # integrity-checked load (ckpt.store.verify): truncated or
+        # garbage files raise a typed CheckpointCorrupt naming the path
+        # and the failure instead of surfacing a raw numpy/KeyError;
+        # pre-hardening magic-less snapshots still load
+        z = ckpt_store.verify(
+            path, required=("x", "t", "key", "steps", "dead",
+                            "window", "cost"))
         # supersteps advance window_block windows per dispatch, so a
         # resume must start on a block boundary of THIS engine's grid;
         # a checkpoint cut mid-block (e.g. by a max_windows stop under
@@ -915,7 +982,7 @@ class SimulationEngine:
             self._group_ids_dev = self._dispatch.place(
                 self._group_ids_dev)
         if self._steer is not None:
-            st = {k[len("steer_"):]: z[k] for k in z.files
+            st = {k[len("steer_"):]: z[k] for k in z
                   if k.startswith("steer_")}
             if st:
                 self._steer.load_state(st)

@@ -33,13 +33,7 @@ def synth_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
     toks = rng.zipf(dcfg.zipf_a, size=(batch, seq + 1)).astype(np.int64)
     toks = (toks - 1) % v
     out: dict = {}
-    if cfg.is_encoder_decoder:
-        out["frames"] = rng.standard_normal(
-            (batch, seq, cfg.d_model)).astype(np.float32)
-        out["tokens"] = toks[:, :seq].astype(np.int32)
-        out["targets"] = toks[:, 1:].astype(np.int32)
-        out["loss_mask"] = np.ones((batch, seq), np.float32)
-    elif cfg.frontend == "vision":
+    if cfg.frontend == "vision":
         p = cfg.frontend_tokens
         out["embeds"] = rng.standard_normal(
             (batch, p, cfg.d_model)).astype(np.float32)

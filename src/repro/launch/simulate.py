@@ -97,7 +97,37 @@ def main() -> None:
                     "records bit-identical across device counts")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint file: written per window, resumed "
-                    "from when it already exists")
+                    "from when it already exists (mutually exclusive "
+                    "with --recover-dir)")
+    ap.add_argument("--recover-dir", default=None, metavar="DIR",
+                    help="supervised self-healing run (RunSupervisor): "
+                    "cadenced atomic checkpoints under DIR, bounded-"
+                    "backoff restart from the newest valid snapshot on "
+                    "any recoverable fault, elastic shard-loss "
+                    "degradation; mutually exclusive with --ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=1, metavar="N",
+                    help="supervised checkpoint cadence in windows "
+                    "(rounded up to a multiple of --window-block)")
+    ap.add_argument("--keep-last", type=int, default=3, metavar="K",
+                    help="supervised checkpoint retention depth; >= 2 "
+                    "keeps a fallback behind a corrupt newest file")
+    ap.add_argument("--max-restarts", type=int, default=8,
+                    help="recoveries before the run is declared dead")
+    ap.add_argument("--redispatch-stragglers", action="store_true",
+                    help="escalate watchdog breaches into a supervised "
+                    "re-dispatch of the offending block (one retry per "
+                    "window; replay is bitwise)")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="W:KIND",
+                    help="fault drill: inject KIND (crash|device_lost|"
+                    "ckpt_corrupt|stall|nan_pool) before window W; "
+                    "repeatable (needs --recover-dir)")
+    ap.add_argument("--inject-rate", type=float, default=0.0,
+                    help="fault drill: seeded per-window crash "
+                    "probability on top of --inject")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for --inject-rate draws (same seed = "
+                    "same fault schedule)")
     ap.add_argument("--sketch-bins", type=int, default=0,
                     help="stream per-window fixed-bin histograms with "
                     "this many bins per (point, observable); p10/p50/"
@@ -160,6 +190,30 @@ def main() -> None:
                            bimodality=args.flag_bimodal)
                   if (args.early_stop or args.tau_switch
                       or args.flag_bimodal) else None))
+
+    if args.recover_dir:
+        if args.ckpt:
+            raise SystemExit("--recover-dir owns checkpointing; drop "
+                             "--ckpt")
+        from repro.api import Recovery
+        from repro.runtime.fault import FAULT_KINDS, FailurePlan
+
+        schedule = {}
+        for spec in args.inject:
+            w, _, kind = spec.partition(":")
+            if not w.isdigit() or kind not in FAULT_KINDS:
+                raise SystemExit(
+                    f"--inject expects W:KIND with KIND in "
+                    f"{FAULT_KINDS}, got {spec!r}")
+            schedule[int(w)] = kind
+        plan = (FailurePlan(schedule=schedule, seed=args.inject_seed,
+                            random_rate=args.inject_rate)
+                if (schedule or args.inject_rate) else None)
+        experiment = experiment.with_(recovery=Recovery(
+            ckpt_dir=args.recover_dir, cadence=args.ckpt_every,
+            keep_last=args.keep_last, max_restarts=args.max_restarts,
+            redispatch_stragglers=args.redispatch_stragglers,
+            inject=plan))
 
     if args.out:
         from repro.api.run import observable_names
@@ -227,6 +281,16 @@ def main() -> None:
               f"{len(rep['bimodal_flags'])} bimodal flags")
         for d in rep["decisions"]:
             print(f"  w{d['window']}: {d}")
+    rec = result.recovery_report()
+    if rec is not None:
+        print(f"recovery: {rec['restarts']} restart(s), faults="
+              f"{rec['faults_by_kind'] or '{}'}"
+              + (f", degraded to {rec['final_n_shards']} shard(s)"
+                 if rec["final_n_shards"] is not None else ""))
+        for ev in rec["events"]:
+            if ev["event"] in ("fault_injected", "fault", "degraded",
+                               "corrupt_checkpoint_skipped"):
+                print(f"  {ev}")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,4 @@ def build_model(cfg, topo, remat: str = "block", scan_layers: bool = True):
     with `models/encdec.py`)."""
     from repro.models.causal_lm import CausalLM
 
-    if cfg.is_encoder_decoder:
-        raise ValueError(
-            "encoder-decoder configs are no longer supported — the "
-            "seamless-m4t family and models/encdec.py were removed; "
-            "use a decoder-only arch from configs.registry")
     return CausalLM(cfg, topo, remat, scan_layers)

@@ -33,7 +33,7 @@ Q_CHUNK = 1024
 KV_CHUNK = 1024
 
 
-def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+def attn_defs(cfg: ModelConfig) -> dict:
     d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     defs = {
         "wq": ParamDef((d, h, hd), (EMBED, Q_HEADS, HEAD_DIM)),
@@ -49,7 +49,7 @@ def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
     return defs
 
 
-def project_qkv(params, x, cfg: ModelConfig, positions=None, rope: bool = True):
+def project_qkv(params, x, cfg: ModelConfig, positions=None):
     """x: (B, S, D) -> q (B,S,H,hd), k,v (B,S,KV,hd)."""
     q = einsum("bsd,dhk->bshk", x, params["wq"])
     k = einsum("bsd,dhk->bshk", x, params["wk"])
@@ -58,7 +58,7 @@ def project_qkv(params, x, cfg: ModelConfig, positions=None, rope: bool = True):
         q = q + params["bq"]
         k = k + params["bk"]
         v = v + params["bv"]
-    if rope and cfg.use_rope:
+    if cfg.use_rope:
         if positions is None:
             positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
         q = apply_rope(q, positions, cfg.rope_theta)

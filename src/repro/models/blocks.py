@@ -1,8 +1,7 @@
 """Block assembly and layer stacking.
 
 A block = pre-norm attention mixer + pre-norm FFN (dense / moe /
-none), with optional parallel-residual (command-r) and
-cross-attention (enc-dec decoders).
+none), with optional parallel-residual (command-r).
 
 Layer stacks are decomposed into `prefix + pattern × n_repeat` (e.g.
 deepseek: 1 dense layer + 27 MoE). The
@@ -62,15 +61,12 @@ def layer_groups(specs: tuple[LayerSpec, ...], max_period: int = 12) -> LayerGro
 # ---------------------------------------------------------------------------
 
 
-def block_defs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
+def block_defs(cfg: ModelConfig, spec: LayerSpec) -> dict:
     d = {"norm1": norm_defs(cfg.d_model, cfg.norm)}
     if spec.mixer == MIXER_ATTN:
         d["mixer"] = attn_mod.attn_defs(cfg)
     else:
         raise ValueError(spec.mixer)
-    if cross:
-        d["norm_cross"] = norm_defs(cfg.d_model, cfg.norm)
-        d["cross"] = attn_mod.attn_defs(cfg)
     if spec.ffn == FFN_DENSE:
         d["ffn"] = mlp_defs(cfg)
         if not cfg.parallel_block:
@@ -83,45 +79,29 @@ def block_defs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> dict:
 
 
 def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
-                     cache_len: int, dtype, cross_len: int = 0):
+                     cache_len: int, dtype):
     """Decode-time cache entry for one block."""
     hd = cfg.resolved_head_dim
     if spec.mixer == MIXER_ATTN:
-        cache = {
+        return {
             "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
         }
-    else:
-        raise ValueError(spec.mixer)
-    if cross_len:
-        cache["cross_k"] = jnp.zeros((batch, cross_len, cfg.n_kv_heads, hd), dtype)
-        cache["cross_v"] = jnp.zeros((batch, cross_len, cfg.n_kv_heads, hd), dtype)
-    return cache
+    raise ValueError(spec.mixer)
 
 
-def block_cache_logical(cfg: ModelConfig, spec: LayerSpec, cross: bool = False):
+def block_cache_logical(cfg: ModelConfig, spec: LayerSpec):
     """Logical axes for each cache leaf (mirrors init_block_cache)."""
     if spec.mixer == MIXER_ATTN:
-        out = {"k": (BATCH, KV_SEQ, KV_HEADS, None),
-               "v": (BATCH, KV_SEQ, KV_HEADS, None)}
-    else:
-        raise ValueError(spec.mixer)
-    if cross:
-        out["cross_k"] = (BATCH, None, KV_HEADS, None)
-        out["cross_v"] = (BATCH, None, KV_HEADS, None)
-    return out
+        return {"k": (BATCH, KV_SEQ, KV_HEADS, None),
+                "v": (BATCH, KV_SEQ, KV_HEADS, None)}
+    raise ValueError(spec.mixer)
 
 
 def _apply_attn_full(params, x, cfg, topo, positions):
     q, k, v = attn_mod.project_qkv(params, x, cfg, positions)
     o = attn_mod.attention(q, k, v, causal=True)
     return attn_mod.out_proj(params, o), {"k": k, "v": v}
-
-
-def _apply_attn_bidir(params, x, cfg, topo, positions):
-    q, k, v = attn_mod.project_qkv(params, x, cfg, positions)
-    o = attn_mod.attention(q, k, v, causal=False)
-    return attn_mod.out_proj(params, o), None
 
 
 def _apply_attn_decode(params, x, cfg, topo, cache, pos):
@@ -141,27 +121,13 @@ def _apply_attn_decode(params, x, cfg, topo, cache, pos):
     return attn_mod.out_proj(params, o), new_cache
 
 
-def _apply_cross_attn(params, x, cfg, topo, k_c, v_c):
-    """Decoder cross-attention over encoder K/V."""
-    q, _, _ = attn_mod.project_qkv(params, x, cfg, rope=False)
-    o = attn_mod.attention(q, k_c, v_c, causal=False)
-    return attn_mod.out_proj(params, o)
-
-
-def cross_kv(params, enc_out, cfg):
-    """Precompute encoder K/V for decoder cross-attention."""
-    _, k, v = attn_mod.project_qkv(params, enc_out, cfg, rope=False)
-    return k, v
-
-
 def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
                 *, mode: str = "full", positions=None, cache: Optional[dict] = None,
-                pos=None, enc_out=None):
+                pos=None):
     """Returns (x, new_cache, aux).
 
     mode: "full" (train: no cache IO), "prefill" (returns built cache),
-    "decode" (single token, consumes + updates cache), "encode"
-    (bidirectional, no cache).
+    "decode" (single token, consumes + updates cache).
     """
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm)
@@ -172,9 +138,6 @@ def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
             mix_out, kv = _apply_attn_decode(params["mixer"], h, cfg, topo,
                                              cache, pos)
             new_cache.update(kv)
-        elif mode == "encode":
-            mix_out, _ = _apply_attn_bidir(params["mixer"], h, cfg, topo,
-                                           positions)
         else:
             mix_out, kv = _apply_attn_full(params["mixer"], h, cfg, topo,
                                            positions)
@@ -182,19 +145,6 @@ def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
                 new_cache.update(kv)
     else:
         raise ValueError(spec.mixer)
-
-    if "cross" in params:
-        xc = x + mix_out
-        hc = apply_norm(params["norm_cross"], xc, cfg.norm)
-        if mode == "decode":
-            k_c, v_c = cache["cross_k"], cache["cross_v"]
-            new_cache["cross_k"], new_cache["cross_v"] = k_c, v_c
-        else:
-            k_c, v_c = cross_kv(params["cross"], enc_out, cfg)
-            if mode == "prefill":
-                new_cache["cross_k"], new_cache["cross_v"] = k_c, v_c
-        mix_out = mix_out + _apply_cross_attn(params["cross"], hc, cfg, topo,
-                                              k_c, v_c)
 
     if cfg.parallel_block and spec.ffn != FFN_NONE:
         # command-r: y = x + attn(n(x)) + ffn(n(x)) (shared norm)
@@ -225,12 +175,11 @@ def apply_block(params, x, cfg: ModelConfig, topo: Topology, spec: LayerSpec,
 # ---------------------------------------------------------------------------
 
 
-def stack_defs(cfg: ModelConfig, specs: tuple[LayerSpec, ...],
-               cross: bool = False) -> dict:
+def stack_defs(cfg: ModelConfig, specs: tuple[LayerSpec, ...]) -> dict:
     groups = layer_groups(specs)
-    d: dict = {"prefix": [block_defs(cfg, s, cross) for s in groups.prefix]}
+    d: dict = {"prefix": [block_defs(cfg, s) for s in groups.prefix]}
     if groups.n_repeat:
-        pat = {f"l{j}": block_defs(cfg, s, cross)
+        pat = {f"l{j}": block_defs(cfg, s)
                for j, s in enumerate(groups.pattern)}
         d["stack"] = jax.tree.map(
             lambda pd: pd.stacked(groups.n_repeat), pat,
@@ -240,7 +189,7 @@ def stack_defs(cfg: ModelConfig, specs: tuple[LayerSpec, ...],
 
 def pad_cache(cache, cache_len: int):
     """Pad attention K/V cache seq axes (axis = ndim-3) out to cache_len
-    so decode has ring-write headroom. Cross K/V are untouched."""
+    so decode has ring-write headroom."""
 
     def walk(node):
         if isinstance(node, dict):
@@ -264,14 +213,13 @@ def pad_cache(cache, cache_len: int):
 
 
 def stack_cache_init(cfg: ModelConfig, specs, batch: int, cache_len: int,
-                     dtype, cross_len: int = 0):
+                     dtype):
     groups = layer_groups(specs)
     cache: dict = {"prefix": [
-        init_block_cache(cfg, s, batch, cache_len, dtype, cross_len)
+        init_block_cache(cfg, s, batch, cache_len, dtype)
         for s in groups.prefix]}
     if groups.n_repeat:
-        pat = {f"l{j}": init_block_cache(cfg, s, batch, cache_len, dtype,
-                                         cross_len)
+        pat = {f"l{j}": init_block_cache(cfg, s, batch, cache_len, dtype)
                for j, s in enumerate(groups.pattern)}
         cache["stack"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (groups.n_repeat, *a.shape)).copy(),
@@ -281,7 +229,7 @@ def stack_cache_init(cfg: ModelConfig, specs, batch: int, cache_len: int,
 
 def apply_stack(params, x, cfg: ModelConfig, topo: Topology, specs,
                 *, mode="full", positions=None, cache=None, pos=None,
-                remat: str = "block", enc_out=None, scan: bool = True):
+                remat: str = "block", scan: bool = True):
     """Run the full layer stack. Returns (x, new_cache, aux).
 
     scan=True executes the repeated pattern with lax.scan (small HLO,
@@ -296,7 +244,7 @@ def apply_stack(params, x, cfg: ModelConfig, topo: Topology, specs,
         c = cache["prefix"][i] if cache is not None else None
         x, nc, aux = apply_block(params["prefix"][i], x, cfg, topo, spec,
                                  mode=mode, positions=positions, cache=c,
-                                 pos=pos, enc_out=enc_out)
+                                 pos=pos)
         new_cache["prefix"].append(nc)
         aux_total = aux_total + aux
 
@@ -314,7 +262,7 @@ def apply_stack(params, x, cfg: ModelConfig, topo: Topology, specs,
                 x, ncj, aux = apply_block(p_slice[f"l{j}"], x, cfg, topo,
                                           spec, mode=mode,
                                           positions=positions, cache=cj,
-                                          pos=pos, enc_out=enc_out)
+                                          pos=pos)
                 ncs[f"l{j}"] = ncj
                 aux_acc = aux_acc + aux
             return x, aux_acc, ncs
@@ -342,7 +290,7 @@ def apply_stack(params, x, cfg: ModelConfig, topo: Topology, specs,
             cj = c_slice[f"l{j}"] if use_cache else None
             xx, ncj, aux = apply_block(p_slice[f"l{j}"], xx, cfg, topo, spec,
                                        mode=mode, positions=positions,
-                                       cache=cj, pos=pos, enc_out=enc_out)
+                                       cache=cj, pos=pos)
             ncs[f"l{j}"] = ncj
             aux_acc = aux_acc + aux
         return (xx, aux_acc), ncs

@@ -36,7 +36,6 @@ from repro.sharding.rules import BATCH, EMBED, SEQ, VOCAB, Topology
 class CausalLM:
     def __init__(self, cfg: ModelConfig, topo: Topology,
                  remat: str = "block", scan_layers: bool = True):
-        assert not cfg.is_encoder_decoder
         self.cfg = cfg
         self.topo = topo
         self.remat = remat
@@ -149,7 +148,7 @@ def _cache_shardings(cfg, specs, topo: Topology):
     out: dict = {"prefix": []}
 
     def entry(spec, stacked: bool):
-        logical = blocks.block_cache_logical(cfg, spec, cfg.is_encoder_decoder)
+        logical = blocks.block_cache_logical(cfg, spec)
         return {
             k: topo.named(("layers", *ax) if stacked else ax)
             for k, ax in logical.items()

@@ -1,1 +1,12 @@
-"""Runtime: failure injection/recovery, straggler mitigation."""
+"""Runtime: typed faults + injection, straggler watchdog, and the
+supervised recovery loop (RunSupervisor)."""
+from repro.runtime.fault import (  # noqa: F401
+    FAULT_KINDS,
+    DeviceLost,
+    EngineCrash,
+    EngineStall,
+    FailureInjector,
+    FailurePlan,
+    InvariantViolation,
+    RecoverableError,
+)

@@ -1,41 +1,149 @@
-"""Fault tolerance runtime: failure injection + recovery drills.
+"""Fault tolerance runtime: typed recoverable faults + injection.
 
 At 1000+ nodes the design assumptions are:
-* node loss is routine — the window boundary (simulation) / step
-  boundary (training) is the re-sync point;
-* per-instance RNG keys make simulation work *relocatable*: any shard
-  can re-run a lost instance bit-identically from the last checkpoint;
-* the deterministic data pipeline makes training replicas re-spawnable
-  from (checkpoint step, data cursor = step).
+* node loss is routine — the window boundary (simulation) / block
+  boundary (supersteps) is the re-sync point;
+* per-instance counter RNG makes simulation work *relocatable*: any
+  shard can re-run a lost instance bit-identically from the last
+  checkpoint, so every fault below is recoverable by restore + replay;
+* a fault is a VALUE, not a log line: the hierarchy here is what the
+  engine raises (invariant guards), what the injector simulates, and
+  what `runtime.supervisor.RunSupervisor` catches and classifies.
 
-`FailureInjector` drives drills on the in-process engines; the tests
-assert bit-identical results with and without injected failures.
+`FailurePlan` holds a deterministic schedule — explicit
+{window: kind} entries plus an optional seeded probabilistic layer
+(`random_rate`, drawn once per plan seed, NOT per run) — and
+`FailureInjector` fires each scheduled fault exactly once.
 """
 from __future__ import annotations
 
-import random
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
 
 
+class RecoverableError(Exception):
+    """Base for faults the supervisor recovers from by restore+replay.
+
+    `window` is the engine window the fault surfaced at (-1 unknown);
+    `kind` is the FAULT_KINDS tag used for classification/telemetry."""
+
+    kind = "crash"
+
+    def __init__(self, message: str, window: int = -1):
+        super().__init__(message)
+        self.window = window
+
+
+class EngineCrash(RecoverableError):
+    """Simulated or detected process death: rebuild + restore."""
+
+    kind = "crash"
+
+
+class DeviceLost(RecoverableError):
+    """A shard's device dropped out: rebuild on survivors (elastic
+    degradation via Partitioning.degrade + reshard-on-restore)."""
+
+    kind = "device_lost"
+
+    def __init__(self, message: str, window: int = -1, n_lost: int = 1):
+        super().__init__(message, window)
+        self.n_lost = n_lost
+
+
+class EngineStall(RecoverableError):
+    """A window breached the straggler watchdog hard enough to
+    abandon: supervised re-dispatch of the offending block."""
+
+    kind = "stall"
+
+
+class InvariantViolation(RecoverableError):
+    """An engine invariant guard tripped (non-finite statistics,
+    negative populations, ring/record disagreement): the in-memory
+    state is untrusted, recover from the last durable checkpoint."""
+
+    kind = "nan_pool"
+
+    def __init__(self, message: str, window: int = -1, check: str = ""):
+        super().__init__(message, window)
+        self.check = check
+
+
+# The typed fault vocabulary (injection + classification):
+#   crash        kill the engine between windows; restore newest ckpt
+#   device_lost  drop a shard; restore onto a degraded partitioning
+#   ckpt_corrupt corrupt the newest checkpoint THEN crash — one fault
+#                deterministically exercises fallback-past-corrupt
+#   stall        watchdog-grade stall; re-dispatch = restore + replay
+#   nan_pool     poison the lane pool; the engine's own invariant
+#                guard must detect it (tests the guard, not the plan)
+FAULT_KINDS = ("crash", "device_lost", "ckpt_corrupt", "stall", "nan_pool")
+
+
 @dataclass
 class FailurePlan:
-    """Deterministic failure schedule: {window_or_step: kind}."""
+    """Deterministic failure schedule.
 
-    schedule: dict
+    `schedule` maps window (or training step) -> fault kind. On top of
+    the explicit entries, `random_rate` > 0 adds a seeded probabilistic
+    layer: `materialize(n_windows)` draws per-window crash faults with
+    that probability from `np.random.default_rng(seed)` — the same
+    (seed, rate, n_windows) always yields the same schedule, so
+    probabilistic drills replay bitwise too.
+    """
+
+    schedule: dict = field(default_factory=dict)
     seed: int = 0
+    random_rate: float = 0.0
+    random_kind: str = "crash"
+
+    def __post_init__(self):
+        for kind in self.schedule.values():
+            if kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; expected one of "
+                    f"{FAULT_KINDS}")
+        if not 0.0 <= self.random_rate <= 1.0:
+            raise ValueError(
+                f"random_rate must be in [0, 1], got {self.random_rate}")
+        if self.random_kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown random_kind {self.random_kind!r}; expected "
+                f"one of {FAULT_KINDS}")
+
+    def materialize(self, n_windows: int) -> dict:
+        """Concrete {window: kind} for a run of `n_windows` windows:
+        explicit entries win; seeded draws fill the rest."""
+        out = dict(self.schedule)
+        if self.random_rate > 0.0:
+            rng = np.random.default_rng(self.seed)
+            hits = rng.random(n_windows) < self.random_rate
+            for w in np.nonzero(hits)[0]:
+                out.setdefault(int(w), self.random_kind)
+        return out
 
 
 class FailureInjector:
-    def __init__(self, plan: FailurePlan):
+    """Fires each scheduled fault exactly once (a restarted run passes
+    the same window again during replay — the fault must not refire or
+    the drill would never converge)."""
+
+    def __init__(self, plan: FailurePlan, n_windows: Optional[int] = None):
         self.plan = plan
+        self.schedule = (plan.materialize(n_windows)
+                         if n_windows is not None else dict(plan.schedule))
         self.events: list = []
+        self._fired: set = set()
 
     def maybe_fail(self, step: int) -> Optional[str]:
-        kind = self.plan.schedule.get(step)
+        if step in self._fired:
+            return None
+        kind = self.schedule.get(step)
         if kind:
+            self._fired.add(step)
             self.events.append((step, kind))
         return kind
 
@@ -44,21 +152,22 @@ def run_sim_with_failures(make_engine, ckpt_path: str, plan: FailurePlan,
                           ckpt_every: int = 1):
     """Drill: run a SimulationEngine, killing and restoring it per plan.
 
-    `make_engine() -> SimulationEngine`. On 'crash', the engine object is
-    discarded (simulating a lost pod) and rebuilt from the last
+    `make_engine() -> SimulationEngine`. On a fault, the engine object
+    is discarded (simulating a lost pod) and rebuilt from the last
     checkpoint. Returns the stream records of the surviving run.
+
+    This is the minimal single-checkpoint drill used by the engine
+    tests; the production loop with cadence/retention/elastic recovery
+    is `runtime.supervisor.RunSupervisor`.
     """
-    inj = FailureInjector(plan)
     eng = make_engine()
+    inj = FailureInjector(plan, n_windows=len(eng.grid))
     eng.checkpoint(ckpt_path)
     records = {}
-    crashed: set = set()
     guard = 0
     while eng._window < len(eng.grid):
         w = eng._window
-        if w in plan.schedule and w not in crashed:
-            crashed.add(w)
-            inj.maybe_fail(w)
+        if inj.maybe_fail(w):
             eng = make_engine()
             eng.restore(ckpt_path)
             continue
@@ -70,31 +179,3 @@ def run_sim_with_failures(make_engine, ckpt_path: str, plan: FailurePlan,
         assert guard < 10 * len(eng.grid), "drill did not converge"
     ordered = [records[w] for w in range(len(eng.grid))]
     return ordered, inj.events
-
-
-def run_train_with_failures(make_state, train_step, batches, ckpt_dir: str,
-                            plan: FailurePlan, save_fn, restore_fn,
-                            ckpt_every: int = 2):
-    """Drill: training loop with crash/restore at step granularity.
-
-    Determinism contract: restored run must produce the same losses as
-    an uninterrupted run (asserted in tests).
-    """
-    inj = FailureInjector(plan)
-    state = make_state()
-    save_fn(state, 0)
-    losses = {}
-    crashed: set = set()
-    step = 0
-    while step < len(batches):
-        if step in plan.schedule and step not in crashed:
-            crashed.add(step)
-            inj.maybe_fail(step)
-            state, step = restore_fn()
-            continue
-        state, metrics = train_step(state, batches[step])
-        losses[step] = float(np.asarray(metrics["loss"]))
-        step += 1
-        if step % ckpt_every == 0:
-            save_fn(state, step)
-    return state, [losses[i] for i in range(len(batches))], inj.events

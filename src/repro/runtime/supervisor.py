@@ -1,0 +1,333 @@
+"""RunSupervisor — the self-healing ensemble-farm lifecycle.
+
+The engine (core/engine.py) turns faults into typed RecoverableErrors
+and checkpoints into atomic, checksummed, mesh-shape-agnostic
+snapshots; this module is the loop that turns those two properties
+into "a campaign survives anything short of losing every device":
+
+* cadenced checkpoints — saved on window/block boundaries under a
+  keep-last-K `RetentionPolicy` (ckpt.store), named by window;
+* crash detection + bounded-backoff restart — any RecoverableError
+  tears the engine down, sleeps an exponential backoff, rebuilds, and
+  restores the newest checkpoint that VERIFIES, falling back past
+  corrupt/truncated files (and to a fresh window-0 start if none
+  survive);
+* elastic shard-loss degradation — a DeviceLost fault shrinks the
+  Partitioning via `degrade()` (stat_blocks pinned, so records stay
+  bitwise) and the rebuild lands on the surviving shards through the
+  reshard-on-restore path;
+* straggler escalation — WindowWatchdog breaches stop being
+  telemetry-only: with `redispatch_stragglers` the supervisor raises
+  an EngineStall and re-dispatches the offending block from the last
+  checkpoint (bounded to one retry per window — replay is bitwise, so
+  the retry costs wall time, never correctness);
+* deterministic fault injection — a FailurePlan (explicit schedule +
+  seeded probabilistic layer) drives drills through the SAME recovery
+  machinery production faults use.
+
+The recovery contract (DESIGN.md §3h): because trajectories are a pure
+function of (seed, counter-RNG state) and checkpoints carry the full
+pool + RNG counters + emitted records + steering state, a run
+suffering ANY injected fault sequence produces records, sketches, and
+steering decisions bitwise identical to the uninterrupted run. Sinks
+are attached only after the run succeeds (records replay into them
+once), so restarts never double-write.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.ckpt import store as ckpt_store
+from repro.runtime.fault import (
+    DeviceLost,
+    EngineCrash,
+    EngineStall,
+    FailureInjector,
+    FailurePlan,
+    RecoverableError,
+)
+
+
+@dataclass(frozen=True)
+class Recovery:
+    """Supervised-recovery spec (Experiment(recovery=Recovery(...))).
+
+    ckpt_dir: directory for cadenced checkpoints (created on run).
+    cadence: checkpoint every N windows. Rounded up to a multiple of
+    the experiment's window_block so every save lands on a superstep
+    boundary (restore rejects mid-block snapshots).
+    keep_last: RetentionPolicy depth; >= 2 keeps a fallback candidate
+    behind the newest file, which is what makes recovery survive a
+    corrupt newest checkpoint.
+    max_restarts: recoveries allowed before the run is declared dead
+    (a RuntimeError carrying the last fault).
+    backoff_base_s/backoff_max_s: bounded exponential restart backoff
+    (base * 2^(restart-1), capped).
+    elastic: on DeviceLost, degrade the Partitioning to the surviving
+    shards (stat_blocks pinned — records stay bitwise) instead of
+    retrying at full width.
+    redispatch_stragglers: escalate WindowWatchdog breaches into a
+    supervised re-dispatch of the offending block (one retry per
+    window).
+    inject: deterministic fault drill plan (runtime.fault.FailurePlan);
+    None in production.
+    """
+
+    ckpt_dir: str = "recovery"
+    cadence: int = 1
+    keep_last: int = 3
+    max_restarts: int = 8
+    backoff_base_s: float = 0.0
+    backoff_max_s: float = 30.0
+    elastic: bool = True
+    redispatch_stragglers: bool = False
+    inject: Optional[FailurePlan] = None
+
+    def validate(self) -> None:
+        if not self.ckpt_dir:
+            raise ValueError("Recovery.ckpt_dir must be a directory path")
+        if self.cadence < 1:
+            raise ValueError(
+                f"Recovery.cadence must be >= 1, got {self.cadence}")
+        if self.keep_last < 1:
+            raise ValueError(
+                f"Recovery.keep_last must be >= 1, got {self.keep_last}")
+        if self.max_restarts < 0:
+            raise ValueError(
+                f"Recovery.max_restarts must be >= 0, got "
+                f"{self.max_restarts}")
+        if self.backoff_base_s < 0 or self.backoff_max_s < 0:
+            raise ValueError("Recovery backoff times must be >= 0")
+        if self.inject is not None \
+                and not isinstance(self.inject, FailurePlan):
+            raise ValueError(
+                "Recovery.inject must be a runtime.fault.FailurePlan, "
+                f"got {type(self.inject).__name__}")
+
+
+class RunSupervisor:
+    """Owns one Experiment's engine lifecycle end to end (see module
+    docstring). `run()` returns the same SimulationResult handle
+    simulate() does, with `recovery_report()` populated."""
+
+    def __init__(self, experiment, recovery: Recovery, mesh=None):
+        recovery.validate()
+        self.experiment = experiment
+        self.recovery = recovery
+        self.mesh = mesh
+        self._part = experiment.partitioning
+        self._restarts = 0
+        self._events: list[dict] = []
+        self._stall_retried: set[int] = set()
+        self._injector = (
+            FailureInjector(recovery.inject,
+                            n_windows=experiment.schedule.n_windows)
+            if recovery.inject is not None else None)
+        # saves must land on superstep boundaries: round the cadence up
+        # to a multiple of window_block
+        wb = max(1, experiment.window_block)
+        self._cadence = ((max(recovery.cadence, wb) + wb - 1) // wb) * wb
+
+    # ------------------------------------------------------------- api
+    def run(self):
+        from repro.api.result import SimulationResult  # lazy: no cycle
+
+        rec = self.recovery
+        os.makedirs(rec.ckpt_dir, exist_ok=True)
+        t0 = time.perf_counter()
+        while True:
+            engine = self._build()
+            self._restore_newest_valid(engine)
+            try:
+                self._drive(engine)
+                break
+            except RecoverableError as e:
+                self._handle_fault(e)
+        # sinks attach only now, after the run succeeded: the record
+        # buffer replays into each exactly once, so a run that
+        # restarted five times still writes one CSV
+        for sink in self.experiment.sinks:
+            engine.stream.attach(sink)
+            for r in engine.stream.records():
+                sink(r)
+        engine.stream.close()
+        result = SimulationResult(self.experiment, engine)
+        result._wall_time = time.perf_counter() - t0
+        result._restarts = self._restarts
+        result._recovery = self.report()
+        return result
+
+    def report(self) -> dict:
+        """Recovery event log + summary counters."""
+        kinds: dict = {}
+        for ev in self._events:
+            if ev["event"] == "fault":
+                kinds[ev["kind"]] = kinds.get(ev["kind"], 0) + 1
+        return {
+            "restarts": self._restarts,
+            "faults_by_kind": kinds,
+            "final_n_shards": (self._part.n_shards
+                               if self._part is not None else None),
+            "events": list(self._events),
+        }
+
+    # ------------------------------------------------------ lifecycle
+    def _log(self, event: str, **detail) -> None:
+        self._events.append({"event": event, **detail})
+
+    def _build(self):
+        from repro.api.run import build_engine  # lazy: api imports us
+
+        exp = self.experiment.with_(sinks=(), recovery=None,
+                                    partitioning=self._part)
+        return build_engine(exp, mesh=self.mesh)
+
+    def _restore_newest_valid(self, engine) -> None:
+        """Restore the newest checkpoint that verifies, falling back
+        past corrupt/truncated files; a fresh window-0 start if none
+        survive."""
+        for w, path in reversed(
+                ckpt_store.list_checkpoints(self.recovery.ckpt_dir)):
+            try:
+                engine.restore(path)
+            except ckpt_store.CheckpointCorrupt as e:
+                self._log("corrupt_checkpoint_skipped", window=w,
+                          path=path, error=str(e))
+                continue
+            self._log("restored", window=w, path=path)
+            return
+        self._log("fresh_start")
+
+    def _drive(self, engine) -> None:
+        rec = self.recovery
+        n = len(engine.grid)
+        per_window = engine.cfg.window_block == 1 and engine._steer is None
+        if not ckpt_store.list_checkpoints(rec.ckpt_dir):
+            self._save(engine)  # window-0 anchor: a crash before the
+            #                     first cadence save still restores
+        while engine._window < n:
+            w = engine._window
+            next_save = min(n, (w // self._cadence + 1) * self._cadence)
+            if per_window:
+                self._inject(engine, w, w + 1)
+                engine.run_window()
+            else:
+                # pipelining stays on between saves (dispatch_limit
+                # stops the dispatch-ahead AT the save boundary, so the
+                # snapshot never flushes extra blocks into the file)
+                self._inject(engine, w, min(w + engine.cfg.window_block, n))
+                engine.run_block(dispatch_limit=next_save, pipeline=True)
+            self._check_stragglers(engine)
+            if engine._window >= next_save:
+                self._save(engine)
+
+    def _save(self, engine) -> None:
+        rec = self.recovery
+        path = os.path.join(rec.ckpt_dir,
+                            ckpt_store.checkpoint_name(engine._window))
+        engine.checkpoint(path)
+        pruned = ckpt_store.RetentionPolicy(rec.keep_last).apply(
+            rec.ckpt_dir)
+        self._log("checkpoint", window=engine._window, path=path,
+                  pruned=len(pruned))
+
+    def _handle_fault(self, e: RecoverableError) -> None:
+        rec = self.recovery
+        self._restarts += 1
+        self._log("fault", kind=e.kind, window=e.window,
+                  restart=self._restarts, error=str(e))
+        if self._restarts > rec.max_restarts:
+            raise RuntimeError(
+                f"run declared dead after {self._restarts} restarts "
+                f"(Recovery.max_restarts={rec.max_restarts}); last "
+                f"fault: {e}") from e
+        if isinstance(e, DeviceLost) and rec.elastic \
+                and self._part is not None and self._part.n_shards > 1:
+            n_inst = self.experiment.ensemble.n_instances
+            old = self._part.n_shards
+            self._part = self._part.degrade(n_inst, e.n_lost)
+            self._log("degraded", from_shards=old,
+                      to_shards=self._part.n_shards)
+        delay = min(rec.backoff_max_s,
+                    rec.backoff_base_s * (2 ** (self._restarts - 1)))
+        if delay > 0:
+            time.sleep(delay)
+
+    # ------------------------------------------------------ escalation
+    def _check_stragglers(self, engine) -> None:
+        if not self.recovery.redispatch_stragglers:
+            return
+        for w, wall, med in engine.watchdog.flagged:
+            if w in self._stall_retried:
+                continue
+            # one retry per window: replay is bitwise, so if the window
+            # is systematically slow the retry changes nothing and the
+            # run proceeds instead of looping
+            self._stall_retried.add(w)
+            raise EngineStall(
+                f"window {w} breached the straggler watchdog "
+                f"({wall:.4f}s vs rolling median {med:.4f}s); "
+                "re-dispatching its block from the last checkpoint",
+                window=w)
+
+    # ------------------------------------------------------- injection
+    def _inject(self, engine, w_lo: int, w_hi: int) -> None:
+        if self._injector is None:
+            return
+        for wi in range(w_lo, w_hi):
+            kind = self._injector.maybe_fail(wi)
+            if kind is None:
+                continue
+            self._log("fault_injected", window=wi, kind=kind)
+            if kind == "crash":
+                raise EngineCrash(f"injected crash before window {wi}",
+                                  window=wi)
+            if kind == "device_lost":
+                raise DeviceLost(
+                    f"injected device loss before window {wi}",
+                    window=wi, n_lost=1)
+            if kind == "ckpt_corrupt":
+                # corrupt the newest snapshot THEN crash: one fault
+                # deterministically exercises fallback-past-corrupt
+                self._corrupt_newest()
+                raise EngineCrash(
+                    f"injected crash (after checkpoint corruption) "
+                    f"before window {wi}", window=wi)
+            if kind == "stall":
+                raise EngineStall(
+                    f"injected stall at window {wi}; re-dispatching",
+                    window=wi)
+            if kind == "nan_pool":
+                # poison the pool and DON'T raise: the engine's own
+                # invariant guard must detect it (this drills the
+                # guard, not the injector)
+                self._poison_pool(engine)
+
+    def _corrupt_newest(self) -> None:
+        cks = ckpt_store.list_checkpoints(self.recovery.ckpt_dir)
+        if not cks:
+            return
+        path = cks[-1][1]
+        size = os.path.getsize(path)
+        # truncate rather than flip bytes: a byte flip can land in zip
+        # header padding and survive verification; a half-length file
+        # deterministically fails to load
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        self._log("checkpoint_corrupted", path=path)
+
+    def _poison_pool(self, engine) -> None:
+        from repro.core.gillespie import LaneState
+
+        arrs = {f: np.array(getattr(engine._pool, f))
+                for f in LaneState._fields}
+        arrs["x"][:] = np.nan  # float32 pool: NaN propagates to stats
+        import jax.numpy as jnp
+
+        engine._pool = engine._dispatch.place(LaneState(
+            **{f: jnp.asarray(v) for f, v in arrs.items()}))

@@ -1,0 +1,34 @@
+"""Training crash/restore drill (moved out of the simulator's fault
+runtime — it exercises the train loop, not the engine).
+
+Determinism contract: a restored run must produce the same losses as
+an uninterrupted run (asserted in tests/test_train.py), because the
+data pipeline is deterministic in the step index and optimizer state
+rides the checkpoint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime.fault import FailureInjector, FailurePlan
+
+
+def run_train_with_failures(make_state, train_step, batches, ckpt_dir: str,
+                            plan: FailurePlan, save_fn, restore_fn,
+                            ckpt_every: int = 2):
+    """Drill: training loop with crash/restore at step granularity."""
+    inj = FailureInjector(plan, n_windows=len(batches))
+    state = make_state()
+    save_fn(state, 0)
+    losses = {}
+    step = 0
+    while step < len(batches):
+        if inj.maybe_fail(step):
+            state, step = restore_fn()
+            continue
+        state, metrics = train_step(state, batches[step])
+        losses[step] = float(np.asarray(metrics["loss"]))
+        step += 1
+        if step % ckpt_every == 0:
+            save_fn(state, step)
+    return state, [losses[i] for i in range(len(batches))], inj.events

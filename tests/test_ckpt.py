@@ -39,7 +39,7 @@ def test_corruption_detected(tmp_path):
     p = store.save(t, str(tmp_path), 1)
     with open(os.path.join(p, "arrays.npz"), "ab") as f:
         f.write(b"junk")
-    with pytest.raises(AssertionError, match="corrupt"):
+    with pytest.raises(store.CheckpointCorrupt, match="checksum mismatch"):
         store.restore(t, str(tmp_path), 1)
 
 

@@ -1,0 +1,333 @@
+"""Fault drills for the self-healing supervisor (DESIGN.md §3h).
+
+The recovery contract under test: any injected fault sequence —
+crashes, corrupt checkpoints, device loss, stalls, NaN-poisoned pools
+— produces records, sketches, and steering decision logs BITWISE
+identical to the uninterrupted run. Trajectories are a pure function
+of (seed, counter-RNG state), and checkpoints carry the full pool +
+RNG counters + emitted records, so recovery replays rather than
+approximates.
+
+Sharded drills (device loss → elastic degradation) shell out with
+forced host devices, mirroring tests/test_sharded.py's harness.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    ExperimentError,
+    Method,
+    Recovery,
+    Reduction,
+    Schedule,
+    SketchSpec,
+    Steering,
+    simulate,
+)
+from repro.ckpt import store
+from repro.core.cwc.models import lotka_volterra
+from repro.runtime.fault import (
+    FAULT_KINDS,
+    EngineCrash,
+    FailureInjector,
+    FailurePlan,
+    InvariantViolation,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_WINDOWS = 8
+
+
+def make_exp(**kw):
+    kw.setdefault("record_trajectories", True)
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=16),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        reduction=Reduction.ENSEMBLE,
+        n_lanes=8, seed=7, **kw)
+
+
+def recovery(tmp_path, schedule, **kw):
+    kw.setdefault("cadence", 2)
+    kw.setdefault("keep_last", 2)
+    return Recovery(ckpt_dir=str(tmp_path / "rec"),
+                    inject=FailurePlan(schedule=schedule), **kw)
+
+
+def assert_bitwise(a, b, ctx=""):
+    assert len(a.records) == len(b.records), ctx
+    for ra, rb in zip(a.records, b.records):
+        assert ra.t == rb.t and ra.window == rb.window and ra.n == rb.n, ctx
+        assert (ra.mean == rb.mean).all(), ctx
+        assert (ra.var == rb.var).all(), ctx
+        assert (ra.ci90 == rb.ci90).all(), ctx
+
+
+# ----------------------------------------------------------- the bar
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("method", [Method.EXACT, Method.TAU_LEAP])
+@pytest.mark.parametrize("window_block", [1, 4])
+def test_drill_matrix_records_bitwise(tmp_path, use_kernel, method,
+                                      window_block):
+    """Crash + corrupt-newest-checkpoint drills across the execution
+    matrix: records identical to the uninterrupted run, bit for bit."""
+    base = simulate(make_exp(use_kernel=use_kernel, method=method,
+                             window_block=window_block))
+    got = simulate(make_exp(
+        use_kernel=use_kernel, method=method, window_block=window_block,
+        recovery=recovery(tmp_path, {2: "crash", 5: "ckpt_corrupt"})))
+    assert_bitwise(base, got, ctx=(use_kernel, method, window_block))
+    rep = got.recovery_report()
+    assert rep["restarts"] == 2
+    assert (base.trajectories() == got.trajectories()).all()
+
+
+def test_drill_sparse_engine_bitwise(tmp_path):
+    base = simulate(make_exp(sparse=True))
+    got = simulate(make_exp(
+        sparse=True, recovery=recovery(tmp_path, {3: "crash"})))
+    assert_bitwise(base, got)
+
+
+def test_drill_sketches_bitwise(tmp_path):
+    sk = SketchSpec(n_bins=8, lo=0.0, hi=600.0)
+    base = simulate(make_exp(window_block=4, sketch=sk))
+    got = simulate(make_exp(
+        window_block=4, sketch=sk,
+        recovery=recovery(tmp_path, {2: "crash", 5: "stall"})))
+    assert_bitwise(base, got)
+    for sa, sb in zip(base.sketches(), got.sketches()):
+        assert (sa.hist == sb.hist).all()
+
+
+def test_drill_steering_decision_log_bitwise(tmp_path):
+    st = Steering(ci_rel_tol=0.03, min_windows=4)
+    base = simulate(make_exp(steering=st))
+    got = simulate(make_exp(
+        steering=st, recovery=recovery(tmp_path, {3: "crash", 6: "crash"})))
+    assert_bitwise(base, got)
+    assert base.steering_report()["decisions"] \
+        == got.steering_report()["decisions"]
+
+
+def test_nan_pool_caught_by_engine_guard_and_recovered(tmp_path):
+    """The injector poisons the pool without raising; the engine's own
+    invariant guard must turn it into a typed recoverable fault."""
+    base = simulate(make_exp())
+    got = simulate(make_exp(
+        recovery=recovery(tmp_path, {4: "nan_pool"})))
+    assert_bitwise(base, got)
+    rep = got.recovery_report()
+    assert rep["faults_by_kind"].get("nan_pool", 0) >= 1
+
+
+# ------------------------------------------------- checkpoint hygiene
+def test_retention_keeps_last_k(tmp_path):
+    res = simulate(make_exp(recovery=recovery(tmp_path, {}, cadence=1,
+                                              keep_last=3)))
+    cks = store.list_checkpoints(str(tmp_path / "rec"))
+    assert len(cks) == 3
+    assert [w for w, _ in cks] == [6, 7, 8]
+    assert res.recovery_report()["restarts"] == 0
+
+
+def test_fallback_past_corrupt_checkpoint(tmp_path):
+    """ckpt_corrupt garbles the NEWEST snapshot then crashes; recovery
+    must fall back to the older one and still replay bitwise."""
+    base = simulate(make_exp())
+    got = simulate(make_exp(recovery=recovery(tmp_path,
+                                              {5: "ckpt_corrupt"})))
+    assert_bitwise(base, got)
+    skipped = [e for e in got.recovery_report()["events"]
+               if e["event"] == "corrupt_checkpoint_skipped"]
+    assert skipped, "expected the corrupt newest checkpoint to be skipped"
+
+
+def test_verify_rejects_truncated_and_garbage(tmp_path):
+    p = str(tmp_path / "c.npz")
+    store.save_atomic(p, {"x": np.arange(4.0)})
+    store.verify(p, required=("x",))  # round-trips clean
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.raises(store.CheckpointCorrupt) as ei:
+        store.verify(p)
+    assert p in str(ei.value)
+    g = str(tmp_path / "g.npz")
+    with open(g, "wb") as f:
+        f.write(b"not a zipfile at all")
+    with pytest.raises(store.CheckpointCorrupt, match="unreadable"):
+        store.verify(g)
+
+
+def test_verify_rejects_bitflip_and_missing_key(tmp_path):
+    p = str(tmp_path / "c.npz")
+    store.save_atomic(p, {"x": np.zeros(64, np.float32)})
+    with pytest.raises(store.CheckpointCorrupt, match="missing"):
+        store.verify(p, required=("x", "nope"))
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.seek(size // 2)
+        f.write(b"\xff\xff")
+    with pytest.raises(store.CheckpointCorrupt):
+        store.verify(p)
+
+
+def test_save_atomic_leaves_no_tmp_and_is_loadable(tmp_path):
+    p = str(tmp_path / "c.npz")
+    store.save_atomic(p, {"a": np.arange(3), "b": np.eye(2)})
+    assert os.listdir(tmp_path) == ["c.npz"]
+    z = store.verify(p, required=("a", "b"))
+    assert (z["a"] == np.arange(3)).all()
+
+
+# ----------------------------------------------------- typed surface
+def test_failure_plan_materialize_deterministic():
+    p = FailurePlan(schedule={2: "crash"}, seed=3, random_rate=0.5,
+                    random_kind="stall")
+    a, b = p.materialize(20), p.materialize(20)
+    assert a == b
+    assert a[2] == "crash"  # explicit entries win over random draws
+    assert any(k == "stall" for w, k in a.items() if w != 2)
+    assert p.materialize(20) != FailurePlan(
+        schedule={2: "crash"}, seed=4, random_rate=0.5,
+        random_kind="stall").materialize(20)
+
+
+def test_failure_plan_validates_kinds():
+    with pytest.raises(ValueError):
+        FailurePlan(schedule={1: "meteor"})
+    with pytest.raises(ValueError):
+        FailurePlan(random_rate=2.0)
+    for k in FAULT_KINDS:
+        FailurePlan(schedule={0: k})  # all documented kinds accepted
+
+
+def test_injector_is_one_shot_per_window():
+    inj = FailureInjector(FailurePlan(schedule={3: "crash"}))
+    assert inj.maybe_fail(3) == "crash"
+    assert inj.maybe_fail(3) is None  # replay after restart: no refire
+
+
+def test_max_restarts_declares_run_dead(tmp_path):
+    plan = {w: "crash" for w in range(N_WINDOWS)}
+    with pytest.raises(RuntimeError, match="declared dead"):
+        simulate(make_exp(recovery=recovery(tmp_path, plan,
+                                            max_restarts=2)))
+
+
+def test_recovery_rejects_conflicting_simulate_args(tmp_path):
+    exp = make_exp(recovery=Recovery(ckpt_dir=str(tmp_path / "rec")))
+    with pytest.raises(ExperimentError):
+        simulate(exp, max_windows=2)
+
+
+def test_engine_guard_raises_typed_invariant(tmp_path):
+    """Direct guard drill: NaN-poison the pool mid-run and step — the
+    engine raises InvariantViolation naming the check; with
+    SimConfig.guards off the same poison sails through."""
+    import dataclasses
+
+    from repro.api.run import build_engine
+    from repro.runtime.supervisor import RunSupervisor
+
+    eng = build_engine(make_exp())
+    eng.run_window()
+    sup_exp = make_exp(recovery=Recovery(ckpt_dir=str(tmp_path / "x")))
+    RunSupervisor(sup_exp, sup_exp.recovery)._poison_pool(eng)
+    with pytest.raises(InvariantViolation, match="non_finite_stats"):
+        eng.run_window()
+    eng2 = build_engine(make_exp())
+    eng2.cfg = dataclasses.replace(eng2.cfg, guards=False)
+    eng2.run_window()
+    RunSupervisor(sup_exp, sup_exp.recovery)._poison_pool(eng2)
+    eng2.run_window()  # no guard, no raise
+
+
+def test_recoverable_errors_are_typed():
+    e = EngineCrash("boom", window=5)
+    assert e.kind == "crash" and e.window == 5
+    assert isinstance(e, Exception)
+
+
+# --------------------------------------------------- sharded drills
+_EXP = """
+import numpy as np
+from repro.api import (Ensemble, Experiment, FailurePlan, Partitioning,
+                       Recovery, Reduction, Schedule, simulate)
+from repro.core.cwc.models import lotka_volterra
+
+def make_exp(**kw):
+    kw.setdefault("record_trajectories", True)
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=16),
+        schedule=Schedule(t_end=1.0, n_windows=8, schema="iii"),
+        reduction=Reduction.ENSEMBLE,
+        n_lanes=8, seed=7, **kw)
+
+def assert_bitwise(a, b):
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert (ra.mean == rb.mean).all() and (ra.var == rb.var).all()
+        assert (ra.ci90 == rb.ci90).all()
+"""
+
+
+def _run(body: str, devices: int = 4) -> str:
+    snippet = _EXP + textwrap.dedent(body) + '\nprint("SNIPPET-RAN")\n'
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", snippet],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SNIPPET-RAN" in out.stdout, (
+        "test body did not execute — harness regression")
+    return out.stdout
+
+
+def test_shard_loss_degrades_and_stays_bitwise(tmp_path):
+    """Two device-loss faults on a 4-shard farm: the supervisor
+    degrades 4 → 2 → 1 shards (stat_blocks pinned) and the final
+    records match the clean 4-shard run bitwise."""
+    out = _run(f"""
+    part = Partitioning(n_shards=4, stat_blocks=4)
+    base = simulate(make_exp(partitioning=part))
+    rec = Recovery(ckpt_dir={str(tmp_path / 'rec')!r}, cadence=2,
+                   inject=FailurePlan(schedule={{3: "device_lost",
+                                                 6: "device_lost"}}))
+    got = simulate(make_exp(partitioning=part, recovery=rec))
+    assert_bitwise(base, got)
+    rep = got.recovery_report()
+    assert rep["restarts"] == 2
+    assert rep["final_n_shards"] == 1
+    shrinks = [(e["from_shards"], e["to_shards"])
+               for e in rep["events"] if e["event"] == "degraded"]
+    assert shrinks == [(4, 2), (2, 1)]
+    print("DEGRADE-OK")
+    """)
+    assert "DEGRADE-OK" in out
+
+
+def test_sharded_crash_drill_with_window_block(tmp_path):
+    out = _run(f"""
+    part = Partitioning(n_shards=4, stat_blocks=4)
+    base = simulate(make_exp(partitioning=part, window_block=4))
+    rec = Recovery(ckpt_dir={str(tmp_path / 'rec')!r}, cadence=4,
+                   inject=FailurePlan(schedule={{5: "crash"}}))
+    got = simulate(make_exp(partitioning=part, window_block=4,
+                            recovery=rec))
+    assert_bitwise(base, got)
+    assert got.recovery_report()["restarts"] == 1
+    print("WB-CRASH-OK")
+    """)
+    assert "WB-CRASH-OK" in out

@@ -11,7 +11,8 @@ from repro.configs.base import OptimizerConfig, ShardingConfig
 from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import synth_batch
 from repro.models import build_model
-from repro.runtime.fault import FailurePlan, run_train_with_failures
+from repro.runtime.fault import FailurePlan
+from repro.train.drill import run_train_with_failures
 from repro.sharding.rules import smoke_topology
 from repro.train.optim import init_opt_state
 from repro.train.step import make_train_step
