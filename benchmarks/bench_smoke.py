@@ -1,7 +1,7 @@
-"""Small-scale benchmark smoke run -> BENCH_PR6.json (the perf
-trajectory's superstep + steering point).
+"""Small-scale benchmark smoke run -> BENCH_PR9.json (the perf
+trajectory's superstep + steering + pipeline-depth point).
 
-Four sections, all CI-sized and deterministic:
+Five sections, all CI-sized and deterministic:
 
 * `window_step_path` — host_loop vs window_step vs Pallas kernel, now
   each non-baseline path also at `window_block=4` (supersteps: 4
@@ -14,6 +14,9 @@ Four sections, all CI-sized and deterministic:
   Tolerance: none (ratio <= 1.0); the win is structural (3 of every 4
   host round-trips removed), ~1.4x speedup observed (superstep/
   baseline wall ratio ~0.7), so a flake here is a real regression.
+  Both gated rows are measured min-of-3 (GATE_REPS): the steady
+  region is only ~8 windows, and a single-shot wall under runner load
+  swings enough to trip the gate on noise alone.
 * `sharded_farm` — 1/2-shard subprocesses x kernel x window_block,
   asserting ONE records digest across every combination AND that it
   equals the digest BENCH_PR3.json recorded for this exact config —
@@ -21,6 +24,13 @@ Four sections, all CI-sized and deterministic:
 * `tau_wall_clock` — the birth-death wall-clock speedup of tau-leaping
   over exact SSA (stat_smoke's gated section; BENCH_PR4 recorded only
   the step-count ratio).
+* `pipeline_depth` — the PR9 depth-K collector sweep
+  (profile_pipeline): a dispatch-vs-collect probe resolves the "auto"
+  depth, then end-to-end walls (min of 3) at depth 1 / 2 / chosen on a
+  collect-heavy workload (trajectories + a checkpoint per collected
+  block). GATES: every depth bitwise the depth-1 run; every cadence
+  save served from a ring snapshot (zero pipeline flushes); the chosen
+  depth's wall <= 1.05x the depth-1 wall.
 * `early_stop` — the steering savings row (steering_smoke): on a
   mixed-variance immigration-death sweep, convergence early-stopping
   must simulate >= 1.2x fewer point-windows than the unsteered run
@@ -40,6 +50,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 
 from benchmarks import (  # noqa: E402
+    profile_pipeline,
     sharded_farm,
     stat_smoke,
     steering_smoke,
@@ -56,14 +67,27 @@ SHARD_COUNTS = (1, 2)
 # (path, window_block) rows; host_loop stays the per-window baseline
 ROWS = (("host_loop", 1), ("window_step", 1), ("kernel", 1),
         ("window_step", WINDOW_BLOCK), ("kernel", WINDOW_BLOCK))
+# the two rows the wall-clock gate compares get min-of-3 steady walls:
+# the steady region is only ~8 windows of wall, so a single-shot
+# measure under runner load can swing 2-3x and trip the gate on noise
+# while the structural comparison (host round trips removed) is about
+# best-case walls, which min-of-N recovers
+GATE_ROWS = {("window_step", 1), ("window_step", WINDOW_BLOCK)}
+GATE_REPS = 3
 
 
 def window_section():
     paths, results = {}, {}
     for path, wb in ROWS:
-        result, m = window_step_path.run_path(
-            path, N_INSTANCES, N_LANES, n_windows=N_WINDOWS,
-            window_block=wb)
+        best = None
+        for _ in range(GATE_REPS if (path, wb) in GATE_ROWS else 1):
+            result, m = window_step_path.run_path(
+                path, N_INSTANCES, N_LANES, n_windows=N_WINDOWS,
+                window_block=wb)
+            if best is None \
+                    or m["wall_per_window_ms"] < best["wall_per_window_ms"]:
+                best = m
+        m = best
         key = path if wb == 1 else f"{path},window_block={wb}"
         results[key] = result
         paths[key] = {
@@ -149,9 +173,10 @@ def farm_section():
 
 def main() -> None:
     out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        REPO, "BENCH_PR6.json")
+        REPO, "BENCH_PR9.json")
     paths = window_section()
     farm = farm_section()
+    pipeline = profile_pipeline.pipeline_section()
     early_stop = steering_smoke.early_stop_section()
     bd = stat_smoke.birth_death_section()
     tau_wall = {
@@ -161,7 +186,7 @@ def main() -> None:
         "wall_speedup_tau_vs_exact": bd["wall_speedup_tau_vs_exact"],
     }
     doc = {
-        "pr": 6,
+        "pr": 9,
         "generated_by": "benchmarks/bench_smoke.py",
         "config": {
             "wall_measure": (
@@ -184,6 +209,19 @@ def main() -> None:
                     "digest (pinned to the BENCH_PR3 baseline) and "
                     "the dispatch/sync profile — the gated wall "
                     "comparison lives in window_step_path")},
+            "pipeline_depth": {
+                "instances": profile_pipeline.REPLICAS,
+                "lanes": profile_pipeline.N_LANES,
+                "windows": profile_pipeline.N_WINDOWS,
+                "window_block": profile_pipeline.WINDOW_BLOCK,
+                "gate_tolerance": profile_pipeline.GATE_TOL,
+                "wall_note": (
+                    "min-of-3 END-TO-END walls including engine build "
+                    "and jit compile (identical per row); the probe's "
+                    "first-block dispatch wall also includes compile, "
+                    "so its collect/dispatch ratio UNDERSTATES the "
+                    "steady-state collect share and the auto depth "
+                    "resolves conservatively (clamped to >= 2)")},
             "tau_wall_clock": {
                 "model": "birth_death", "replicas": stat_smoke.REPLICAS,
                 "lanes": stat_smoke.N_LANES,
@@ -202,6 +240,7 @@ def main() -> None:
         },
         "window_step_path": paths,
         "sharded_farm": farm,
+        "pipeline_depth": pipeline,
         "tau_wall_clock": tau_wall,
         "early_stop": early_stop,
         "invariants": {
@@ -210,6 +249,9 @@ def main() -> None:
             "superstep_dispatches_per_window_le_0p25": True,
             "superstep_host_syncs_per_window_lt_1": True,
             "superstep_wall_beats_per_window_baseline": True,
+            "depth_k_records_and_trajectories_bitwise": True,
+            "cadence_saves_zero_pipeline_flushes": True,
+            "chosen_depth_wall_le_depth1_x1p05": True,
             "tau_leap_wall_speedup_birth_death_ge_1p2x": True,
             "early_stop_point_windows_saved_ge_1p2x": True,
             "early_stop_final_means_within_3_sigma": True,

@@ -1,0 +1,143 @@
+"""Pipeline-depth probe + sweep (PR9: the depth-K superstep collector).
+
+Two measurements on one collect-heavy workload (trajectory recording +
+a cadenced checkpoint after every collected block — the host work the
+pipeline exists to hide):
+
+* PROBE — a `pipeline_depth="auto"` run times the first block's
+  dispatch-wall (enqueue only) against its collect-wall (blocking ring
+  pull + host reduce/emit/save) and resolves the depth the engine will
+  use: `1 + ceil(collect / dispatch)`, clamped to [2, 8]. The ratio is
+  the quantity that decides whether depth > 1 can pay at all: depth K
+  hides up to (K-1) block-collects behind device compute, so with
+  collect/dispatch <= K-1 the collect cost vanishes from the critical
+  path.
+* SWEEP + GATE — end-to-end walls (min of 3, compile included equally
+  in every row) at depth 1, 2, and the probe's chosen depth. The gate
+  is intentionally one-sided: the CHOSEN depth must not LOSE to the
+  depth-1 collector (wall[chosen] <= wall[1] * 1.05; the 5% absorbs
+  runner wall noise, same slack precedent as the tau-leap gate). On
+  hosts where collect work is small relative to device compute the win
+  is small — the gate proves depth-K is safe to leave on, the probe
+  ratio documents the headroom.
+
+Structural asserts ride the sweep: every depth's records AND
+trajectories are bitwise the depth-1 run's, every cadence save was
+served from a ring snapshot (zero pipeline flushes), and the telemetry
+reports the resolved depth and a peak in-flight count that actually
+reached it.
+
+  PYTHONPATH=src python benchmarks/profile_pipeline.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.api import Ensemble, Experiment, Schedule, simulate  # noqa: E402
+from repro.core.cwc.models import lotka_volterra  # noqa: E402
+
+REPLICAS, N_LANES, N_WINDOWS = 128, 16, 12
+WINDOW_BLOCK = 2  # 6 blocks: enough collects for depth 4 to matter
+N_REPS = 3
+GATE_TOL = 1.05  # runner wall noise allowance (tau-gate precedent)
+
+
+def make_exp(depth):
+    return Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=REPLICAS),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        record_trajectories=True,
+        n_lanes=N_LANES, seed=7, window_block=WINDOW_BLOCK,
+        pipeline_depth=depth)
+
+
+def _run(depth, ckpt_path):
+    t0 = time.perf_counter()
+    res = simulate(make_exp(depth), checkpoint_path=ckpt_path)
+    return res, time.perf_counter() - t0
+
+
+def pipeline_section() -> dict:
+    tmp = tempfile.mkdtemp(prefix="bench_pr9_")
+    # ---- probe: what does the first block's dispatch/collect split say?
+    probe_res = simulate(make_exp("auto"))
+    probe = dict(probe_res._engine.depth_probe)
+    chosen = probe["depth"]
+    print(f"profile_pipeline/probe: dispatch {probe['dispatch_s']*1e3:.2f}ms"
+          f" collect {(probe['pull_s'] + probe['host_s'])*1e3:.2f}ms"
+          f" ratio {probe['collect_dispatch_ratio']:.2f}"
+          f" -> auto depth {chosen}")
+
+    # ---- sweep: min-of-N end-to-end walls per depth, bitwise-checked
+    depths = sorted({1, 2, chosen})
+    walls, rows, results = {}, {}, {}
+    for d in depths:
+        best = float("inf")
+        for rep in range(N_REPS):
+            ck = os.path.join(tmp, f"ck_d{d}_r{rep}")
+            res, wall = _run(d, ck)
+            best = min(best, wall)
+            results[d] = res
+        t = results[d].telemetry
+        n_blocks = N_WINDOWS // WINDOW_BLOCK
+        assert t.pipeline_depth == d, (d, t.pipeline_depth)
+        assert t.ckpt_flushes == 0, (
+            f"depth {d}: {t.ckpt_flushes} cadence saves flushed the "
+            "pipeline — snapshot serving regressed")
+        assert t.snapshot_saves > 0, f"depth {d}: no snapshot saves"
+        assert t.peak_inflight_blocks >= min(d, n_blocks), (d, t)
+        assert t.peak_inflight_blocks <= min(d + 1, n_blocks), (d, t)
+        walls[d] = best
+        rows[f"depth={d}"] = {
+            "wall_s_min_of_3": round(best, 4),
+            "snapshot_saves": t.snapshot_saves,
+            "ckpt_flushes": t.ckpt_flushes,
+            "peak_inflight_blocks": t.peak_inflight_blocks,
+        }
+        print(f"profile_pipeline/depth={d}: {rows[f'depth={d}']}")
+
+    base = results[1]
+    for d in depths[1:]:
+        got = results[d]
+        assert (base.means() == got.means()).all(), (
+            f"depth {d} records diverged from depth 1")
+        assert (base.trajectories() == got.trajectories()).all(), (
+            f"depth {d} trajectories diverged from depth 1")
+
+    # ---- the gate: the auto-chosen depth must not lose to depth 1
+    ratio = walls[chosen] / walls[1]
+    print(f"#  pipeline wall depth1 {walls[1]*1e3:.1f}ms -> "
+          f"depth{chosen} {walls[chosen]*1e3:.1f}ms "
+          f"({walls[1] / max(walls[chosen], 1e-9):.2f}x)")
+    assert walls[chosen] <= walls[1] * GATE_TOL, (
+        f"auto-chosen depth {chosen} wall {walls[chosen]:.3f}s exceeds "
+        f"depth-1 wall {walls[1]:.3f}s x {GATE_TOL} — deeper pipelining "
+        "must never cost wall time on a collect-heavy workload")
+    return {
+        "probe": {k: (round(v, 6) if isinstance(v, float) else v)
+                  for k, v in probe.items()},
+        "sweep": rows,
+        "chosen_depth": chosen,
+        "chosen_over_depth1_wall_ratio": round(ratio, 4),
+        "gate_tolerance": GATE_TOL,
+    }
+
+
+def main() -> None:
+    section = pipeline_section()
+    import json
+
+    print(json.dumps(section, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,24 @@ class Telemetry:
     the per-method work metric the tau-leap speedup claim is measured
     in. leaps_per_window: accepted tau-leaps per window (all zero on
     Method.EXACT); steps - leaps is the exact-fallback share.
+
+    WALL ATTRIBUTION (block_walls): under pipelined dispatch the only
+    well-defined host walls are block-level, and they split in two:
+    * DISPATCH-WALL — host time to ENQUEUE a unit's device work (build
+      operands, launch the async dispatch, queue the eager folds). It
+      deliberately EXCLUDES device compute, which proceeds
+      asynchronously underneath later enqueues.
+    * COLLECT-WALL — the blocking record-ring pull (device wait +
+      transfer remainder after the async prefetch) PLUS the host-side
+      reduce/emit work for the unit. This is the wall the pipeline
+      depth exists to hide: at depth K the collector blocks only once
+      K blocks are queued behind the oldest.
+    Each block_walls row is (first_window, n_windows, dispatch_s,
+    collect_s) — one row per window on per-window paths (where
+    window-level walls ARE measurable), one per block under
+    supersteps. window_wall_times remains the legacy per-window share
+    (block dispatch+pull wall / n_windows) for dashboards that want a
+    per-window series.
     """
 
     wall_time_s: float
@@ -53,14 +71,25 @@ class Telemetry:
     leaps_per_window: tuple = ()
     # straggler watchdog (runtime/straggler.py): (window, wall_s,
     # rolling_median) entries whose wall share exceeded the watchdog
-    # factor x the rolling median, and the flagged fraction over the
-    # watchdog's observation history
+    # factor x the rolling median, and the flagged fraction over ALL
+    # observed windows (a monotone counter — NOT the bounded median
+    # window, which saturates at its maxlen)
     straggler_windows: tuple = ()
     straggler_rate: float = 0.0
     # supervised runs (Experiment.recovery): engine teardown+restore
     # cycles the RunSupervisor performed; 0 for unsupervised runs and
     # for supervised runs that never faulted
     restarts: int = 0
+    # straggler re-dispatches the supervisor performed (EngineStall
+    # recoveries) — tracked apart from `restarts` so slow windows never
+    # consume the crash budget
+    stall_redispatches: int = 0
+    # depth-K superstep pipeline (DESIGN.md §3e)
+    block_walls: tuple = ()  # (w0, n_win, dispatch_s, collect_s) rows
+    pipeline_depth: int = 1  # resolved depth ("auto" probes 1st block)
+    peak_inflight_blocks: int = 0  # max queued rings observed
+    snapshot_saves: int = 0  # checkpoints served from a ring snapshot
+    ckpt_flushes: int = 0  # checkpoints that had to flush the pipeline
 
 
 def _peak_rss_bytes() -> Optional[int]:
@@ -89,15 +118,15 @@ class SimulationResult:
         path is given. Returns self for chaining.
 
         With `window_block > 1` the run advances in pipelined
-        supersteps: block k+1 is dispatched before block k's record
-        ring is pulled, so host-side reduction and sinks overlap device
-        simulation. A `checkpoint_path` saves after EVERY block, on
-        that block's boundary — which disables the dispatch-ahead (a
-        save must not flush the next block's windows into the file), so
-        prefer checkpointing at a coarser cadence than every block when
-        throughput matters. `max_windows` may cut the final block
-        short — such a mid-block checkpoint can only be resumed with a
-        window_block dividing its window index."""
+        supersteps: up to `pipeline_depth` blocks are dispatched ahead
+        of the oldest ring pull, so host-side reduction and sinks
+        overlap device simulation. A `checkpoint_path` saves after
+        every collected block, on that block's boundary — served from
+        the in-flight ring's entry SNAPSHOT (engine.enable_snapshots),
+        so saving no longer disables the dispatch-ahead or flushes the
+        pipeline. `max_windows` may cut the final block short — such a
+        mid-block checkpoint can only be resumed with a window_block
+        dividing its window index."""
         eng = self._engine
         t0 = time.perf_counter()
         done = 0
@@ -114,12 +143,14 @@ class SimulationResult:
             else:
                 limit = len(eng.grid) if max_windows is None else min(
                     len(eng.grid), eng._window + max_windows)
+                if checkpoint_path and eng._steer is None:
+                    # each save lands on the just-collected block's
+                    # boundary, served from the oldest in-flight ring's
+                    # entry snapshot — the pipeline keeps running
+                    # underneath (steered runs are lock-step anyway)
+                    eng.enable_snapshots()
                 while eng._window < limit:
-                    # checkpointing disables the dispatch-ahead so each
-                    # save lands on the just-collected block's boundary
-                    # (instead of flushing the next block too)
-                    got = eng.run_block(dispatch_limit=limit,
-                                        pipeline=not checkpoint_path)
+                    got = eng.run_block(dispatch_limit=limit)
                     if checkpoint_path and got:
                         eng.checkpoint(checkpoint_path)
                 eng.flush()
@@ -224,7 +255,13 @@ class SimulationResult:
             leaps_per_window=tuple(eng.window_leaps),
             straggler_windows=tuple(eng.watchdog.flagged),
             straggler_rate=eng.watchdog.straggler_rate(),
-            restarts=getattr(self, "_restarts", 0))
+            restarts=getattr(self, "_restarts", 0),
+            stall_redispatches=getattr(self, "_stall_redispatches", 0),
+            block_walls=tuple(eng.block_walls),
+            pipeline_depth=eng.pipeline_depth,
+            peak_inflight_blocks=eng.peak_inflight_blocks,
+            snapshot_saves=eng.n_snapshot_saves,
+            ckpt_flushes=eng.n_ckpt_flushes)
 
     def __repr__(self) -> str:
         state = "completed" if self.completed else (

@@ -55,6 +55,7 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         tau_eps=experiment.tau_eps,
         tau_fallback=experiment.tau_fallback,
         window_block=experiment.window_block,
+        pipeline_depth=experiment.pipeline_depth,
         sparse=experiment.sparse)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)

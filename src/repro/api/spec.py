@@ -230,9 +230,20 @@ class Experiment:
     1/window_block per window (DESIGN.md §3e). Records are bitwise
     identical for any value; composes with use_kernel, partitioning,
     and method, but not host_loop (the per-window baseline). With a
-    checkpoint_path, saves land on block boundaries (a save forces the
-    in-flight block to be collected first), and resuming needs a
-    checkpoint on a window_block boundary.
+    checkpoint_path, saves land on block boundaries (served from the
+    in-flight ring's entry snapshot — the pipeline keeps running), and
+    resuming needs a checkpoint on a window_block boundary.
+    pipeline_depth: how many dispatched window blocks may stay in
+    flight before the collector blocks on the oldest ring (DESIGN.md
+    §3e). 1 (default) is the classic double-buffer; K > 1 hides the
+    collector's host-side reduce/emit work behind K blocks of device
+    compute; "auto" profiles the first collected block (blocking-pull
+    wall vs host-reduce wall) and picks a depth from that ratio. Depth
+    only changes WHEN rings are pulled — records, sketches, grouped
+    stats, trajectories, and steering decisions are bitwise identical
+    for any value. Each in-flight block buffers a full record ring
+    (Telemetry.peak_buffered_bytes accounts for all of them).
+    Irrelevant when window_block == 1 or under host_loop.
     sketch: stream device-side per-window sketches (fixed-bin
     histograms, rare-event counters — repro/stats, DESIGN.md §3f)
     alongside the Welford records; read them back via
@@ -282,6 +293,7 @@ class Experiment:
     tau_eps: float = 0.03
     tau_fallback: float = 10.0
     window_block: int = 1
+    pipeline_depth: Union[int, str] = 1
     sparse: bool = False
     sketch: Optional[SketchSpec] = None
     steering: Optional[Steering] = None
@@ -334,6 +346,16 @@ class Experiment:
                 "window_block > 1 needs the fused or sharded dispatch "
                 "strategy; host_loop is the per-window round-trip "
                 "baseline (set window_block=1)")
+        if isinstance(self.pipeline_depth, str):
+            if self.pipeline_depth != "auto":
+                raise ExperimentError(
+                    f"Experiment.pipeline_depth must be an int >= 1 or "
+                    f"'auto', got {self.pipeline_depth!r}")
+        elif (not isinstance(self.pipeline_depth, int)
+                or self.pipeline_depth < 1):
+            raise ExperimentError(
+                f"Experiment.pipeline_depth must be an int >= 1 or "
+                f"'auto', got {self.pipeline_depth!r}")
         # method itself needs no check here: __post_init__ coerced it
         # (or raised ExperimentError) at construction
         if not self.tau_eps > 0:

@@ -88,6 +88,19 @@ def save_atomic(path: str, arrays: dict) -> str:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+        # make the RENAME durable too: fsync'ing the file covers its
+        # bytes, but the directory entry lives in the directory — a
+        # power cut after replace() can otherwise resurface the old
+        # file (or nothing) at `path`. Snapshot-served cadence saves
+        # make checkpoints frequent and cheap, so recovery now leans on
+        # the newest file actually existing after a crash.
+        dfd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        except OSError:
+            pass  # some filesystems reject directory fsync; best effort
+        finally:
+            os.close(dfd)
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)

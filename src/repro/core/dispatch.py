@@ -450,6 +450,35 @@ class FusedDispatch(_Dispatch):
         body = self._body
         kernel = self._kernel
         predictive = self.eng.scheduler.policy == "predictive"
+        # in-scan predictive regroup: the cost EMA rides the scan carry
+        # (float32 device copy of the scheduler's EMA) and every window
+        # re-sorts groups from it — per-window regrouping with ZERO
+        # host round trips, where the host-perm form could only regroup
+        # at block boundaries. Grouping is execution packaging, never
+        # semantics (per-lane ops are independent, padding duplicates
+        # write identical data), so records stay bitwise identical to
+        # the host-perm path; steps_d still rides the ring so the host
+        # EMA (the canonical float64 copy) updates at collect time
+        # exactly as before. The kernel body has no grouping at all.
+        in_scan = predictive and not kernel
+        if in_scan:
+            take_pos = jnp.asarray(self.eng.scheduler.take_positions())
+            alpha = self.eng.scheduler.ema_alpha
+
+            def cost_block_body(pool, rates, cost, horizons):
+                def step(carry, h):
+                    p, c = carry
+                    perm = jnp.argsort(c, stable=True)[take_pos]
+                    new_pool, obs, steps_d = body(p, rates, perm, h)
+                    new_c = (1 - alpha) * c + \
+                        alpha * steps_d.astype(c.dtype)
+                    ring = (obs, new_pool.steps.sum(),
+                            new_pool.leaps.sum(), jnp.int32(0), steps_d)
+                    return (new_pool, new_c), ring
+
+                return jax.lax.scan(step, (pool, cost), horizons)
+
+            return jax.jit(cost_block_body, donate_argnums=(0, 2))
 
         def block_body(pool, rates, perm, horizons):
             def step(p, h):
@@ -472,10 +501,15 @@ class FusedDispatch(_Dispatch):
         if self._block_step is None:
             self._block_step = self._build_block()
         predictive = eng.scheduler.policy == "predictive"
-        perm = None if self._kernel else eng._permutation()
-        eng._pool, ring = self._block_step(
-            eng._pool, eng._rates_dev, perm, jnp.asarray(
-                horizons, jnp.float32))
+        in_scan = predictive and not self._kernel
+        hvec = jnp.asarray(horizons, jnp.float32)
+        if in_scan:
+            (eng._pool, eng._cost_dev), ring = self._block_step(
+                eng._pool, eng._rates_dev, eng._cost_device(), hvec)
+        else:
+            perm = None if self._kernel else eng._permutation()
+            eng._pool, ring = self._block_step(
+                eng._pool, eng._rates_dev, perm, hvec)
         eng.n_dispatches += 1
         obs, steps_end, leaps_end, trunc = ring[:4]
         return BlockResult(
@@ -636,6 +670,14 @@ class ShardedDispatch(_Dispatch):
         n_groups = eng._n_groups if grouped else 0
         use_kernel = eng.cfg.use_kernel
         predictive = eng.scheduler.policy == "predictive"
+        # in-scan predictive regroup (see FusedDispatch._build_block):
+        # the shard-LOCAL cost slice rides the scan carry and each
+        # window re-sorts within the shard — the same shard-locality
+        # the host groups() enforces, with zero host round trips.
+        # take_positions() replicates the host padding rule, and its
+        # positions are shard-local, so argsort output needs no
+        # global->local shift
+        in_scan = predictive and not use_kernel
         sk = eng._sketch
         idx_t, coef_t, delta_t, _ = eng._tensors_base
         if use_kernel:
@@ -645,15 +687,24 @@ class ShardedDispatch(_Dispatch):
         else:
             body = make_window_body(eng._make_advance_fn(),
                                     eng.scheduler.n_lanes, eng.obs_idx)
+        if in_scan:
+            take_pos = jnp.asarray(eng.scheduler.take_positions())
+            alpha = eng.scheduler.ema_alpha
 
-        def local(pool, rates, perm, gids, horizons):
-            def step(p, h):
+        def local(pool, rates, pc, gids, horizons):
+            # `pc` is the third operand: the global permutation for the
+            # host-perm form, the shard-local cost slice when in_scan
+            def step(carry, h):
+                p, c = carry if in_scan else (carry, None)
                 if use_kernel:
                     new_pool, obs, steps_d, trunc = kbody(p, rates, h)
                     trunc = jax.lax.psum(trunc.astype(jnp.int32), axis)
                 else:
-                    k = jax.lax.axis_index(axis)
-                    perm_loc = perm - k * per_shard
+                    if in_scan:
+                        perm_loc = jnp.argsort(c, stable=True)[take_pos]
+                    else:
+                        k = jax.lax.axis_index(axis)
+                        perm_loc = pc - k * per_shard
                     new_pool, obs, steps_d = body(p, rates, perm_loc, h)
                     trunc = jnp.int32(0)
                 acc = reduction.blocked_welford(obs, v_loc)
@@ -682,9 +733,14 @@ class ShardedDispatch(_Dispatch):
                         ring = ring + (jax.lax.psum(rare, axis),)
                 if predictive:
                     ring = ring + (steps_d,)
+                if in_scan:
+                    new_c = (1 - alpha) * c + \
+                        alpha * steps_d.astype(c.dtype)
+                    return (new_pool, new_c), ring
                 return new_pool, ring
 
-            return jax.lax.scan(step, pool, horizons)
+            init = (pool, pc) if in_scan else pool
+            return jax.lax.scan(step, init, horizons)
 
         sh = P(axis)
         rsh = P(None, axis)  # (W, I_loc, ...) rings: windows leading
@@ -696,7 +752,7 @@ class ShardedDispatch(_Dispatch):
                                                      else 0))
         if predictive:
             ring_specs = ring_specs + (rsh,)
-        out_specs = (sh, ring_specs)
+        out_specs = (((sh, sh) if in_scan else sh), ring_specs)
         if use_kernel and grouped:
             def wrapped(pool, rates, gids, horizons):
                 return local(pool, rates, None, gids, horizons)
@@ -711,29 +767,37 @@ class ShardedDispatch(_Dispatch):
             wrapped = local
             in_specs = (sh, sh, sh, sh, P())
         else:
-            def wrapped(pool, rates, perm, horizons):
-                return local(pool, rates, perm, None, horizons)
+            def wrapped(pool, rates, pc, horizons):
+                return local(pool, rates, pc, None, horizons)
 
             in_specs = (sh, sh, sh, P())
         fn = compat.shard_map(wrapped, mesh=self.mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)
-        return jax.jit(fn, donate_argnums=(0,))
+        return jax.jit(fn, donate_argnums=((0, 2) if in_scan else (0,)))
 
     def advance_block(self, horizons) -> BlockResult:
         eng = self.eng
         grouped = eng._group_ids_dev is not None
         predictive = eng.scheduler.policy == "predictive"
+        in_scan = predictive and not eng.cfg.use_kernel
         key = (grouped, eng._n_groups if grouped else 0)
         if self._block_step is None or self._block_key != key:
             self._block_step = self._build_block(grouped)
             self._block_key = key
         step_args = [eng._pool, eng._rates_dev]
         if not eng.cfg.use_kernel:
-            step_args.append(eng._permutation())
+            # third operand: shard-local cost carry (in-scan regroup)
+            # or the host-assembled global permutation
+            step_args.append(eng._cost_device() if in_scan
+                             else eng._permutation())
         if grouped:
             step_args.append(eng._group_ids_dev)
-        eng._pool, ring = self._block_step(
+        carry, ring = self._block_step(
             *step_args, jnp.asarray(horizons, jnp.float32))
+        if in_scan:
+            eng._pool, eng._cost_dev = carry
+        else:
+            eng._pool = carry
         eng.n_dispatches += 1
         obs, trunc, stack, steps_end, leaps_end = ring[:5]
         i = 5

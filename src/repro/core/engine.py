@@ -22,9 +22,13 @@ are bit-identical because every per-lane operation is unchanged.
 With `SimConfig.window_block=W` whole runs go device-resident:
 W windows fuse into ONE dispatch (a lax.scan inside the strategy) whose
 per-window products land in an on-device record ring, and the engine's
-depth-1 pipelined collector dispatches block k+1 before blocking on
-block k's ring pull — so dispatches AND host syncs amortise to 1/W per
-window while records stay bitwise identical (DESIGN.md §3e).
+depth-K pipelined collector (`SimConfig.pipeline_depth`, "auto" to
+profile) keeps up to K blocks in flight before blocking on the oldest
+ring pull — so dispatches AND host syncs amortise to 1/W per window,
+the collector's host work hides behind K blocks of device compute, and
+records stay bitwise identical for any W and any K (DESIGN.md §3e).
+Ring snapshots (`enable_snapshots`) let checkpoint() save the collected
+frontier while blocks stay in flight instead of flushing the pipeline.
 
 Distribution: with a `Partitioning` (or a mesh), the instance pool is
 sharded over the mesh's data axis (each shard = a farm worker); the
@@ -47,11 +51,12 @@ shim over the same engine.
 from __future__ import annotations
 
 import collections
+import math
 import time
 import warnings
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +118,21 @@ class SimConfig:
     # per window. 1 (default) is the unchanged per-window path;
     # records are bitwise identical for any value (DESIGN.md §3e).
     window_block: int = 1
+    # superstep pipeline depth (DESIGN.md §3e): how many dispatched
+    # window blocks may sit in flight (ring pull outstanding) after
+    # each collector turn before the oldest is collected. 1 is the
+    # PR 5 double-buffer; K > 1 keeps K rings queued so the collector's
+    # host-side reduce/emit work is hidden behind K blocks of device
+    # compute; "auto" measures the first collected block's blocking
+    # pull vs host-reduce walls and picks a depth from that profile
+    # (resolve_auto_depth). Depth only changes WHEN rings are pulled,
+    # never what was computed — records/sketches/grouped stats/
+    # trajectories/steering are bitwise identical for any depth. Each
+    # in-flight block holds a full record ring (plus a pool snapshot
+    # when ring-snapshot checkpointing is enabled), and
+    # peak_buffered_bytes accounts for all of them. Irrelevant (depth
+    # is effectively 1) when window_block == 1 or under host_loop.
+    pipeline_depth: Union[int, str] = 1
     # sparse large-network encoding (DESIGN.md §3g): CSR-style padded
     # reactant tables + a precomputed reaction dependency graph so a
     # firing recomputes only the affected propensities (O(out-degree)
@@ -149,6 +169,15 @@ class SimConfig:
             raise ValueError(
                 f"SimConfig.kernel_max_chunks must be >= 1, got "
                 f"{self.kernel_max_chunks}")
+        if isinstance(self.pipeline_depth, str):
+            if self.pipeline_depth != "auto":
+                raise ValueError(
+                    f"SimConfig.pipeline_depth must be an int >= 1 or "
+                    f"'auto', got {self.pipeline_depth!r}")
+        elif self.pipeline_depth < 1:
+            raise ValueError(
+                f"SimConfig.pipeline_depth must be >= 1, got "
+                f"{self.pipeline_depth}")
         if self.method not in ("exact", "tau_leap"):
             raise ValueError(
                 f"SimConfig.method must be 'exact' or 'tau_leap', got "
@@ -160,6 +189,44 @@ class SimConfig:
             raise ValueError(
                 f"SimConfig.tau_fallback must be >= 0, got "
                 f"{self.tau_fallback}")
+
+
+# pipeline_depth="auto" bounds: floor keeps at least the PR 5 depth-1
+# overlap plus one queued block; cap bounds memory (each in-flight
+# block holds a full record ring)
+AUTO_DEPTH_MIN = 2
+AUTO_DEPTH_MAX = 8
+
+
+def resolve_auto_depth(pull_s: float, host_s: float) -> int:
+    """Pick a pipeline depth from the first collected block's profile.
+
+    `pull_s` is the blocking ring-pull wall with a cold pipeline (a
+    proxy for one block's remaining device+transfer time when the
+    collector asks) and `host_s` the collector's host-side
+    reduce/emit wall for that block. Queueing K blocks gives the
+    device ~K blocks of runway while the host works, so the depth
+    that hides the host work is 1 + ceil(host_s / pull_s), clamped to
+    [AUTO_DEPTH_MIN, AUTO_DEPTH_MAX]. The probe only tunes WHEN rings
+    are pulled — results are bitwise identical for any outcome.
+    """
+    if pull_s <= 0:
+        return AUTO_DEPTH_MIN
+    return max(AUTO_DEPTH_MIN,
+               min(AUTO_DEPTH_MAX, 1 + math.ceil(host_s / pull_s)))
+
+
+class _InFlight(NamedTuple):
+    """One dispatched-but-uncollected superstep in the pipeline."""
+    w0: int  # first window of the block
+    n_win: int  # windows in the block
+    pull: dict  # device record ring + queued eager folds
+    dispatch_wall: float  # host wall to ENQUEUE the block (async)
+    obs_row_bytes: int  # one window's obs footprint (schema-iii acct)
+    ring_bytes: int  # whole queued ring (+ snapshot) device footprint
+    snapshot: Optional[LaneState]  # pool copy taken BEFORE dispatch
+    #   (the dispatch donates the pool) — lets checkpoint() save this
+    #   block's entry boundary while it is still in flight
 
 
 def resolve_observables(model: CWCModel | ReactionSystem):
@@ -238,6 +305,30 @@ class SimulationEngine:
         # block's device compute (run_block)
         self._dispatched = 0
         self._pending: collections.deque = collections.deque()
+        # depth-K pipeline: resolved in-flight block budget (None while
+        # pipeline_depth="auto" awaits its first-collect probe), the
+        # probe's measurements, and per-ring accounting/telemetry
+        self._depth: Optional[int] = (
+            None if cfg.pipeline_depth == "auto"
+            else int(cfg.pipeline_depth))
+        self.depth_probe: Optional[dict] = None
+        self.peak_inflight_blocks = 0
+        # ring-snapshot checkpointing (off until a caller that intends
+        # to checkpoint mid-run opts in): when enabled, every dispatch
+        # first copies the pool so checkpoint() can save the oldest
+        # in-flight block's entry boundary instead of flushing
+        self._snap_enabled = False
+        self.n_snapshot_saves = 0
+        self.n_ckpt_flushes = 0
+        # block-level wall attribution: (w0, n_win, dispatch_s,
+        # collect_s) per collected unit — dispatch_s is enqueue wall
+        # (async, excludes device compute), collect_s is blocking ring
+        # pull + host-side reduce/emit (see Telemetry.block_walls)
+        self.block_walls: list[tuple] = []
+        # device-side predictive cost carry (in-scan regroup seam);
+        # seeded lazily from scheduler._cost, invalidated whenever the
+        # host rewrites cost out-of-band (restore, steering)
+        self._cost_dev: Optional[jax.Array] = None
         # per-lane algorithm (the method seam): exact SSA or tau-leap —
         # the dispatch strategies consume `_lane_step` (unfused bodies)
         # and `_make_chunk_loop` (Pallas kernel bodies)
@@ -443,6 +534,35 @@ class SimulationEngine:
         return perm
 
     # ------------------------------------------------------------------
+    @property
+    def pipeline_depth(self) -> int:
+        """Resolved in-flight block budget. For pipeline_depth="auto"
+        this is 1 until the first collected block's probe resolves it
+        (resolve_auto_depth)."""
+        return self._depth if self._depth is not None else 1
+
+    def enable_snapshots(self) -> None:
+        """Opt in to ring-snapshot checkpointing: every subsequent
+        block dispatch first copies the pool (the dispatch donates its
+        operand), so checkpoint() can save the oldest in-flight
+        block's entry boundary — which IS the collected frontier —
+        without flushing the pipeline. Costs one pool copy per
+        dispatch; callers that never checkpoint mid-run leave it off."""
+        self._snap_enabled = True
+
+    def _cost_device(self) -> jax.Array:
+        """Device-resident predictive cost carry for the in-scan
+        regroup (float32, sharded like the pool). The host float64 EMA
+        (scheduler._cost, updated at collect time) stays the canonical
+        copy for checkpoints and parity; the device carry only decides
+        grouping, which is execution packaging — any divergence in the
+        low bits can reorder groups but never change a record."""
+        if self._cost_dev is None:
+            self._cost_dev = self._dispatch.place(
+                jnp.asarray(self.scheduler._cost, jnp.float32))
+        return self._cost_dev
+
+    # ------------------------------------------------------------------
     def run_window(self) -> StatsRecord:
         """Advance every instance to the next grid point. All three
         schemas share this window loop — they differ in grouping policy
@@ -479,6 +599,7 @@ class SimulationEngine:
         # the kernel path) the truncation scalar — the flag used to be
         # its own pull, costing the kernel path a second host sync per
         # window (BENCH_PR3 `host_syncs_per_window: 2.0`)
+        t_pull = time.perf_counter()
         pulled = jax.device_get(dict(
             mean=stats.mean, var=stats.var, ci90=stats.ci90, n=stats.n,
             steps=self._pool.steps.sum(), leaps=self._pool.leaps.sum(),
@@ -528,6 +649,12 @@ class SimulationEngine:
             mean=pulled["mean"], var=pulled["var"],
             ci90=pulled["ci90"], n=float(pulled["n"].max()))
         self.stream.emit(rec)
+        # window-level walls ARE measurable here: one block_walls row
+        # per window — dispatch = async enqueue wall, collect =
+        # blocking pull + host emit (Telemetry.block_walls)
+        self.block_walls.append(
+            (self._window, 1, self.wall_times[-1],
+             time.perf_counter() - t_pull))
         self._window += 1
         self._dispatched = self._window
         return rec
@@ -547,6 +674,7 @@ class SimulationEngine:
 
         self._pending.clear()
         self._dispatched = self._window
+        self._cost_dev = None  # advanced past the dropped blocks
         cfg = self.cfg
         raise FusedWindowTruncated(
             f"window {window} (horizon {horizon:g}) exhausted "
@@ -564,6 +692,7 @@ class SimulationEngine:
         the error restores a checkpoint and replays from there."""
         self._pending.clear()
         self._dispatched = self._window
+        self._cost_dev = None  # advanced past the dropped blocks
         raise InvariantViolation(
             f"engine invariant {check!r} violated at window {window}: "
             f"{detail} — the pool state is untrusted; recover from the "
@@ -613,6 +742,13 @@ class SimulationEngine:
         w0 = self._dispatched
         n_win = self._next_block_windows(limit)
         horizons = self.grid[w0:w0 + n_win]
+        snapshot = None
+        if self._snap_enabled:
+            # the dispatch donates the pool, so the copy of this
+            # block's ENTRY boundary must happen before it; outside
+            # the dispatch timer — it is checkpoint overhead, not
+            # enqueue wall
+            snapshot = jax.tree_util.tree_map(jnp.copy, self._pool)
         t0 = time.perf_counter()
         res = self._dispatch.advance_block(horizons)
         stats = (res.stats if res.stats is not None else [
@@ -647,9 +783,22 @@ class SimulationEngine:
             copy = getattr(leaf, "copy_to_host_async", None)
             if callable(copy):
                 copy()
-        self._pending.append(
-            (w0, n_win, pull, dispatch_wall, res.obs.nbytes // n_win))
+        # per-ring memory accounting: EVERY queued ring (and snapshot)
+        # is live simultaneously at depth K, so peak_buffered must see
+        # their sum, not one block's footprint
+        ring_bytes = sum(
+            getattr(leaf, "nbytes", 0)
+            for leaf in jax.tree_util.tree_leaves((pull, snapshot)))
+        self._pending.append(_InFlight(
+            w0, n_win, pull, dispatch_wall,
+            res.obs.nbytes // n_win, ring_bytes, snapshot))
         self._dispatched = w0 + n_win
+        self.peak_inflight_blocks = max(
+            self.peak_inflight_blocks, len(self._pending))
+        self._peak_buffered = max(
+            self._peak_buffered,
+            sum(e.ring_bytes for e in self._pending)
+            + sum(s.nbytes for s in self._samples))
 
     def _collect_block(self) -> None:
         """Blocking pull + host-side reduction of the OLDEST in-flight
@@ -657,12 +806,19 @@ class SimulationEngine:
         telemetry, truncation, optional samples/grouped), then the
         exact per-window record emission the per-window path performs."""
         cfg = self.cfg
-        w0, n_win, pull, dispatch_wall, obs_row_bytes = \
-            self._pending.popleft()
+        ent = self._pending.popleft()
+        w0, n_win, pull = ent.w0, ent.n_win, ent.pull
+        dispatch_wall, obs_row_bytes = ent.dispatch_wall, ent.obs_row_bytes
         t0 = time.perf_counter()
         pulled = jax.device_get(pull)
         self.n_host_syncs += 1
-        wall = dispatch_wall + (time.perf_counter() - t0)
+        pull_s = time.perf_counter() - t0
+        wall = dispatch_wall + pull_s
+        # per-window walls are NOT measurable under block dispatch (one
+        # enqueue + one ring pull covers the whole block): feed the
+        # watchdog ONE block-level sample at per-window scale instead
+        # of n_win identical slices that would poison its median
+        self.watchdog.observe_block(w0, n_win, wall)
         trunc = pulled.get("truncated")
         if cfg.guards and (len(pulled["stats"]) != n_win
                            or len(pulled["steps"]) != n_win):
@@ -675,7 +831,6 @@ class SimulationEngine:
                 f"{n_win}-window block at window {w0}")
         for w in range(n_win):
             self.wall_times.append(wall / n_win)
-            self.watchdog.observe(w0 + w, wall / n_win)
             if trunc is not None and trunc[w]:
                 self._raise_truncated(w0 + w, float(self.grid[w0 + w]))
             if cfg.guards:
@@ -718,20 +873,37 @@ class SimulationEngine:
                 n=float(s.n.max()))
             self.stream.emit(rec)
             self._window += 1
+        host_s = time.perf_counter() - t0 - pull_s
+        self.block_walls.append((w0, n_win, dispatch_wall,
+                                 pull_s + host_s))
+        if self._depth is None:
+            # pipeline_depth="auto": the first collect ran at depth 1
+            # (cold pipeline), so pull_s approximates one block's
+            # remaining device+transfer time and host_s the collector
+            # work to hide behind it
+            self._depth = resolve_auto_depth(pull_s, host_s)
+            self.depth_probe = dict(
+                dispatch_s=dispatch_wall, pull_s=pull_s, host_s=host_s,
+                collect_dispatch_ratio=(
+                    (pull_s + host_s) / max(dispatch_wall, 1e-9)),
+                depth=self._depth)
 
     def run_block(self, dispatch_limit: Optional[int] = None,
                   pipeline: bool = True) -> int:
         """One turn of the pipelined superstep loop (window_block > 1):
         dispatch the next window block if any remains below
         `dispatch_limit` (an absolute window index), then collect the
-        oldest in-flight block once a second one is queued behind it —
-        or once dispatching is done — so host-side reduction and sinks
-        for block k run while the device simulates block k+1. With
-        `pipeline=False` the freshly dispatched block is collected
-        immediately (no dispatch-ahead) — the per-block checkpointing
-        mode, where a save after each call must land on THIS block's
-        boundary rather than flushing the next block too. Returns the
-        number of windows collected this call.
+        oldest in-flight block once more than `pipeline_depth` blocks
+        are queued behind it — or once dispatching is done — so
+        host-side reduction and sinks for block k run while the device
+        simulates blocks k+1..k+K. Depth only changes WHEN rings are
+        pulled, never what was computed: records are bitwise identical
+        for any depth. With `pipeline=False` the freshly dispatched
+        block is collected immediately (no dispatch-ahead) — the
+        strict lock-step mode steering relies on. Callers that
+        checkpoint per block no longer need it: enable_snapshots() +
+        checkpoint() saves the collected frontier while blocks stay in
+        flight. Returns the number of windows collected this call.
 
         With steering active the pipeline is forced off: the policy's
         decision point must see block k's records BEFORE block k+1 is
@@ -746,7 +918,9 @@ class SimulationEngine:
         if self._dispatched < limit:
             self._dispatch_block(limit)
         before = self._window
-        if self._pending and (not pipeline or len(self._pending) > 1
+        depth = self.pipeline_depth  # "auto" acts as 1 until resolved
+        if self._pending and (not pipeline
+                              or len(self._pending) > depth
                               or self._dispatched >= limit):
             self._collect_block()
         collected = self._window - before
@@ -817,6 +991,7 @@ class SimulationEngine:
             self._rates_dev = self._dispatch.place(
                 jnp.asarray(self.rates))
             self.scheduler._cost[dst] = self.scheduler._cost[src]
+            self._cost_dev = None  # host rewrote cost out-of-band
         if a.no_leap is not None:
             arrs["no_leap"] = np.asarray(a.no_leap, bool)
         self._pool = self._dispatch.place(LaneState(
@@ -869,11 +1044,28 @@ class SimulationEngine:
         global arrays, so the file never depends on the mesh shape —
         any engine (any shard count) can restore it.
 
-        Supersteps: saving forces a flush — every in-flight window
-        block is collected first, so the saved pool state and the
-        saved records always agree on one window boundary."""
-        self.flush()
-        p = self._pool
+        Supersteps: with ring snapshots enabled (enable_snapshots),
+        the oldest in-flight block's ENTRY snapshot is the pool at the
+        collected frontier — exactly the boundary every already-emitted
+        record agrees on — so the save happens WITHOUT flushing the
+        pipeline and later blocks keep computing underneath it.
+        Without snapshots (or with nothing in flight) saving flushes
+        first, as before: every in-flight block is collected so the
+        saved pool and the saved records agree on one boundary."""
+        p = None
+        if self._pending:
+            snap = self._pending[0].snapshot
+            if snap is not None:
+                # invariant: blocks collect in order, so the oldest
+                # pending block's first window IS self._window
+                assert self._pending[0].w0 == self._window
+                p = snap
+                self.n_snapshot_saves += 1
+            else:
+                self.n_ckpt_flushes += 1
+        if p is None:
+            self.flush()
+            p = self._pool
         extra = {}
         recs = self.stream.records()
         if recs:
@@ -939,6 +1131,7 @@ class SimulationEngine:
                 f"(or a divisor of {saved_window}), or re-save the "
                 "checkpoint at a multiple of window_block")
         self._pending.clear()  # in-flight rings predate the restore
+        self._cost_dev = None  # reseed the in-scan carry from `cost`
         # reshard-on-restore: checkpoints hold the gathered global pool
         # (mesh-shape-agnostic); the current dispatch re-places it on
         # whatever mesh THIS engine runs on

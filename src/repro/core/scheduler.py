@@ -70,6 +70,22 @@ class Scheduler:
                 out.append(idx.astype(np.int32))
         return out
 
+    def take_positions(self) -> np.ndarray:
+        """Positions into a shard-local stable-sorted order that
+        reproduce `groups()`'s padding rule on device.
+
+        `groups()` pads a ragged tail group by repeating its last
+        *occupied* index; in sorted-order space that is simply position
+        `per - 1`. The device-side predictive regroup (dispatch.py
+        in-scan cost sort) computes `order = argsort(cost)` per shard
+        and gathers `order[take_positions()]` — bit-identical to the
+        concatenated host `groups()` permutation for that shard.
+        """
+        per = self.n_instances // self.n_shards
+        ngroups = (per + self.n_lanes - 1) // self.n_lanes
+        pos = np.arange(ngroups * self.n_lanes)
+        return np.minimum(pos, per - 1).astype(np.int32)
+
     def record_costs(self, idx: np.ndarray, steps: np.ndarray) -> None:
         """Update per-instance EMA cost with events used this window."""
         a = self.ema_alpha

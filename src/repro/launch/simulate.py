@@ -41,6 +41,18 @@ def _parse_sweep(specs: list[str]) -> dict:
     return out
 
 
+def _parse_depth(s: str):
+    """--pipeline-depth operand: 'auto' or a positive int."""
+    if s == "auto":
+        return s
+    try:
+        return int(s)
+    except ValueError:
+        raise SystemExit(
+            f"--pipeline-depth expects a positive int or 'auto', got {s!r}"
+        ) from None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", choices=list(MODELS), default="lv2")
@@ -80,6 +92,14 @@ def main() -> None:
                     "record pull (amortises dispatches and host syncs "
                     "to 1/N per window; records are bit-identical for "
                     "any value; incompatible with --host-loop)")
+    ap.add_argument("--pipeline-depth", default="1", metavar="K",
+                    help="superstep pipeline depth: keep K dispatched "
+                    "window blocks in flight before the collector "
+                    "blocks on the oldest record ring (default 1, the "
+                    "double-buffer), or 'auto' to profile the first "
+                    "collected block's pull-vs-host-reduce walls and "
+                    "pick a depth; records are bit-identical for any "
+                    "value (only WHEN rings are pulled changes)")
     ap.add_argument("--sparse", action="store_true",
                     help="sparse large-network engine: CSR reactant "
                     "tables + reaction dependency graph, O(out-degree) "
@@ -176,6 +196,7 @@ def main() -> None:
         use_kernel=args.kernel,
         host_loop=args.host_loop,
         window_block=args.window_block,
+        pipeline_depth=_parse_depth(args.pipeline_depth),
         sparse=args.sparse,
         partitioning=(Partitioning(n_shards=args.devices,
                                    stat_blocks=args.stat_blocks)

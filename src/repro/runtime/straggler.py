@@ -22,16 +22,43 @@ class WindowWatchdog:
     factor: float = 3.0
     history: deque = field(default_factory=lambda: deque(maxlen=64))
     flagged: list = field(default_factory=list)
+    # monotone count of windows covered by observations; `history` is a
+    # bounded median window (maxlen=64) and must never be the rate
+    # denominator — on runs longer than 64 windows `flagged` keeps
+    # growing while len(history) saturates and the rate drifts past 1.0
+    observed: int = 0
 
     def observe(self, window: int, wall_s: float) -> bool:
         """Returns True if this window is a straggler."""
         med = float(np.median(self.history)) if self.history else wall_s
         self.history.append(wall_s)
+        self.observed += 1
         if self.history and wall_s > self.factor * max(med, 1e-9):
             self.flagged.append((window, wall_s, med))
             return True
         return False
 
+    def observe_block(self, window: int, n_windows: int,
+                      wall_s: float) -> bool:
+        """Observe a superstep block as ONE sample at per-window scale.
+
+        Under pipelined block dispatch the only measurable wall is
+        block-level (dispatch enqueue + blocking ring pull); slicing it
+        uniformly into `n_windows` fake per-window samples would feed
+        the median n_windows correlated copies and hide any
+        within-block straggler entirely. Record one `wall_s/n_windows`
+        sample against the block's first window, but advance `observed`
+        by the real window count so `straggler_rate` keeps a per-window
+        denominator.
+        """
+        per = wall_s / max(n_windows, 1)
+        med = float(np.median(self.history)) if self.history else per
+        self.history.append(per)
+        self.observed += max(n_windows, 1)
+        if self.history and per > self.factor * max(med, 1e-9):
+            self.flagged.append((window, per, med))
+            return True
+        return False
+
     def straggler_rate(self) -> float:
-        seen = len(self.history)
-        return len(self.flagged) / seen if seen else 0.0
+        return len(self.flagged) / self.observed if self.observed else 0.0

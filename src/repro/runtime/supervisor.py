@@ -122,6 +122,10 @@ class RunSupervisor:
         self.mesh = mesh
         self._part = experiment.partitioning
         self._restarts = 0
+        # straggler re-dispatches (EngineStall) are routine
+        # rebalancing, not crashes: they get their own counter and
+        # never consume the max_restarts budget
+        self._stall_redispatches = 0
         self._events: list[dict] = []
         self._stall_retried: set[int] = set()
         self._injector = (
@@ -159,6 +163,7 @@ class RunSupervisor:
         result = SimulationResult(self.experiment, engine)
         result._wall_time = time.perf_counter() - t0
         result._restarts = self._restarts
+        result._stall_redispatches = self._stall_redispatches
         result._recovery = self.report()
         return result
 
@@ -170,6 +175,7 @@ class RunSupervisor:
                 kinds[ev["kind"]] = kinds.get(ev["kind"], 0) + 1
         return {
             "restarts": self._restarts,
+            "stall_redispatches": self._stall_redispatches,
             "faults_by_kind": kinds,
             "final_n_shards": (self._part.n_shards
                                if self._part is not None else None),
@@ -207,6 +213,13 @@ class RunSupervisor:
         rec = self.recovery
         n = len(engine.grid)
         per_window = engine.cfg.window_block == 1 and engine._steer is None
+        if not per_window and engine._steer is None:
+            # cadence saves are served from the oldest in-flight ring's
+            # entry snapshot (engine.checkpoint), so the dispatch-ahead
+            # never halts at a save boundary and the pipeline keeps its
+            # full depth through every save (steered runs are lock-step
+            # anyway — snapshots would be dead weight there)
+            engine.enable_snapshots()
         if not ckpt_store.list_checkpoints(rec.ckpt_dir):
             self._save(engine)  # window-0 anchor: a crash before the
             #                     first cadence save still restores
@@ -217,12 +230,12 @@ class RunSupervisor:
                 self._inject(engine, w, w + 1)
                 engine.run_window()
             else:
-                # pipelining stays on between saves (dispatch_limit
-                # stops the dispatch-ahead AT the save boundary, so the
-                # snapshot never flushes extra blocks into the file)
                 self._inject(engine, w, min(w + engine.cfg.window_block, n))
-                engine.run_block(dispatch_limit=next_save, pipeline=True)
+                engine.run_block()
             self._check_stragglers(engine)
+            # the cadence is a window_block multiple and blocks collect
+            # in grid-aligned order, so the collected frontier lands on
+            # every save boundary exactly — no flush needed to hit it
             if engine._window >= next_save:
                 self._save(engine)
 
@@ -238,6 +251,19 @@ class RunSupervisor:
 
     def _handle_fault(self, e: RecoverableError) -> None:
         rec = self.recovery
+        if isinstance(e, EngineStall):
+            # straggler re-dispatch: rebuild+restore+replay like any
+            # fault, but on its OWN counter — a few slow windows must
+            # never consume the crash max_restarts budget — and with no
+            # backoff sleep (delaying the retry of a slow window only
+            # makes it slower; boundedness comes from the injector's
+            # fire-once schedule and the watchdog's one-retry-per-
+            # window set, not from a restart cap)
+            self._stall_redispatches += 1
+            self._log("fault", kind=e.kind, window=e.window,
+                      stall_redispatch=self._stall_redispatches,
+                      error=str(e))
+            return
         self._restarts += 1
         self._log("fault", kind=e.kind, window=e.window,
                   restart=self._restarts, error=str(e))

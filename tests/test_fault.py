@@ -216,6 +216,25 @@ def test_injector_is_one_shot_per_window():
     assert inj.maybe_fail(3) is None  # replay after restart: no refire
 
 
+def test_stall_does_not_consume_restart_budget(tmp_path):
+    """PR9 satellite: a stalled window is re-dispatched in place — it
+    must not count as a restart, trigger backoff, or eat into
+    max_restarts. With max_restarts=0 a stall-only plan still
+    completes bitwise."""
+    base = simulate(make_exp())
+    got = simulate(make_exp(
+        recovery=recovery(tmp_path, {2: "stall"}, max_restarts=0)))
+    assert_bitwise(base, got)
+    rep = got.recovery_report()
+    assert rep["restarts"] == 0
+    assert rep["stall_redispatches"] == 1
+    assert got.telemetry.stall_redispatches == 1
+    stall_events = [e for e in rep["events"]
+                    if e["event"] == "fault" and e["kind"] == "stall"]
+    assert len(stall_events) == 1
+    assert stall_events[0]["stall_redispatch"] == 1
+
+
 def test_max_restarts_declares_run_dead(tmp_path):
     plan = {w: "crash" for w in range(N_WINDOWS)}
     with pytest.raises(RuntimeError, match="declared dead"):

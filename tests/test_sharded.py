@@ -250,6 +250,37 @@ def test_supersteps_compose_with_sharded_dispatch():
     """)
 
 
+def test_depth_k_pipeline_composes_with_sharded_dispatch():
+    """PR9: pipeline_depth on the sharded path — K ∈ {1, 2, 4} blocks
+    in flight, including the predictive policy's in-scan device cost
+    carry (shard-local argsort, no host round trips) — stays bitwise
+    with the single-device per-window baseline; the depth only moves
+    the collect point, never the dispatched work."""
+    _run("""
+    base = simulate(make_exp(n_shards=1))
+    pred_base = simulate(make_exp(n_shards=1, policy="predictive"))
+    for a, b in zip(base.records, pred_base.records):
+        assert (a.mean == b.mean).all()
+    for depth in (1, 2, 4):
+        for policy in ("on_demand", "predictive"):
+            shard = simulate(make_exp(n_shards=4, window_block=2,
+                                      pipeline_depth=depth,
+                                      policy=policy))
+            for a, b in zip(base.records, shard.records):
+                assert a.t == b.t and a.n == b.n
+                assert (a.mean == b.mean).all()
+                assert (a.var == b.var).all()
+                assert (a.ci90 == b.ci90).all()
+            pb, ps = base.per_point(), shard.per_point()
+            for k in ("n", "mean", "var", "ci90"):
+                assert (pb[k] == ps[k]).all(), (depth, policy, k)
+            assert (base.trajectories() == shard.trajectories()).all()
+            tele = shard.telemetry
+            assert tele.pipeline_depth == depth
+            assert tele.dispatches == 2 and tele.host_syncs == 2
+    """, devices=4)
+
+
 def test_superstep_checkpoint_resumes_on_sharded_path():
     """A block-boundary checkpoint from a sharded superstep run is the
     same mesh-shape-agnostic artifact: resume on a different shard

@@ -137,6 +137,106 @@ def test_predictive_policy_composes_with_supersteps():
                           got._engine.scheduler._cost)
 
 
+# ------------------------------------------------- depth-K pipelining
+@pytest.mark.parametrize("depth", [2, 4, "auto"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_depth_k_records_bitwise(depth, use_kernel):
+    """PR9 acceptance bar: pipeline_depth only changes WHEN the oldest
+    ring is collected, never what was dispatched — records, telemetry,
+    and trajectories are bitwise identical to depth 1 (and to the
+    per-window path) for any K, including the auto-probed depth."""
+    base = simulate(make_exp(1, use_kernel=use_kernel,
+                             record_trajectories=True))
+    got = simulate(make_exp(2, use_kernel=use_kernel, pipeline_depth=depth,
+                            record_trajectories=True))
+    assert_bitwise(base, got, ctx=(depth, use_kernel))
+    assert (base.trajectories() == got.trajectories()).all()
+    t = got.telemetry
+    if depth == "auto":
+        probe = got._engine.depth_probe
+        assert probe is not None and probe["depth"] == t.pipeline_depth
+        assert 2 <= t.pipeline_depth <= 8
+    else:
+        assert t.pipeline_depth == depth
+    # pending holds up to depth+1 rings transiently (dispatch K+1
+    # happens before the oldest pull), capped by the 4 total blocks
+    assert t.peak_inflight_blocks >= min(t.pipeline_depth, 3)
+    assert t.peak_inflight_blocks <= min(t.pipeline_depth + 1, 4)
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_depth_k_predictive_in_scan_cost_sort(depth):
+    """The predictive regroup now happens inside the block scan on a
+    device cost carry — zero host round trips between windows — and
+    must stay bitwise with the per-window host path, INCLUDING the
+    host-side float64 EMA state at run end."""
+    base = simulate(make_exp(1, policy="predictive"))
+    got = simulate(make_exp(2, policy="predictive", pipeline_depth=depth))
+    assert_bitwise(base, got, ctx=depth)
+    assert np.array_equal(base._engine.scheduler._cost,
+                          got._engine.scheduler._cost)
+
+
+@pytest.mark.parametrize("method", [Method.EXACT, Method.TAU_LEAP])
+def test_depth_k_methods_and_sparse_bitwise(method):
+    base = simulate(make_exp(1, method=method))
+    for kw in ({}, {"sparse": True}):
+        got = simulate(make_exp(2, pipeline_depth=4, method=method, **kw))
+        assert_bitwise(base, got, ctx=(method, kw))
+
+
+def test_depth_k_sketches_and_grouped_bitwise():
+    from repro.api import SketchSpec
+
+    sk = SketchSpec(n_bins=8, lo=0.0, hi=600.0)
+    base = simulate(make_exp(1, sketch=sk))
+    got = simulate(make_exp(2, pipeline_depth=4, sketch=sk))
+    assert_bitwise(base, got)
+    for sa, sb in zip(base.sketches(), got.sketches()):
+        assert (sa.hist == sb.hist).all()
+
+
+def test_pipeline_depth_bounds_inflight_rings():
+    """Engine-level: at depth K the collector lets K blocks queue
+    before blocking on the oldest — run_block turns dispatch first,
+    so pending peaks at K+1 within a turn."""
+    from repro.api.run import build_engine
+
+    eng = build_engine(make_exp(2, n_windows=16, pipeline_depth=3))
+    for expect_pending, expect_window in [
+            (1, 0), (2, 0), (3, 0),  # filling: no collects yet
+            (3, 2),  # 4th dispatch tips pending past K: collect oldest
+    ]:
+        eng.run_block()
+        assert len(eng._pending) == expect_pending
+        assert eng._window == expect_window
+    eng.flush()
+    assert not eng._pending and eng._window == 8
+    assert eng.peak_inflight_blocks == 4  # K+1 transient inside a turn
+
+
+def test_pipeline_depth_validation():
+    with pytest.raises(ExperimentError, match="pipeline_depth"):
+        make_exp(2, pipeline_depth=0).validate()
+    with pytest.raises(ExperimentError, match="pipeline_depth"):
+        make_exp(2, pipeline_depth="deep").validate()
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        SimConfig(window_block=2, pipeline_depth=0)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        SimConfig(window_block=2, pipeline_depth="never")
+    SimConfig(window_block=2, pipeline_depth="auto")  # the probe knob
+
+
+def test_auto_depth_resolution_rule():
+    from repro.core.engine import (AUTO_DEPTH_MAX, AUTO_DEPTH_MIN,
+                                   resolve_auto_depth)
+
+    assert resolve_auto_depth(1.0, 0.5) == 2   # collect hides in 1 block
+    assert resolve_auto_depth(1.0, 2.5) == 4   # ceil(2.5) + 1
+    assert resolve_auto_depth(1.0, 100.0) == AUTO_DEPTH_MAX
+    assert resolve_auto_depth(0.0, 1.0) == AUTO_DEPTH_MIN  # degenerate
+
+
 # -------------------------------------------------- checkpoint/resume
 def test_checkpoint_resume_at_block_boundary_is_bitwise():
     ck = os.path.join(tempfile.mkdtemp(), "ck")
@@ -171,6 +271,46 @@ def test_mid_block_resume_rejected_naming_the_knob():
     # a dividing window_block is fine
     resumed = simulate(make_exp(3), checkpoint_path=ck, resume=True)
     assert_records_bitwise(simulate(make_exp(1)), resumed)
+
+
+def test_snapshot_checkpoint_saves_without_flushing_pipeline():
+    """With snapshots enabled, checkpoint() while K blocks are in
+    flight serves the save from the oldest ring's ENTRY snapshot (the
+    pool as of the collected frontier) — the pipeline is untouched,
+    and the file seeds a bitwise resume."""
+    from repro.api.run import build_engine
+
+    eng = build_engine(make_exp(2, pipeline_depth=2))
+    eng.enable_snapshots()
+    eng.run_block()          # dispatch b0
+    eng.run_block()          # dispatch b1 (pending=2, within depth)
+    eng.run_block()          # dispatch b2, collect b0 -> window=2
+    assert len(eng._pending) == 2 and eng._window == 2
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    eng.checkpoint(ck)
+    # the save neither collected nor dropped the in-flight blocks
+    assert len(eng._pending) == 2 and eng._window == 2
+    assert eng.n_snapshot_saves == 1 and eng.n_ckpt_flushes == 0
+    z = np.load(ck + ".npz")
+    assert int(z["window"]) == 2  # the collected frontier, not the
+    #                               dispatch cursor (which is at 6)
+    assert len(z["rec_t"]) == 2
+    eng.flush()  # finish this engine cleanly
+    resumed = simulate(make_exp(2), checkpoint_path=ck, resume=True)
+    assert_records_bitwise(simulate(make_exp(1)), resumed)
+
+
+def test_checkpoint_without_snapshots_still_flushes():
+    """Snapshots are opt-in: a plain engine.checkpoint() mid-flight
+    keeps the old collect-first semantics and counts the flush."""
+    from repro.api.run import build_engine
+
+    eng = build_engine(make_exp(4))
+    eng.run_block()
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    eng.checkpoint(ck)
+    assert eng.n_ckpt_flushes == 1 and eng.n_snapshot_saves == 0
+    assert eng._window == 4
 
 
 def test_save_mid_run_forces_flush_of_inflight_block():

@@ -114,17 +114,84 @@ def test_window_watchdog_flags_outliers():
 @pytest.mark.parametrize("window_block", [1, 4])
 def test_watchdog_observes_every_window_into_telemetry(window_block):
     """Engine wiring (per-window AND superstep collector): every
-    window's wall share feeds the watchdog, and the telemetry
-    surfaces its verdicts."""
+    window is accounted by the watchdog — per-window walls on the
+    per-window path, ONE block-level sample per superstep (per-window
+    walls are not measurable under block dispatch; n identical slices
+    would poison the median) with `observed` still advancing by the
+    real window count — and the telemetry surfaces its verdicts."""
     res = simulate(Experiment(
         model=lotka_volterra(2),
         ensemble=Ensemble.make(replicas=N_INSTANCES),
         schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
         n_lanes=N_LANES, seed=7, window_block=window_block))
     wd = res._engine.watchdog
-    assert len(wd.history) == N_WINDOWS
+    assert wd.observed == N_WINDOWS
+    assert len(wd.history) == N_WINDOWS // window_block
     t = res.telemetry
     assert t.straggler_rate == wd.straggler_rate()
     assert t.straggler_windows == tuple(wd.flagged)
     for w, wall, med in t.straggler_windows:
         assert 0 <= w < N_WINDOWS and wall > 3.0 * med
+
+
+def test_supervised_cadence_saves_do_not_flush_pipeline(tmp_path):
+    """PR9 acceptance: cadence checkpoints under the supervisor are
+    served from in-flight ring snapshots, not by draining the pipeline
+    — so a fault-free supervised superstep run keeps the SAME
+    dispatch/host-sync profile as an unsupervised one (4 block
+    dispatches, 4 block pulls for wb=2 over 8 windows), every cadence
+    save is a snapshot save, and no save forced a flush."""
+    from repro.api import Recovery
+
+    res = simulate(Experiment(
+        model=lotka_volterra(2),
+        ensemble=Ensemble.make(replicas=N_INSTANCES),
+        schedule=Schedule(t_end=1.0, n_windows=N_WINDOWS, schema="iii"),
+        n_lanes=N_LANES, seed=7, window_block=2,
+        recovery=Recovery(ckpt_dir=str(tmp_path / "rec"), cadence=2)))
+    t = res.telemetry
+    assert t.dispatches == N_WINDOWS // 2
+    assert t.host_syncs == N_WINDOWS // 2
+    assert t.ckpt_flushes == 0
+    # saves at windows 2, 4, 6 land while the next block is in flight;
+    # the final save at 8 finds an empty pipeline (flush-free either way)
+    assert t.snapshot_saves >= 3
+    assert t.peak_inflight_blocks >= 2
+    assert t.restarts == 0 and t.stall_redispatches == 0
+
+
+def test_watchdog_rate_denominator_survives_long_runs():
+    """>64-window regression: `history` is a bounded median window
+    (maxlen=64), so the rate denominator must be the monotone
+    `observed` counter — with the old len(history) denominator a run
+    flagging >64 windows could report a rate above 1.0."""
+    from repro.runtime.straggler import WindowWatchdog
+
+    wd = WindowWatchdog(factor=3.0)
+    flagged = 0
+    for w in range(200):
+        # alternate calm stretches with bursts so flags keep landing
+        # long after the deque saturated
+        wall = 1.0 if w % 10 else 100.0
+        if wd.observe(w, wall):
+            flagged += 1
+    assert wd.observed == 200
+    assert len(wd.history) == 64  # saturated median window
+    assert flagged == len(wd.flagged) > 0
+    assert wd.straggler_rate() == flagged / 200
+    assert 0.0 <= wd.straggler_rate() <= 1.0
+
+
+def test_watchdog_block_observation_rate_is_per_window():
+    """observe_block records one median sample per block but advances
+    the denominator by the block's real window count."""
+    from repro.runtime.straggler import WindowWatchdog
+
+    wd = WindowWatchdog(factor=3.0)
+    for b in range(5):
+        assert not wd.observe_block(b * 4, 4, 4.0)  # 1.0 per window
+    assert wd.observe_block(20, 4, 20.0)  # 5.0 per window: straggler
+    assert wd.observed == 24
+    assert len(wd.history) == 6
+    assert wd.flagged == [(20, 5.0, 1.0)]
+    assert wd.straggler_rate() == 1 / 24
