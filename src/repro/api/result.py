@@ -87,6 +87,11 @@ class Telemetry:
     # depth-K superstep pipeline (DESIGN.md §3e)
     block_walls: tuple = ()  # (w0, n_win, dispatch_s, collect_s) rows
     pipeline_depth: int = 1  # resolved depth ("auto" probes 1st block)
+    # the depth the collector actually ran at: steering forces
+    # lock-step, so a steered run reports 1 here no matter what depth
+    # was requested ("auto" resolves to 1; explicit >1 is rejected at
+    # validation) — the forcing is visible, never silent
+    pipeline_depth_effective: int = 1
     peak_inflight_blocks: int = 0  # max queued rings observed
     snapshot_saves: int = 0  # checkpoints served from a ring snapshot
     ckpt_flushes: int = 0  # checkpoints that had to flush the pipeline
@@ -259,6 +264,8 @@ class SimulationResult:
             stall_redispatches=getattr(self, "_stall_redispatches", 0),
             block_walls=tuple(eng.block_walls),
             pipeline_depth=eng.pipeline_depth,
+            pipeline_depth_effective=getattr(
+                eng, "pipeline_depth_effective", eng.pipeline_depth),
             peak_inflight_blocks=eng.peak_inflight_blocks,
             snapshot_saves=eng.n_snapshot_saves,
             ckpt_flushes=eng.n_ckpt_flushes)

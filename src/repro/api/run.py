@@ -26,23 +26,38 @@ def observable_names(model) -> list[str]:
     return resolve_observables(model)[1]
 
 
-def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
+def build_engine(experiment: Experiment, mesh=None,
+                 shard=None) -> SimulationEngine:
     """Compile an Experiment down to a ready-to-run engine (no windows
     are run). Exposed for benchmarks; prefer simulate().
 
     When the Experiment carries a multi-shard Partitioning and no mesh
     is supplied, the farm's mesh is built by the dispatch seam
     (`core/dispatch.select_dispatch`) with
-    `compat.make_mesh((n_shards,), (axis,))`."""
+    `compat.make_mesh((n_shards,), (axis,))`.
+
+    `shard=(lo, hi, stat_blocks)` is the multi-process farm worker's
+    seam (runtime/worker.py): the engine covers only instance rows
+    [lo, hi) of the GLOBAL ensemble — same seed, rates/group ids
+    sliced to the range, and (crucially) RNG key rows taken from the
+    GLOBAL `jax.random.split(PRNGKey(seed), I)` table, so each lane's
+    counter-based stream is the one the single-process run would give
+    it. `stat_blocks` is the worker's share of the global Welford
+    block partition (contiguous, so worker blocks ARE global blocks)."""
     experiment.validate()
     ens = experiment.ensemble
     sched = experiment.schedule
     part = experiment.partitioning
+    lo, hi = (0, ens.n_instances) if shard is None else shard[:2]
+    if shard is not None:
+        from repro.core.dispatch import Partitioning
+
+        part = Partitioning(n_shards=1, stat_blocks=shard[2])
     cfg = SimConfig(
-        n_instances=ens.n_instances,
+        n_instances=hi - lo,
         t_end=float(sched.t_end),
         n_windows=sched.n_windows,
-        n_lanes=min(experiment.n_lanes, ens.n_instances),
+        n_lanes=min(experiment.n_lanes, hi - lo),
         schema=sched.schema.value,
         policy=sched.policy.value,
         seed=experiment.seed,
@@ -59,6 +74,11 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         sparse=experiment.sparse)
     group_ids = (ens.group_ids()
                  if experiment.reduction is Reduction.PER_POINT else None)
+    if group_ids is not None and shard is not None:
+        # points are contiguous replica runs, so the slice is whole
+        # points; re-base to 0 so the worker's grouped rows line up
+        # with its local point index (global index = local + base)
+        group_ids = group_ids[lo:hi] - group_ids[lo]
     try:
         engine = SimulationEngine(
             experiment.model, cfg, mesh=mesh, group_ids=group_ids,
@@ -69,14 +89,34 @@ def build_engine(experiment: Experiment, mesh=None) -> SimulationEngine:
         # dispatch-seam errors (device count, mesh/partitioning
         # mismatch) surface in the API's vocabulary
         raise ExperimentError(str(e)) from e
+    if shard is not None:
+        import jax.numpy as jnp
+
+        from repro.core.gillespie import init_lanes
+
+        global_pool = init_lanes(engine.system, ens.n_instances,
+                                 experiment.seed)
+        engine._pool = engine._dispatch.place(engine._pool._replace(
+            key=jnp.asarray(global_pool.key)[lo:hi]))
+        if group_ids is not None:
+            # declare this shard's place in the GLOBAL (V, G) stats
+            # layout: shards are contiguous, block size is uniform, so
+            # worker blocks/points ARE global blocks/points at an
+            # offset — the engine folds grouped stats through the
+            # zero-extended global stack (steering sees reference bits)
+            bs = (hi - lo) // shard[2]
+            engine.set_global_stats_layout(
+                v_total=ens.n_instances // bs, v0=lo // bs,
+                g_total=ens.n_points, g0=lo // ens.replicas)
     if ens.sweep is not None:
         try:
-            engine.set_rates(sweep_rates(engine.system, ens.sweep))
+            rates = sweep_rates(engine.system, ens.sweep)
         except KeyError as e:
             raise ExperimentError(
                 f"sweep names a rate the model does not define: {e}; "
                 f"reactions are {list(engine.system.reaction_names)}"
             ) from e
+        engine.set_rates(rates[lo:hi] if shard is not None else rates)
     return engine
 
 
@@ -110,6 +150,14 @@ def simulate(experiment: Experiment, *,
                 "run to completion; drop checkpoint_path/resume/"
                 "max_windows (set Recovery.ckpt_dir and cadence "
                 "instead)")
+        if experiment.recovery.workers > 1:
+            # multi-process elastic farm: a coordinator process shards
+            # the ensemble over worker processes and merges their
+            # results bitwise (DESIGN.md §3i)
+            from repro.runtime.coordinator import FarmCoordinator
+
+            return FarmCoordinator(experiment,
+                                   experiment.recovery).run()
         from repro.runtime.supervisor import RunSupervisor
 
         return RunSupervisor(experiment, experiment.recovery,

@@ -412,6 +412,16 @@ class Experiment:
                     raise ExperimentError(
                         "Steering.tau_switch only applies to "
                         "method=Method.TAU_LEAP runs")
+                if (isinstance(self.pipeline_depth, int)
+                        and self.pipeline_depth > 1):
+                    raise ExperimentError(
+                        "steering forces lock-step collection "
+                        "(decisions must see block k before block k+1 "
+                        "dispatches), which is incompatible with an "
+                        f"explicit pipeline_depth={self.pipeline_depth};"
+                        " use pipeline_depth=1 or 'auto' (resolves to "
+                        "1 under steering — see "
+                        "Telemetry.pipeline_depth_effective)")
         if self.recovery is not None:
             if not isinstance(self.recovery, Recovery):
                 raise ExperimentError(
@@ -421,9 +431,57 @@ class Experiment:
                 self.recovery.validate()
             except ValueError as e:
                 raise ExperimentError(str(e)) from e
+            if self.recovery.workers > 1:
+                self._validate_farm()
         for s in self.sinks:
             if not callable(s):
                 raise ExperimentError(f"sink {s!r} is not callable")
+
+    def _validate_farm(self) -> None:
+        """Cross-checks for the multi-process farm
+        (Recovery.workers > 1, DESIGN.md §3i). The bitwise-merge
+        contract needs clean shard boundaries: whole stat blocks (and,
+        per point, whole sweep points) per worker."""
+        w = self.recovery.workers
+        if self.partitioning is not None and self.partitioning.n_shards > 1:
+            raise ExperimentError(
+                "Recovery.workers shards the ensemble at the PROCESS "
+                "level; in-process device sharding inside each worker "
+                f"(Partitioning.n_shards={self.partitioning.n_shards}) "
+                "is not supported — use Partitioning(n_shards=1, "
+                "stat_blocks=...) to pin the statistics partition, or "
+                "drop workers")
+        n_inst = self.ensemble.n_instances
+        blocks = (self.partitioning.blocks
+                  if self.partitioning is not None else w)
+        if blocks % w or n_inst % blocks:
+            raise ExperimentError(
+                f"Recovery.workers={w} needs each worker to own whole "
+                f"stat blocks: stat_blocks ({blocks}) must be a "
+                f"multiple of workers and divide n_instances "
+                f"({n_inst})")
+        if self.reduction is Reduction.PER_POINT \
+                and self.ensemble.n_points % w:
+            raise ExperimentError(
+                f"Recovery.workers={w} with Reduction.PER_POINT needs "
+                "each worker to own whole sweep points: n_points "
+                f"({self.ensemble.n_points}) must divide evenly over "
+                "workers")
+        if self.steering is not None and self.steering.enabled:
+            if self.steering.reallocate:
+                raise ExperimentError(
+                    "Steering.reallocate moves lanes ACROSS sweep "
+                    "points, which cannot be replayed inside "
+                    "process-local shards; drop reallocate or run "
+                    "with workers=1")
+            if (self.steering.ci_rel_tol > 0 or self.steering.bimodality) \
+                    and self.reduction is not Reduction.PER_POINT:
+                raise ExperimentError(
+                    "steering convergence decisions under "
+                    "Recovery.workers > 1 need per-point statistics "
+                    "(each worker owns whole points and reproduces "
+                    "the global decision locally); use "
+                    "Reduction.PER_POINT or workers=1")
 
     # convenience constructors ----------------------------------------
     def with_(self, **changes) -> "Experiment":

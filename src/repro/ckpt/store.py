@@ -153,23 +153,44 @@ def verify(path: str, required: tuple = ()) -> dict:
     return arrays
 
 
-_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+# anchored: a namespaced file (`shard00__ckpt_...`) must NOT match the
+# un-namespaced store, and vice versa — farm workers share one ckpt_dir
+# and each store may only ever see (list, prune, restore) its own files
+_CKPT_RE = re.compile(r"(?:([A-Za-z0-9][A-Za-z0-9.\-]*)__)?ckpt_(\d+)\.npz")
+_NS_RE = re.compile(r"[A-Za-z0-9][A-Za-z0-9.\-]*")
 
 
-def checkpoint_name(window: int) -> str:
-    """Canonical cadenced-checkpoint file name for a window boundary."""
-    return f"ckpt_{window:08d}.npz"
+def _check_namespace(namespace: str) -> str:
+    if namespace and _NS_RE.fullmatch(namespace) is None:
+        raise ValueError(
+            f"checkpoint namespace {namespace!r} must match "
+            "[A-Za-z0-9][A-Za-z0-9.-]* (no underscores: '__' separates "
+            "the namespace from the checkpoint name)")
+    return namespace
 
 
-def list_checkpoints(directory: str) -> list[tuple[int, str]]:
-    """[(window, path)] of cadenced checkpoints under `directory`,
-    sorted oldest -> newest. Temp files from interrupted atomic saves
-    are ignored (they never match the canonical name)."""
+def checkpoint_name(window: int, namespace: str = "") -> str:
+    """Canonical cadenced-checkpoint file name for a window boundary.
+    With a `namespace` (one farm worker's store inside a shared
+    ckpt_dir) the name is prefixed `<namespace>__`."""
+    base = f"ckpt_{window:08d}.npz"
+    return f"{_check_namespace(namespace)}__{base}" if namespace else base
+
+
+def list_checkpoints(directory: str,
+                     namespace: str = "") -> list[tuple[int, str]]:
+    """[(window, path)] of cadenced checkpoints under `directory`
+    belonging to `namespace` ("" = the un-namespaced store), sorted
+    oldest -> newest. Foreign-namespace files and temp files from
+    interrupted atomic saves are ignored (the match is anchored on the
+    full basename, so partial `.npz.tmp.<pid>` leftovers never
+    qualify)."""
+    _check_namespace(namespace)
     out = []
-    for p in glob.glob(os.path.join(directory, "ckpt_*.npz")):
-        m = _CKPT_RE.search(os.path.basename(p))
-        if m:
-            out.append((int(m.group(1)), p))
+    for p in glob.glob(os.path.join(directory, "*ckpt_*.npz")):
+        m = _CKPT_RE.fullmatch(os.path.basename(p))
+        if m and (m.group(1) or "") == namespace:
+            out.append((int(m.group(2)), p))
     return sorted(out)
 
 
@@ -187,9 +208,11 @@ class RetentionPolicy:
                 f"RetentionPolicy.keep_last must be >= 1, got "
                 f"{self.keep_last}")
 
-    def apply(self, directory: str) -> list[str]:
-        """Prune beyond keep_last; returns the removed paths."""
-        ckpts = list_checkpoints(directory)
+    def apply(self, directory: str, namespace: str = "") -> list[str]:
+        """Prune beyond keep_last; returns the removed paths. Only
+        files in `namespace` are counted or removed — coexisting
+        stores in a shared directory never prune each other."""
+        ckpts = list_checkpoints(directory, namespace)
         removed = []
         for _, p in ckpts[:max(0, len(ckpts) - self.keep_last)]:
             os.remove(p)

@@ -320,6 +320,33 @@ class SimulationEngine:
         self._snap_enabled = False
         self.n_snapshot_saves = 0
         self.n_ckpt_flushes = 0
+        # the most recent aligned-ENTRY snapshot of a block that ended
+        # mid-grid (a max_windows cut): (w0, pool) — checkpoint() rolls
+        # a mid-block save back to this boundary so the file always
+        # restores under the run's own window_block
+        self._aligned_snap: Optional[tuple] = None
+        # opt-in export of the per-window blocked Welford PARTIAL
+        # stacks (n, mean, m2) feeding each pooled record — the farm
+        # worker's seam: a coordinator concatenates worker stacks in
+        # global block order and re-runs the same merge_blocks +
+        # finalize, reproducing the single-process records bitwise
+        self._export_partials = False
+        self._block_partials: list = []
+        # grouped analogue (per-window (V, G, n_obs) masked partial
+        # stacks): the reference grouped fold merges per-(block, group)
+        # partials — zero partials included — so worker-local FINALIZED
+        # rows are NOT bit-identical to it; the coordinator must embed
+        # worker partial stacks into the global (V, G) layout and rerun
+        # the same merge
+        self._grouped_partials: list = []
+        self._gp_fn = None  # lazily-jitted blocked_grouped_welford
+        # farm worker seam: (v_total, v0, g_total, g0) — when set, the
+        # grouped fold runs over the GLOBAL zero-extended (V, G) stack
+        # (zero partials are exact terms in the Sigma-form merge), so a
+        # worker's per-point stats — the steering policy's inputs —
+        # carry the single-process reference bits even with one local
+        # block, where merge_blocks would otherwise short-circuit
+        self._stats_layout: Optional[tuple] = None
         # block-level wall attribution: (w0, n_win, dispatch_s,
         # collect_s) per collected unit — dispatch_s is enqueue wall
         # (async, excludes device compute), collect_s is blocking ring
@@ -400,6 +427,18 @@ class SimulationEngine:
                 raise ValueError(
                     "Steering.tau_switch only applies to "
                     "method='tau_leap' runs")
+            if (isinstance(cfg.pipeline_depth, int)
+                    and cfg.pipeline_depth > 1):
+                raise ValueError(
+                    "steering is incompatible with an explicit "
+                    f"pipeline_depth={cfg.pipeline_depth}: decisions "
+                    "must see block k before block k+1 dispatches "
+                    "(lock-step). Use pipeline_depth=1 or 'auto' "
+                    "(which resolves to 1 under steering)")
+            # steered runs are lock-step BY CONSTRUCTION: resolve
+            # "auto" to 1 here (no probe) so the forcing is visible in
+            # pipeline_depth_effective rather than silent in run_block
+            self._depth = 1
             self._steer = SteeringPolicy(
                 steering, cfg.n_instances,
                 n_points=(self._n_groups or 1),
@@ -452,6 +491,46 @@ class SimulationEngine:
                     reduction.merge_blocks(stack_fn(obs, gids)))
 
             self._grouped_fn = grouped_fn
+        if self._stats_layout is not None:
+            # farm worker: embed the local (V_loc, G_loc) partial stack
+            # into the global layout at (v0, g0), run the reference
+            # Sigma-form fold (the zero rows force past merge_blocks'
+            # V == 1 shortcut and contribute exact-zero terms), then
+            # slice this shard's rows back out — bit-identical to the
+            # single-process grouped stats the steering thresholds saw
+            v_tot, v0, g_tot, g0 = self._stats_layout
+            g_loc = self._n_groups
+            layout_stack_fn = jax.jit(partial(
+                reduction.blocked_grouped_welford,
+                n_groups=g_loc, n_blocks=self._stats_blocks))
+
+            def grouped_global_fn(obs, gids):
+                local = layout_stack_fn(obs, gids)
+
+                def embed(leaf):
+                    full = jnp.zeros(
+                        (v_tot, g_tot) + leaf.shape[2:], leaf.dtype)
+                    return full.at[v0:v0 + leaf.shape[0],
+                                   g0:g0 + g_loc].set(leaf)
+
+                st = reduction.finalize(reduction.merge_blocks(
+                    reduction.Welford(*(embed(l) for l in local))))
+                return reduction.Stats(
+                    *(l[g0:g0 + g_loc] for l in st))
+
+            self._grouped_fn = grouped_global_fn
+
+    def set_global_stats_layout(self, v_total: int, v0: int,
+                                g_total: int, g0: int) -> None:
+        """Farm worker seam: declare where this shard's stat blocks and
+        groups sit in the GLOBAL (V, G) layout so grouped per-point
+        stats are computed through the zero-extended reference fold
+        (see set_groups). Must run before the first window."""
+        assert self._window == 0, "layout must be set before running"
+        self._stats_layout = (int(v_total), int(v0),
+                              int(g_total), int(g0))
+        if self._group_ids is not None:
+            self.set_groups(self._group_ids)
 
     # ------------------------------------------------------------------
     def _make_chunk_loop(self):
@@ -541,6 +620,37 @@ class SimulationEngine:
         (resolve_auto_depth)."""
         return self._depth if self._depth is not None else 1
 
+    @property
+    def pipeline_depth_effective(self) -> int:
+        """The depth the collector actually runs at. Steering forces
+        lock-step (depth 1) regardless of the requested depth; this is
+        the visible record of that forcing (Telemetry,
+        recovery_report)."""
+        return 1 if self._steer is not None else self.pipeline_depth
+
+    def enable_block_partials(self) -> None:
+        """Opt in to exporting the per-window blocked Welford PARTIALS
+        (n, mean, m2 per stat block) alongside each pooled record. The
+        multi-process farm worker needs them: its local records cover
+        only its own instance rows, so the coordinator re-merges the
+        partial stacks of all workers (in global block order) with the
+        same merge_blocks + finalize fold to reproduce the
+        single-process records bitwise. They ride the existing combined
+        pull and the engine checkpoint (bp_* keys)."""
+        self._export_partials = True
+
+    def _grouped_partials_fn(self):
+        """Jitted per-(block, group) masked partial stack over THIS
+        engine's instance rows — exported so the farm coordinator can
+        embed it into the global (V, G) partial layout and rerun the
+        reference grouped merge bitwise."""
+        if self._gp_fn is None:
+            self._gp_fn = jax.jit(partial(
+                reduction.blocked_grouped_welford,
+                n_groups=self._n_groups,
+                n_blocks=self._stats_blocks))
+        return self._gp_fn
+
     def enable_snapshots(self) -> None:
         """Opt in to ring-snapshot checkpointing: every subsequent
         block dispatch first copies the pool (the dispatch donates its
@@ -593,6 +703,11 @@ class SimulationEngine:
         if self._sketch is not None:
             sk_dev = (res.sketch if res.sketch is not None
                       else self._sketch_eval()(obs))
+        bw_dev = (reduction.blocked_welford(obs, self._stats_blocks)
+                  if self._export_partials else None)
+        gp_dev = (self._grouped_partials_fn()(obs, self._group_ids_dev)
+                  if self._export_partials and self._group_ids is not None
+                  else None)
         # ONE combined blocking pull per window, AFTER the timer (so
         # window_wall_times stays an async-dispatch measure on every
         # path): record stats + per-method step/leap telemetry + (on
@@ -607,7 +722,13 @@ class SimulationEngine:
                else {"truncated": res.truncated}),
             **({} if sk_dev is None else {"sk_hist": sk_dev[0]}),
             **({} if sk_dev is None or sk_dev[1] is None
-               else {"sk_rare": sk_dev[1]})))
+               else {"sk_rare": sk_dev[1]}),
+            **({} if bw_dev is None
+               else {"bw_n": bw_dev.n, "bw_mean": bw_dev.mean,
+                     "bw_m2": bw_dev.m2}),
+            **({} if gp_dev is None
+               else {"gp_n": gp_dev.n, "gp_mean": gp_dev.mean,
+                     "gp_m2": gp_dev.m2})))
         self.n_host_syncs += 1
         if bool(pulled.get("truncated", False)):
             # a silently partial window must never become a record
@@ -630,6 +751,16 @@ class SimulationEngine:
                 hist=np.asarray(pulled["sk_hist"]),
                 rare=(np.asarray(pulled["sk_rare"])
                       if "sk_rare" in pulled else None)))
+        if bw_dev is not None:
+            self._block_partials.append(reduction.Welford(
+                n=np.asarray(pulled["bw_n"]),
+                mean=np.asarray(pulled["bw_mean"]),
+                m2=np.asarray(pulled["bw_m2"])))
+        if gp_dev is not None:
+            self._grouped_partials.append(reduction.Welford(
+                n=np.asarray(pulled["gp_n"]),
+                mean=np.asarray(pulled["gp_mean"]),
+                m2=np.asarray(pulled["gp_m2"])))
         if cfg.schema in ("i", "ii") or self._record_trajectories:
             self._samples.append(np.asarray(obs))
             self.n_host_syncs += 1
@@ -772,6 +903,19 @@ class SimulationEngine:
                 pull["sk_hist"] = [p[0] for p in per]
                 if per and per[0][1] is not None:
                     pull["sk_rare"] = [p[1] for p in per]
+        if self._export_partials:
+            bw = [reduction.blocked_welford(res.obs[w], self._stats_blocks)
+                  for w in range(n_win)]
+            pull["bw_n"] = [b.n for b in bw]
+            pull["bw_mean"] = [b.mean for b in bw]
+            pull["bw_m2"] = [b.m2 for b in bw]
+            if self._group_ids is not None:
+                gp = [self._grouped_partials_fn()(
+                    res.obs[w], self._group_ids_dev)
+                    for w in range(n_win)]
+                pull["gp_n"] = [g.n for g in gp]
+                pull["gp_mean"] = [g.mean for g in gp]
+                pull["gp_m2"] = [g.m2 for g in gp]
         if res.truncated is not None:
             pull["truncated"] = res.truncated
         if cfg.schema in ("i", "ii") or self._record_trajectories:
@@ -809,6 +953,14 @@ class SimulationEngine:
         ent = self._pending.popleft()
         w0, n_win, pull = ent.w0, ent.n_win, ent.pull
         dispatch_wall, obs_row_bytes = ent.dispatch_wall, ent.obs_row_bytes
+        if (ent.snapshot is not None and cfg.window_block > 1
+                and w0 % cfg.window_block == 0
+                and (w0 + n_win) % cfg.window_block):
+            # this block was cut short (a max_windows dispatch limit):
+            # keep its aligned ENTRY snapshot so a later checkpoint()
+            # at the mid-block frontier can serve a boundary-aligned
+            # save instead of a file restore() would reject
+            self._aligned_snap = (w0, ent.snapshot)
         t0 = time.perf_counter()
         pulled = jax.device_get(pull)
         self.n_host_syncs += 1
@@ -859,6 +1011,16 @@ class SimulationEngine:
                     hist=np.asarray(pulled["sk_hist"][w]),
                     rare=(np.asarray(pulled["sk_rare"][w])
                           if "sk_rare" in pulled else None)))
+            if "bw_n" in pulled:
+                self._block_partials.append(reduction.Welford(
+                    n=np.asarray(pulled["bw_n"][w]),
+                    mean=np.asarray(pulled["bw_mean"][w]),
+                    m2=np.asarray(pulled["bw_m2"][w])))
+            if "gp_n" in pulled:
+                self._grouped_partials.append(reduction.Welford(
+                    n=np.asarray(pulled["gp_n"][w]),
+                    mean=np.asarray(pulled["gp_mean"][w]),
+                    m2=np.asarray(pulled["gp_m2"][w])))
             if "steps_delta" in pulled:
                 # per-window EMA updates in window order — the cost
                 # state at every block boundary matches the per-window
@@ -1051,8 +1213,17 @@ class SimulationEngine:
         pipeline and later blocks keep computing underneath it.
         Without snapshots (or with nothing in flight) saving flushes
         first, as before: every in-flight block is collected so the
-        saved pool and the saved records agree on one boundary."""
+        saved pool and the saved records agree on one boundary.
+
+        A `max_windows` cut landing MID-block (frontier not on a
+        window_block boundary) rolls the save back to the cut block's
+        aligned ENTRY snapshot (kept by _collect_block): the file then
+        sits on a block boundary and always restores under the run's
+        own window_block, and the save still never flushes
+        (ckpt_flushes stays 0 for mid-block cuts too). Histories are
+        truncated to the rolled-back window; resume re-runs the tail."""
         p = None
+        win = self._window
         if self._pending:
             snap = self._pending[0].snapshot
             if snap is not None:
@@ -1066,8 +1237,15 @@ class SimulationEngine:
         if p is None:
             self.flush()
             p = self._pool
+            win = self._window
+            wb = self.cfg.window_block
+            if wb > 1 and win % wb and win != len(self.grid):
+                aligned = getattr(self, "_aligned_snap", None)
+                if aligned is not None and aligned[0] == win - win % wb:
+                    win, p = aligned
+                    self.n_snapshot_saves += 1
         extra = {}
-        recs = self.stream.records()
+        recs = [r for r in self.stream.records() if r.window < win]
         if recs:
             extra = dict(
                 rec_t=np.asarray([r.t for r in recs], np.float64),
@@ -1076,18 +1254,28 @@ class SimulationEngine:
                 rec_var=np.stack([r.var for r in recs]),
                 rec_ci90=np.stack([r.ci90 for r in recs]),
                 rec_n=np.asarray([r.n for r in recs], np.float64))
-        if self._samples:
-            extra["samples"] = np.stack(self._samples, axis=1)
-        if self._grouped:
+        if self._samples[:win]:
+            extra["samples"] = np.stack(self._samples[:win], axis=1)
+        if self._grouped[:win]:
             for name in ("n", "mean", "var", "ci90"):
                 extra[f"grouped_{name}"] = np.stack(
-                    [getattr(g, name) for g in self._grouped])
-        if self._sketches:
+                    [getattr(g, name) for g in self._grouped[:win]])
+        if self._sketches[:win]:
             extra["sketch_hist"] = np.stack(
-                [s.hist for s in self._sketches])
+                [s.hist for s in self._sketches[:win]])
             if self._sketches[0].rare is not None:
                 extra["sketch_rare"] = np.stack(
-                    [s.rare for s in self._sketches])
+                    [s.rare for s in self._sketches[:win]])
+        if self._block_partials[:win]:
+            for name in ("n", "mean", "m2"):
+                extra[f"bp_{name}"] = np.stack(
+                    [getattr(b, name)
+                     for b in self._block_partials[:win]])
+        if self._grouped_partials[:win]:
+            for name in ("n", "mean", "m2"):
+                extra[f"gpp_{name}"] = np.stack(
+                    [getattr(b, name)
+                     for b in self._grouped_partials[:win]])
         if self._group_ids is not None:
             # steering reallocation rewrites the lane->point map, so it
             # is run state, not just construction input
@@ -1104,7 +1292,7 @@ class SimulationEngine:
             ctr_hi=np.asarray(p.ctr_hi),
             steps=np.asarray(p.steps), leaps=np.asarray(p.leaps),
             dead=np.asarray(p.dead), no_leap=np.asarray(p.no_leap),
-            window=self._window,
+            window=win,
             cost=self.scheduler._cost, rates=self.rates, **extra))
 
     def restore(self, path: str) -> None:
@@ -1131,6 +1319,7 @@ class SimulationEngine:
                 f"(or a divisor of {saved_window}), or re-save the "
                 "checkpoint at a multiple of window_block")
         self._pending.clear()  # in-flight rings predate the restore
+        self._aligned_snap = None
         self._cost_dev = None  # reseed the in-scan carry from `cost`
         # reshard-on-restore: checkpoints hold the gathered global pool
         # (mesh-shape-agnostic); the current dispatch re-places it on
@@ -1209,6 +1398,20 @@ class SimulationEngine:
                 for w in range(len(sh))]
         else:
             self._sketches = []
+        if "bp_n" in z:
+            self._block_partials = [
+                reduction.Welford(n=z["bp_n"][w], mean=z["bp_mean"][w],
+                                  m2=z["bp_m2"][w])
+                for w in range(len(z["bp_n"]))]
+        else:
+            self._block_partials = []
+        if "gpp_n" in z:
+            self._grouped_partials = [
+                reduction.Welford(n=z["gpp_n"][w], mean=z["gpp_mean"][w],
+                                  m2=z["gpp_m2"][w])
+                for w in range(len(z["gpp_n"]))]
+        else:
+            self._grouped_partials = []
 
     @property
     def peak_buffered_bytes(self) -> int:

@@ -133,6 +133,20 @@ def main() -> None:
                     "keeps a fallback behind a corrupt newest file")
     ap.add_argument("--max-restarts", type=int, default=8,
                     help="recoveries before the run is declared dead")
+    ap.add_argument("--workers", type=int, default=1, metavar="N",
+                    help="multi-process elastic farm (needs "
+                    "--recover-dir): shard the ensemble over N worker "
+                    "processes under a coordinator that heartbeat-"
+                    "supervises, restarts, and — past the restart "
+                    "budget — reassigns dead workers' shards; results "
+                    "merge bitwise vs the single-process run")
+    ap.add_argument("--heartbeat-s", type=float, default=2.0,
+                    help="farm worker heartbeat interval; stale for "
+                    "3x this = stalled worker (killed + restarted)")
+    ap.add_argument("--max-worker-restarts", type=int, default=2,
+                    help="per-worker restart budget; past it the "
+                    "worker is retired and its shard reassigned to a "
+                    "survivor")
     ap.add_argument("--redispatch-stragglers", action="store_true",
                     help="escalate watchdog breaches into a supervised "
                     "re-dispatch of the offending block (one retry per "
@@ -234,7 +248,12 @@ def main() -> None:
             ckpt_dir=args.recover_dir, cadence=args.ckpt_every,
             keep_last=args.keep_last, max_restarts=args.max_restarts,
             redispatch_stragglers=args.redispatch_stragglers,
+            workers=args.workers, heartbeat_s=args.heartbeat_s,
+            max_worker_restarts=args.max_worker_restarts,
             inject=plan))
+    elif args.workers > 1:
+        raise SystemExit("--workers needs --recover-dir (the farm's "
+                         "shared checkpoint directory)")
 
     if args.out:
         from repro.api.run import observable_names
@@ -303,7 +322,19 @@ def main() -> None:
         for d in rep["decisions"]:
             print(f"  w{d['window']}: {d}")
     rec = result.recovery_report()
-    if rec is not None:
+    if rec is not None and "workers" in rec:  # farm coordinator report
+        print(f"farm: {rec['workers']} workers, {rec['restarts']} "
+              f"worker restart(s), {rec['reassignments']} shard "
+              f"reassignment(s), faults={rec['faults_by_kind'] or '{}'}")
+        for w, pw in rec["per_worker"].items():
+            tag = " RETIRED" if pw["retired"] else ""
+            print(f"  worker {w}: {pw['restarts']} restart(s), shards "
+                  f"{pw['shards_run']}{tag}")
+        for ev in rec["events"]:
+            if ev["event"] in ("fault_injected", "fault",
+                               "worker_retired", "shard_reassigned"):
+                print(f"  {ev}")
+    elif rec is not None:
         print(f"recovery: {rec['restarts']} restart(s), faults="
               f"{rec['faults_by_kind'] or '{}'}"
               + (f", degraded to {rec['final_n_shards']} shard(s)"

@@ -60,6 +60,32 @@ class EngineStall(RecoverableError):
     kind = "stall"
 
 
+class HostLost(RecoverableError):
+    """A worker PROCESS died (exit, SIGKILL, missing result bundle, or
+    a missed-heartbeat timeout with the process gone): the coordinator
+    restarts it from its newest valid namespaced checkpoint, and past
+    `max_worker_restarts` reassigns the shard to a survivor."""
+
+    kind = "host_lost"
+
+    def __init__(self, message: str, window: int = -1, worker: int = -1):
+        super().__init__(message, window)
+        self.worker = worker
+
+
+class WorkerStall(RecoverableError):
+    """A worker process is alive but its heartbeat went stale past the
+    timeout (SIGSTOP, livelock, swap death): the coordinator kills and
+    restarts it — same recovery path as HostLost, different telemetry
+    tag so drills can tell dead from wedged."""
+
+    kind = "worker_stall"
+
+    def __init__(self, message: str, window: int = -1, worker: int = -1):
+        super().__init__(message, window)
+        self.worker = worker
+
+
 class InvariantViolation(RecoverableError):
     """An engine invariant guard tripped (non-finite statistics,
     negative populations, ring/record disagreement): the in-memory
@@ -80,7 +106,13 @@ class InvariantViolation(RecoverableError):
 #   stall        watchdog-grade stall; re-dispatch = restore + replay
 #   nan_pool     poison the lane pool; the engine's own invariant
 #                guard must detect it (tests the guard, not the plan)
-FAULT_KINDS = ("crash", "device_lost", "ckpt_corrupt", "stall", "nan_pool")
+#   host_lost    SIGKILL a worker PROCESS (coordinator-level farms
+#                only); restart from its namespaced checkpoint store
+#   worker_stall SIGSTOP a worker process past the heartbeat timeout;
+#                the coordinator must detect the stale heartbeat,
+#                kill, and restart
+FAULT_KINDS = ("crash", "device_lost", "ckpt_corrupt", "stall", "nan_pool",
+               "host_lost", "worker_stall")
 
 
 @dataclass

@@ -62,3 +62,43 @@ class WindowWatchdog:
 
     def straggler_rate(self) -> float:
         return len(self.flagged) / self.observed if self.observed else 0.0
+
+
+@dataclass
+class FrontierWatchdog:
+    """Coordinator-level per-worker progress monitor (multi-process
+    farm). Each heartbeat reports a worker's collected window frontier;
+    a worker whose frontier trails the median of the currently-running
+    workers by >= `grace_windows` is flagged as a frontier straggler.
+
+    This is telemetry, not a kill switch: liveness is the heartbeat
+    TIMEOUT's job (a stalled worker stops writing heartbeats and gets
+    killed + restarted); the frontier watchdog catches the slow-but-
+    alive case — a worker making progress at a fraction of the farm's
+    pace — and surfaces it in `recovery_report()` so operators see the
+    skew before it becomes the ensemble's critical path."""
+
+    grace_windows: int = 4
+    frontiers: dict = field(default_factory=dict)    # worker -> window
+    flagged: list = field(default_factory=list)      # (worker, win, med)
+    observed: int = 0
+
+    def observe(self, worker: int, window: int) -> bool:
+        """Record worker's frontier; True if it now lags the median."""
+        prev = self.frontiers.get(worker, -1)
+        self.frontiers[worker] = max(prev, int(window))
+        self.observed += 1
+        if len(self.frontiers) < 2:
+            return False
+        med = float(np.median(list(self.frontiers.values())))
+        if med - self.frontiers[worker] >= self.grace_windows:
+            self.flagged.append((worker, self.frontiers[worker], med))
+            return True
+        return False
+
+    def forget(self, worker: int) -> None:
+        """Drop a retired/finished worker from the median pool."""
+        self.frontiers.pop(worker, None)
+
+    def straggler_rate(self) -> float:
+        return len(self.flagged) / self.observed if self.observed else 0.0

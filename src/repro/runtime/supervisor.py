@@ -76,6 +76,24 @@ class Recovery:
     window).
     inject: deterministic fault drill plan (runtime.fault.FailurePlan);
     None in production.
+
+    MULTI-PROCESS FARM (workers > 1, DESIGN.md §3i): the run is driven
+    by a coordinator PROCESS (runtime.coordinator.FarmCoordinator)
+    that shards the ensemble across `workers` worker processes, each
+    running its own RunSupervisor over its shard with namespaced
+    checkpoints in the shared ckpt_dir.
+    workers: worker process count (1 = in-process supervisor, the
+    single-process path above).
+    heartbeat_s: worker heartbeat write interval; a worker whose
+    heartbeat goes stale for 3 x heartbeat_s is declared stalled
+    (killed + restarted), a dead process is HostLost.
+    max_worker_restarts: per-worker restart budget; past it the worker
+    is retired and its shard is reassigned to a survivor (elastic
+    host-loss degradation). Restarting from the shard's own namespaced
+    checkpoints keeps records bitwise.
+    namespace: this supervisor's checkpoint namespace inside ckpt_dir
+    ("" = un-namespaced). Set by the farm worker runner; coexisting
+    namespaces never list/prune/restore each other's files.
     """
 
     ckpt_dir: str = "recovery"
@@ -87,6 +105,10 @@ class Recovery:
     elastic: bool = True
     redispatch_stragglers: bool = False
     inject: Optional[FailurePlan] = None
+    workers: int = 1
+    heartbeat_s: float = 2.0
+    max_worker_restarts: int = 2
+    namespace: str = ""
 
     def validate(self) -> None:
         if not self.ckpt_dir:
@@ -108,6 +130,18 @@ class Recovery:
             raise ValueError(
                 "Recovery.inject must be a runtime.fault.FailurePlan, "
                 f"got {type(self.inject).__name__}")
+        if self.workers < 1:
+            raise ValueError(
+                f"Recovery.workers must be >= 1, got {self.workers}")
+        if self.heartbeat_s <= 0:
+            raise ValueError(
+                f"Recovery.heartbeat_s must be > 0, got "
+                f"{self.heartbeat_s}")
+        if self.max_worker_restarts < 0:
+            raise ValueError(
+                f"Recovery.max_worker_restarts must be >= 0, got "
+                f"{self.max_worker_restarts}")
+        ckpt_store.checkpoint_name(0, self.namespace)  # charset check
 
 
 class RunSupervisor:
@@ -136,6 +170,9 @@ class RunSupervisor:
         # to a multiple of window_block
         wb = max(1, experiment.window_block)
         self._cadence = ((max(recovery.cadence, wb) + wb - 1) // wb) * wb
+        # frontier of the newest durable checkpoint (for heartbeats)
+        self._ckpt_frontier = -1
+        self._depth_effective = 1
 
     # ------------------------------------------------------------- api
     def run(self):
@@ -149,6 +186,7 @@ class RunSupervisor:
             self._restore_newest_valid(engine)
             try:
                 self._drive(engine)
+                self._depth_effective = engine.pipeline_depth_effective
                 break
             except RecoverableError as e:
                 self._handle_fault(e)
@@ -179,6 +217,7 @@ class RunSupervisor:
             "faults_by_kind": kinds,
             "final_n_shards": (self._part.n_shards
                                if self._part is not None else None),
+            "pipeline_depth_effective": self._depth_effective,
             "events": list(self._events),
         }
 
@@ -198,7 +237,8 @@ class RunSupervisor:
         past corrupt/truncated files; a fresh window-0 start if none
         survive."""
         for w, path in reversed(
-                ckpt_store.list_checkpoints(self.recovery.ckpt_dir)):
+                ckpt_store.list_checkpoints(self.recovery.ckpt_dir,
+                                            self.recovery.namespace)):
             try:
                 engine.restore(path)
             except ckpt_store.CheckpointCorrupt as e:
@@ -220,7 +260,7 @@ class RunSupervisor:
             # full depth through every save (steered runs are lock-step
             # anyway — snapshots would be dead weight there)
             engine.enable_snapshots()
-        if not ckpt_store.list_checkpoints(rec.ckpt_dir):
+        if not ckpt_store.list_checkpoints(rec.ckpt_dir, rec.namespace):
             self._save(engine)  # window-0 anchor: a crash before the
             #                     first cadence save still restores
         while engine._window < n:
@@ -238,16 +278,24 @@ class RunSupervisor:
             # every save boundary exactly — no flush needed to hit it
             if engine._window >= next_save:
                 self._save(engine)
+            self._progress(engine)
 
     def _save(self, engine) -> None:
         rec = self.recovery
-        path = os.path.join(rec.ckpt_dir,
-                            ckpt_store.checkpoint_name(engine._window))
+        path = os.path.join(
+            rec.ckpt_dir,
+            ckpt_store.checkpoint_name(engine._window, rec.namespace))
         engine.checkpoint(path)
         pruned = ckpt_store.RetentionPolicy(rec.keep_last).apply(
-            rec.ckpt_dir)
+            rec.ckpt_dir, rec.namespace)
+        self._ckpt_frontier = engine._window
         self._log("checkpoint", window=engine._window, path=path,
                   pruned=len(pruned))
+
+    def _progress(self, engine) -> None:
+        """Per-iteration progress hook: a no-op here; the farm worker
+        overrides it to feed the heartbeat writer (window frontier,
+        checkpoint frontier, straggler rate)."""
 
     def _handle_fault(self, e: RecoverableError) -> None:
         rec = self.recovery
@@ -335,7 +383,8 @@ class RunSupervisor:
                 self._poison_pool(engine)
 
     def _corrupt_newest(self) -> None:
-        cks = ckpt_store.list_checkpoints(self.recovery.ckpt_dir)
+        cks = ckpt_store.list_checkpoints(self.recovery.ckpt_dir,
+                                          self.recovery.namespace)
         if not cks:
             return
         path = cks[-1][1]

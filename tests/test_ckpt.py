@@ -65,3 +65,71 @@ def test_elastic_restore_with_shardings(tmp_path):
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     r = store.restore(t, str(tmp_path), 2, shardings=sh)
     assert r["a"].sharding == NamedSharding(mesh, P())
+
+
+# ------------------------------------------- namespaced coexistence
+# Farm workers share ONE ckpt_dir; each worker's store is keyed by a
+# `<namespace>__` filename prefix. The coexistence contract: listing,
+# retention, and corruption reporting each see ONLY their own files.
+def _save_ckpt(tmp_path, window, namespace=""):
+    path = os.path.join(str(tmp_path),
+                        store.checkpoint_name(window, namespace))
+    return store.save_atomic(path, {"window": np.int64(window),
+                                    "x": np.arange(4.0)})
+
+
+def test_namespaced_stores_coexist_in_one_dir(tmp_path):
+    for w in (0, 2, 4):
+        _save_ckpt(tmp_path, w, "shard00")
+    for w in (0, 2):
+        _save_ckpt(tmp_path, w, "shard01")
+    _save_ckpt(tmp_path, 6)  # legacy un-namespaced store
+    assert [w for w, _ in store.list_checkpoints(
+        str(tmp_path), "shard00")] == [0, 2, 4]
+    assert [w for w, _ in store.list_checkpoints(
+        str(tmp_path), "shard01")] == [0, 2]
+    # the un-namespaced store never sees namespaced files
+    assert [w for w, _ in store.list_checkpoints(str(tmp_path))] == [6]
+
+
+def test_retention_prunes_only_its_own_namespace(tmp_path):
+    for w in (0, 2, 4, 6):
+        _save_ckpt(tmp_path, w, "shard00")
+        _save_ckpt(tmp_path, w, "shard01")
+    removed = store.RetentionPolicy(keep_last=2).apply(
+        str(tmp_path), "shard00")
+    assert len(removed) == 2
+    assert all("shard00__" in os.path.basename(p) for p in removed)
+    assert [w for w, _ in store.list_checkpoints(
+        str(tmp_path), "shard00")] == [4, 6]
+    # the sibling namespace is untouched
+    assert [w for w, _ in store.list_checkpoints(
+        str(tmp_path), "shard01")] == [0, 2, 4, 6]
+
+
+def test_listing_ignores_foreign_and_partial_files(tmp_path):
+    _save_ckpt(tmp_path, 2, "shard00")
+    # interrupted atomic save leftover + unrelated farm artifacts
+    for name in ("shard00__ckpt_4.npz.tmp.1234", "notackpt_3.npz",
+                 "shard00__result.npz", "hb_shard00.json"):
+        with open(os.path.join(str(tmp_path), name), "wb") as f:
+            f.write(b"partial")
+    assert [w for w, _ in store.list_checkpoints(
+        str(tmp_path), "shard00")] == [2]
+    assert store.list_checkpoints(str(tmp_path)) == []
+
+
+def test_corrupt_checkpoint_error_names_owner(tmp_path):
+    """A truncated worker checkpoint raises CheckpointCorrupt whose
+    message carries the namespaced path — operators can tell WHOSE
+    file died in a dir shared by the whole farm."""
+    path = _save_ckpt(tmp_path, 2, "shard01")
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(store.CheckpointCorrupt, match="shard01__"):
+        store.verify(path)
+
+
+def test_namespace_rejects_underscores(tmp_path):
+    with pytest.raises(ValueError, match="namespace"):
+        store.list_checkpoints(str(tmp_path), "bad_name")

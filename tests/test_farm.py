@@ -1,0 +1,257 @@
+"""Multi-process elastic ensemble farm drills (DESIGN.md §3i).
+
+The contract under test: a farm of `Recovery.workers` worker PROCESSES
+— each a RunSupervisor over one contiguous ensemble shard, supervised
+by a coordinator through heartbeat files — produces a SimulationResult
+whose records, per-point stats, trajectories, sketches, AND steering
+decision log are BITWISE identical to the uninterrupted single-process
+run with the same pinned statistics partition
+(`Partitioning(n_shards=1, stat_blocks=B)`), no matter which workers
+are SIGKILLed, SIGSTOPped, fed corrupt checkpoints, or retired and
+reassigned along the way.
+
+Worker lanes draw RNG key rows from the GLOBAL key table
+(counter-based streams are position-independent) and grouped/pooled
+statistics merge through the same associative Welford partial fold the
+single-process engine uses — so equality is exact, not approximate.
+
+Process drills are timing-dependent in WHERE a fault lands (a kill
+scheduled at window w fires at the first heartbeat whose frontier
+crossed w) but the merged result is timing-INDEPENDENT — which is the
+point. Fault/restart counters therefore assert `>= 1` (a slow CI
+machine can add a spurious-stall restart without breaking bitwiseness)
+while the data assertions stay exact.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Ensemble,
+    Experiment,
+    ExperimentError,
+    Recovery,
+    Reduction,
+    Schedule,
+    SketchSpec,
+    Steering,
+    simulate,
+)
+from repro.api.spec import Partitioning
+from repro.core.reactions import make_system
+from repro.runtime.fault import FailurePlan
+from repro.runtime.straggler import FrontierWatchdog
+
+# immigration-death sweep (X ~ Poisson, analytically mixed variance):
+# high-lam points converge under the steering tolerance and stop early,
+# low-lam points never do — so the drills exercise live steering
+# decisions, not just pass-through statistics
+LAMS = [50.0, 800.0, 50.0, 800.0, 50.0, 800.0]
+REPLICAS, N_WINDOWS, WORKERS = 4, 12, 3
+
+
+def _system():
+    return make_system(
+        ["A"], [({}, {"A": 1}, LAMS[0]), ({"A": 1}, {}, 1.0)],
+        {"A": 0}, names=("birth", "death"))
+
+
+def _exp(**kw):
+    return Experiment(
+        model=_system(),
+        ensemble=Ensemble.make(replicas=REPLICAS,
+                               sweep={"birth": LAMS}),
+        schedule=Schedule(t_end=12.0, n_windows=N_WINDOWS),
+        reduction=Reduction.PER_POINT,
+        n_lanes=8, seed=5, window_block=2,
+        steering=Steering(ci_rel_tol=0.03, min_windows=4),
+        sketch=SketchSpec(n_bins=8),
+        record_trajectories=True, **kw)
+
+
+def _farm(tmp_path, schedule=None, **rec_kw):
+    rec_kw.setdefault("workers", WORKERS)
+    rec_kw.setdefault("heartbeat_s", 1.0)
+    rec_kw.setdefault("cadence", 4)
+    rec_kw.setdefault("keep_last", 3)
+    rec_kw.setdefault("backoff_base_s", 0.0)
+    inject = (FailurePlan(schedule=schedule)
+              if schedule is not None else None)
+    return simulate(_exp(recovery=Recovery(
+        ckpt_dir=str(tmp_path / "farm"), inject=inject, **rec_kw)))
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """The uninterrupted single-process run every drill compares
+    against — statistics partition pinned to the farm's block count."""
+    return simulate(_exp(partitioning=Partitioning(
+        n_shards=1, stat_blocks=WORKERS)))
+
+
+def assert_farm_bitwise(ref, farm, ctx=""):
+    assert len(ref.records) == len(farm.records), ctx
+    for ra, rb in zip(ref.records, farm.records):
+        assert ra.t == rb.t and ra.window == rb.window, ctx
+        assert ra.n == rb.n, ctx
+        assert (ra.mean == rb.mean).all(), ctx
+        assert (ra.var == rb.var).all(), ctx
+        assert (ra.ci90 == rb.ci90).all(), ctx
+    ga, gb = ref.per_point(), farm.per_point()
+    for f in ("n", "mean", "var", "ci90"):
+        assert (np.asarray(ga[f]) == np.asarray(gb[f])).all(), (ctx, f)
+    assert (np.asarray(ref.trajectories())
+            == np.asarray(farm.trajectories())).all(), ctx
+    assert (ref.final_state() == farm.final_state()).all(), ctx
+    for sa, sb in zip(ref.sketches(), farm.sketches()):
+        assert (np.asarray(sa.hist) == np.asarray(sb.hist)).all(), ctx
+    assert ref.steering_report() == farm.steering_report(), ctx
+
+
+def _events(report, name):
+    return [e for e in report["events"] if e["event"] == name]
+
+
+# --------------------------------------------------------- fault-free
+def test_farm_fault_free_is_bitwise(reference, tmp_path):
+    farm = _farm(tmp_path)
+    assert_farm_bitwise(reference, farm)
+    rep = farm.recovery_report()
+    assert rep["workers"] == WORKERS
+    assert rep["restarts"] == 0 and rep["faults_by_kind"] == {}
+    assert rep["reassignments"] == 0
+    assert len(_events(rep, "worker_launched")) == WORKERS
+    assert len(_events(rep, "worker_done")) == WORKERS
+    # steering forces lock-step in every worker, and that's VISIBLE
+    assert rep["pipeline_depth_effective"] == 1
+    assert sorted(rep["worker_reports"]) == list(range(WORKERS))
+    # the farm actually steered: converged points stopped early
+    assert farm.steering_report()["stopped_points"] == [1, 3, 5]
+
+
+# ------------------------------------------------------------- drills
+def test_farm_sigkill_drill_restarts_and_stays_bitwise(
+        reference, tmp_path):
+    """SIGKILL a worker mid-run: the coordinator sees the dead process
+    (HostLost), restarts it after backoff, and the relaunched worker
+    resumes from its newest namespaced checkpoint — merged result
+    bitwise, event log enumerating the whole story."""
+    farm = _farm(tmp_path, schedule={2: "host_lost"})
+    assert_farm_bitwise(reference, farm, "sigkill")
+    rep = farm.recovery_report()
+    assert rep["restarts"] >= 1
+    assert rep["faults_by_kind"].get("host_lost", 0) >= 1
+    inj = _events(rep, "fault_injected")
+    assert inj and inj[0]["kind"] == "host_lost"
+    assert _events(rep, "fault") and _events(rep, "restart_scheduled")
+    # every shard still finished
+    assert len(_events(rep, "worker_done")) >= WORKERS
+
+
+def test_farm_sigstop_stall_drill(reference, tmp_path):
+    """SIGSTOP freezes a worker AND its heartbeat thread; the stale
+    heartbeat crosses 3 x heartbeat_s, the coordinator SIGKILLs the
+    wedged process (typed worker_stall) and restarts it."""
+    farm = _farm(tmp_path, schedule={2: "worker_stall"})
+    assert_farm_bitwise(reference, farm, "sigstop")
+    rep = farm.recovery_report()
+    assert rep["restarts"] >= 1
+    assert rep["faults_by_kind"].get("worker_stall", 0) >= 1
+    stalls = [e for e in _events(rep, "fault")
+              if e["kind"] == "worker_stall"]
+    assert stalls and "stale" in stalls[0]["error"]
+
+
+def test_farm_corrupt_checkpoint_drill(reference, tmp_path):
+    """Kill a worker AND truncate its newest checkpoint: the restarted
+    worker's restore must fall back PAST the corrupt file (or to a
+    fresh window-0 start) and still replay to the bitwise answer."""
+    farm = _farm(tmp_path, schedule={3: "ckpt_corrupt"}, cadence=2)
+    assert_farm_bitwise(reference, farm, "corrupt")
+    rep = farm.recovery_report()
+    assert rep["restarts"] >= 1
+    inj = _events(rep, "fault_injected")
+    assert inj and inj[0]["kind"] == "ckpt_corrupt"
+    # the injected shard's final (successful) supervisor run logged
+    # the corrupt file it skipped on restore
+    shard = inj[0]["shard"]
+    skipped = [e for e in rep["worker_reports"][shard]["events"]
+               if e["event"] == "corrupt_checkpoint_skipped"]
+    assert skipped, rep["worker_reports"][shard]["events"]
+
+
+def test_farm_host_loss_reassigns_shard_to_survivor(
+        reference, tmp_path):
+    """Past max_worker_restarts the slot is RETIRED and its shard goes
+    back on the queue; the first survivor that finishes its own shard
+    picks it up — same namespace, so the reassigned run resumes from
+    the retired worker's checkpoints and the merge stays bitwise."""
+    farm = _farm(tmp_path, schedule={2: "host_lost"},
+                 max_worker_restarts=0, heartbeat_s=2.0)
+    assert_farm_bitwise(reference, farm, "reassign")
+    rep = farm.recovery_report()
+    assert rep["reassignments"] >= 1
+    assert any(w["retired"] for w in rep["per_worker"].values())
+    retired = _events(rep, "worker_retired")
+    moved = _events(rep, "shard_reassigned")
+    assert retired and moved
+    # the reassigned shard landed on a DIFFERENT slot than its owner
+    assert moved[0]["to_worker"] != moved[0]["from_worker"]
+    # the picking-up slot ran more than one shard
+    assert any(len(w["shards_run"]) > 1
+               for w in rep["per_worker"].values())
+
+
+# ------------------------------------------------- validation + units
+def test_farm_rejects_device_sharding_inside_workers(tmp_path):
+    with pytest.raises(ExperimentError, match="PROCESS"):
+        simulate(_exp(
+            partitioning=Partitioning(n_shards=2),
+            recovery=Recovery(ckpt_dir=str(tmp_path / "x"), workers=3)))
+
+
+def test_farm_rejects_ragged_block_partition(tmp_path):
+    with pytest.raises(ExperimentError, match="whole stat blocks"):
+        simulate(_exp(
+            partitioning=Partitioning(n_shards=1, stat_blocks=4),
+            recovery=Recovery(ckpt_dir=str(tmp_path / "x"), workers=3)))
+
+
+def test_farm_rejects_cross_point_reallocation(tmp_path):
+    exp = _exp(recovery=Recovery(ckpt_dir=str(tmp_path / "x"),
+                                 workers=3))
+    exp = exp.with_(steering=Steering(ci_rel_tol=0.03, min_windows=4,
+                                      reallocate=True))
+    with pytest.raises(ExperimentError, match="reallocate"):
+        simulate(exp)
+
+
+def test_farm_rejects_pooled_convergence_steering(tmp_path):
+    exp = _exp(recovery=Recovery(ckpt_dir=str(tmp_path / "x"),
+                                 workers=3))
+    exp = exp.with_(reduction=Reduction.ENSEMBLE)
+    with pytest.raises(ExperimentError, match="per-point"):
+        simulate(exp)
+
+
+def test_farm_rejects_engine_internal_fault_kinds(tmp_path):
+    """nan_pool / device_lost are ENGINE faults — they drill the
+    in-process supervisor, not the process farm."""
+    with pytest.raises(ValueError, match="coordinator"):
+        _farm(tmp_path, schedule={2: "nan_pool"})
+
+
+def test_frontier_watchdog_flags_laggard():
+    wd = FrontierWatchdog(grace_windows=4)
+    wd.observe(0, 8)
+    wd.observe(1, 8)
+    assert not wd.observe(2, 8)
+    assert wd.observe(2, 4) is False  # frontier is monotone: keeps 8
+    wd.frontiers[2] = 4               # force a lag for the check
+    assert wd.observe(2, 4)           # 8 - 4 >= grace -> flagged
+    assert wd.flagged and wd.flagged[0][0] == 2
+    rate = wd.straggler_rate()
+    assert 0 < rate <= 1
+    wd.forget(2)
+    assert 2 not in wd.frontiers

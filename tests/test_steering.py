@@ -10,6 +10,7 @@ import pytest
 from repro.api import (
     Ensemble,
     Experiment,
+    ExperimentError,
     Method,
     Reduction,
     Schedule,
@@ -215,3 +216,26 @@ def test_steered_crash_recovery_replays_decisions_bitwise(tmp_path):
     assert drill_recs == _rec_tuple(clean)
     for a, b in zip(eng.sketches(), clean.sketches()):
         assert (a.hist == b.hist).all()
+
+
+# ------------------------------------- pipeline-depth forcing (§3e)
+def test_steering_forces_pipeline_depth_auto_to_one():
+    """Steered runs are lock-step BY CONSTRUCTION: decisions must see
+    block k before block k+1 dispatches. pipeline_depth='auto' under
+    steering resolves to 1 without probing, and the forcing is VISIBLE
+    in telemetry rather than silent."""
+    res = simulate(_exp(steering=_STOP, pipeline_depth="auto"))
+    assert res.telemetry.pipeline_depth_effective == 1
+    assert res.telemetry.pipeline_depth == 1
+    # the same run unsteered probes freely (effective >= 1, and the
+    # configured value stays "auto" -> reported as the resolved depth)
+    free = simulate(_exp(pipeline_depth="auto"))
+    assert free.telemetry.pipeline_depth_effective >= 1
+
+
+def test_steering_rejects_explicit_deep_pipeline():
+    """An EXPLICIT pipeline_depth > 1 with steering is a contradiction
+    the user must resolve, not a silent override — the error names
+    both knobs."""
+    with pytest.raises(ExperimentError, match="pipeline_depth"):
+        simulate(_exp(steering=_STOP, pipeline_depth=2))

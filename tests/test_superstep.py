@@ -360,6 +360,23 @@ def test_max_windows_can_cut_a_block_short_and_realign():
     assert_bitwise(clean, r)
 
 
+def test_mid_block_cut_checkpoint_rolls_back_to_block_boundary():
+    """A checkpoint at a mid-block max_windows cut (frontier 6 under
+    wb=4) is served from the cut block's aligned ENTRY snapshot: the
+    file lands on window 4 — restorable under the run's own
+    window_block — without ever flushing the pipeline, and the resumed
+    run replays the tail bitwise."""
+    ck = os.path.join(tempfile.mkdtemp(), "ck")
+    clean = simulate(make_exp(4))
+    cut = simulate(make_exp(4), max_windows=6, checkpoint_path=ck)
+    assert cut.windows_run == 6
+    assert cut.telemetry.ckpt_flushes == 0
+    z = np.load(ck + ".npz")
+    assert int(z["window"]) == 4  # rolled back to the block boundary
+    resumed = simulate(make_exp(4), checkpoint_path=ck, resume=True)
+    assert_records_bitwise(clean, resumed)
+
+
 # ------------------------------------------------------- error paths
 def test_truncation_raises_naming_the_failing_window():
     from repro.kernels.ops import FusedWindowTruncated
